@@ -1,0 +1,83 @@
+"""Figs 10–11: ALBIC vs COLA on the §5.3 synthetic workload.
+
+Fig 10: 40 nodes / 800 kgs / 20 ops, maxMigrations = 20, max obtainable
+collocation swept 0–100%.  Fig 11: collocation fixed at 50%, three cluster
+sizes.  Per solve, 20% of nodes drift ±2% (paper setting)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, drift_loads, synthetic_cluster
+from repro.core import AlbicParams, albic
+from repro.core.baselines import cola_allocate
+
+
+def episode(state, method: str, iters: int, seed: int):
+    rng = np.random.default_rng(seed)
+    lds, cols, migs = [], [], []
+    for i in range(iters):
+        drift_loads(state, 2.0, rng)
+        if method == "albic":
+            res = albic(
+                state,
+                max_migrations=20,
+                params=AlbicParams(max_ld=10.0, time_limit=2.0, seed=seed + i),
+            )
+            plan = res.plan
+        else:
+            plan = cola_allocate(state, seed=seed + i)
+        state = state.copy()
+        state.alloc = plan.alloc
+        lds.append(state.load_distance())
+        cols.append(state.collocation_factor())
+        migs.append(plan.num_migrations)
+    return np.mean(lds[1:]), cols[-1], np.mean(migs[1:])
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    iters = 3 if quick else 4
+    # Fig 10: sweep max obtainable collocation.
+    sweep = [0, 50, 100] if quick else [0, 25, 50, 100]
+    nodes, kgs, ops = (20, 400, 10) if quick else (40, 800, 20)
+    for pct in sweep:
+        for method in ("albic", "cola"):
+            state = synthetic_cluster(nodes, kgs, ops, one_to_one_pct=pct, seed=4)
+            t0 = time.perf_counter()
+            ld, col, mig = episode(state, method, iters, seed=pct)
+            dt = (time.perf_counter() - t0) / iters
+            rows.append(
+                csv_row(
+                    f"albic_vs_cola/fig10/colloc{pct}/{method}",
+                    dt * 1e6,
+                    f"ld={ld:.2f};collocation={col:.1f};migrations={mig:.0f}",
+                )
+            )
+    # Fig 11: three cluster configurations at 50% collocation.
+    configs = [(20, 400, 10)] if quick else [(20, 400, 10), (40, 800, 20), (60, 1200, 30)]
+    for n, g, o in configs:
+        for method in ("albic", "cola"):
+            state = synthetic_cluster(n, g, o, one_to_one_pct=50, seed=5)
+            t0 = time.perf_counter()
+            ld, col, mig = episode(state, method, iters, seed=n)
+            dt = (time.perf_counter() - t0) / iters
+            rows.append(
+                csv_row(
+                    f"albic_vs_cola/fig11/{n}n_{g}kg/{method}",
+                    dt * 1e6,
+                    f"ld={ld:.2f};collocation={col:.1f};migrations={mig:.0f}",
+                )
+            )
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Shared benchmark scaffolding: the paper's §5.1 synthetic cluster generator
+and small reporting helpers."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.stats import ClusterState
+
+
+def synthetic_cluster(
+    num_nodes: int,
+    num_keygroups: int,
+    num_ops: int,
+    *,
+    varies: float = 20.0,
+    one_to_one_pct: float = 0.0,
+    seed: int = 0,
+) -> ClusterState:
+    """Paper §5.1: even allocation; each key group at mean ± 5%; then 20% of
+    the nodes get ±varies/2 load adjustments.  §5.3 adds x% 1-1 pairs."""
+    rng = np.random.default_rng(seed)
+    kg_per_op = num_keygroups // num_ops
+    kg_op = np.repeat(np.arange(num_ops), kg_per_op)
+    alloc = np.arange(num_keygroups) % num_nodes
+
+    mean_load = 60.0 / (num_keygroups / num_nodes)  # ~60% node utilization
+    load = mean_load * rng.uniform(0.95, 1.05, num_keygroups)
+
+    # Adjust 20% of nodes by ±varies/2 via their key groups.
+    n_adj = max(int(0.2 * num_nodes), 2)
+    adjusted = rng.choice(num_nodes, size=n_adj, replace=False)
+    for i, node in enumerate(adjusted):
+        sign = +1.0 if i < n_adj // 2 else -1.0
+        kgs = np.where(alloc == node)[0]
+        load[kgs] *= 1.0 + sign * (varies / 2.0) / 100.0 * num_keygroups / num_nodes / (
+            num_keygroups / num_nodes
+        )
+
+    out = np.zeros((num_keygroups, num_keygroups))
+    n11 = int(kg_per_op * one_to_one_pct / 100.0)
+    for op in range(num_ops - 1):
+        base, nxt = op * kg_per_op, (op + 1) * kg_per_op
+        for i in range(n11):
+            out[base + i, nxt + i] = rng.uniform(5, 15)
+        for i in range(n11, kg_per_op):
+            out[base + i, nxt : nxt + kg_per_op] = rng.uniform(0.02, 0.08, kg_per_op)
+    downstream = {i: [i + 1] for i in range(num_ops - 1)}
+    downstream[num_ops - 1] = []
+    return ClusterState.create(
+        num_nodes,
+        kg_op,
+        load,
+        alloc,
+        kg_state_bytes=rng.uniform(1, 10, num_keygroups),
+        out_rates=out,
+        downstream=downstream,
+    )
+
+
+def drift_loads(state: ClusterState, pct: float, rng: np.random.Generator) -> None:
+    """§5.3: adjust the load of 20% of nodes by ±pct% between solves."""
+    nodes = rng.choice(state.num_nodes, size=max(state.num_nodes // 5, 1), replace=False)
+    for node in nodes:
+        kgs = np.where(state.alloc == node)[0]
+        state.kg_load[kgs] *= 1.0 + rng.uniform(-pct, pct) / 100.0
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,104 @@
+"""Fig 5: integrated vs non-integrated scale-in (1OL / 5OL).
+
+Largest §5.1 cluster; 10 nodes marked for removal; maxMigrations = 20.  The
+integrated MILP prioritizes urgent rebalancing against draining inside one
+program; the non-integrated baseline first drains B round-robin (budget
+permitting), then balances what is left.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, synthetic_cluster
+from repro.core import solve_allocation
+
+BUDGET = 20
+
+
+def overload(state, n_nodes: int) -> None:
+    """Set n nodes to 100% load (the paper's 1OL / 5OL settings)."""
+    for node in range(2, 2 + n_nodes):
+        kgs = np.where(state.alloc == node)[0]
+        state.kg_load[kgs] *= 100.0 / max(state.node_loads()[node], 1e-9)
+
+
+def run_integrated(state, rounds: int):
+    ld_path, drained_at = [], None
+    for r in range(rounds):
+        plan = solve_allocation(state, max_migrations=BUDGET, time_limit=3.0)
+        state = state.copy()
+        state.alloc = plan.alloc
+        ld_path.append(state.load_distance())
+        if drained_at is None and not np.isin(state.alloc, state.nodes_b).any():
+            drained_at = r + 1
+    return ld_path, drained_at
+
+
+def run_non_integrated(state, rounds: int):
+    """Drain-first baseline: move B's key groups round-robin, then balance."""
+    ld_path, drained_at = [], None
+    for r in range(rounds):
+        state = state.copy()
+        b_nodes = set(state.nodes_b.tolist())
+        moves = 0
+        targets = list(state.nodes_a)
+        ti = 0
+        for kg in np.where(np.isin(state.alloc, list(b_nodes)))[0]:
+            if moves >= BUDGET:
+                break
+            state.alloc[kg] = targets[ti % len(targets)]
+            ti += 1
+            moves += 1
+        if moves < BUDGET:  # leftover budget → independent balancing
+            plan = solve_allocation(
+                state, max_migrations=BUDGET - moves, time_limit=3.0
+            )
+            state.alloc = plan.alloc
+        ld_path.append(state.load_distance())
+        if drained_at is None and not np.isin(state.alloc, list(b_nodes)).any():
+            drained_at = r + 1
+    return ld_path, drained_at
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    nodes, kgs, ops = (40, 800, 20) if quick else (60, 1200, 30)
+    rounds = 8 if quick else 14
+    marked = 5 if quick else 10
+    for n_ol, tag in [(1, "1OL"), (5, "5OL")]:
+        state = synthetic_cluster(nodes, kgs, ops, seed=2)
+        overload(state, n_ol)
+        state.kill[-marked:] = True  # mark nodes for removal
+        t0 = time.perf_counter()
+        ld_i, drain_i = run_integrated(state.copy(), rounds)
+        t_int = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ld_n, drain_n = run_non_integrated(state.copy(), rounds)
+        t_non = time.perf_counter() - t0
+        rows.append(
+            csv_row(
+                f"integrated_scaling/{tag}/integrated",
+                t_int / rounds * 1e6,
+                f"ld_path={['%.1f' % x for x in ld_i]};drained_round={drain_i}",
+            )
+        )
+        rows.append(
+            csv_row(
+                f"integrated_scaling/{tag}/non_integrated",
+                t_non / rounds * 1e6,
+                f"ld_path={['%.1f' % x for x in ld_n]};drained_round={drain_n}",
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Figs 6–7: load distance + #migrations over time — MILP vs Flux vs PoTC on
+Real Job 1 (wiki stream, GeoHash→TopK→GlobalTopK), maxMigrations = 13."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import AdaptationFramework
+from repro.core.baselines import PotcSimulator, flux_rebalance
+from repro.core.migration import execute_plan, plan_from_allocations
+from repro.data import real_job_1, wiki_edit_stream
+from repro.data.synthetic import StreamSpec
+from repro.engine import Controller, ControllerConfig, Engine
+
+MAX_MIGR = 13
+
+
+def build(kgs: int, nodes: int, seed: int) -> tuple[Engine, callable]:
+    # Node utilization in the paper's EC2 range (~40–70%): the MILP's
+    # ceil(mean) target (paper Table 2) is only meaningful when loads are
+    # O(10s) of percent, not O(1) — at trivial utilization the ceil bias
+    # dominates the load distance.
+    topo = real_job_1(keygroups_per_op=kgs)
+    eng = Engine(topo, nodes, ser_cost=0.3, service_rate=nodes * 90.0, seed=seed)
+    stream = wiki_edit_stream(StreamSpec(rate=350.0, fluctuation=0.4, seed=seed))
+
+    def feeder(engine, tick):
+        k, v, ts = next(stream)
+        engine.push_source("wiki", k, v, ts)
+
+    return eng, feeder
+
+
+def run_milp(kgs, nodes, periods, ticks):
+    eng, feeder = build(kgs, nodes, seed=1)
+    ctl = Controller(
+        eng,
+        AdaptationFramework(mode="milp", max_migrations=MAX_MIGR, time_limit=2.0),
+        ControllerConfig(ticks_per_period=ticks),
+        feeder=feeder,
+    )
+    lds, migs = [], []
+    for _ in range(periods):
+        m = ctl.period()
+        lds.append(m.load_distance)
+        migs.append(m.num_migrations)
+    return lds, migs
+
+
+def run_flux(kgs, nodes, periods, ticks):
+    eng, feeder = build(kgs, nodes, seed=1)
+    lds, migs = [], []
+    for p in range(periods):
+        for t in range(ticks):
+            feeder(eng, t)
+            eng.tick()
+        snap = eng.end_period()
+        if p >= 1:
+            plan = flux_rebalance(snap, max_migrations=MAX_MIGR)
+            mp = plan_from_allocations(snap, plan.alloc)
+            execute_plan(mp, eng)
+            migs.append(mp.num_migrations)
+        else:
+            migs.append(0)
+        lds.append(snap.load_distance(eng.router.table))
+    return lds, migs
+
+
+def run_potc(kgs, nodes, periods, ticks):
+    eng, feeder = build(kgs, nodes, seed=1)
+    sim = None
+    lds = []
+    for p in range(periods):
+        for t in range(ticks):
+            feeder(eng, t)
+            eng.tick()
+        snap = eng.end_period()
+        if sim is None:
+            sim = PotcSimulator(snap)
+        _, ld = sim.step(snap.kg_load)
+        lds.append(ld)
+    return lds, [0] * periods  # PoTC migrates no state; it splits it
+
+
+def run(quick: bool = False) -> list[str]:
+    kgs, nodes = (50, 10) if quick else (100, 20)
+    periods, ticks = (5, 8) if quick else (7, 10)
+    rows = []
+    for name, fn in (("milp", run_milp), ("flux", run_flux), ("potc", run_potc)):
+        t0 = time.perf_counter()
+        lds, migs = fn(kgs, nodes, periods, ticks)
+        dt = (time.perf_counter() - t0) / periods
+        tail = lds[2:]
+        rows.append(
+            csv_row(
+                f"milp_vs_flux_potc/{name}",
+                dt * 1e6,
+                f"avg_ld={np.mean(tail):.2f};max_ld={np.max(tail):.2f};"
+                f"migrations_per_spl={np.mean(migs[2:]):.1f}",
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Figs 12–14: Real Jobs 2–4 on the live engine — ALBIC vs COLA timelines of
+collocation factor, load distance, load index and migrations."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import AdaptationFramework, AlbicParams
+from repro.core.migration import execute_plan, plan_from_allocations
+from repro.core.baselines import cola_allocate
+from repro.data import airline_stream, real_job_2, real_job_3, real_job_4
+from repro.data.synthetic import StreamSpec, weather_stream
+from repro.engine import Controller, ControllerConfig, Engine
+
+JOBS = {
+    "job2_fig12": (real_job_2, ("airline",)),
+    "job3_fig13": (real_job_3, ("airline",)),
+    "job4_fig14": (real_job_4, ("airline", "weather")),
+}
+
+
+def build(job_key: str, kgs: int, nodes: int, seed: int):
+    job_fn, sources = JOBS[job_key]
+    topo = job_fn(keygroups_per_op=kgs)
+    g = topo.num_keygroups
+    # Anti-collocated initial allocation (paper: minimal initial collocation).
+    alloc = np.zeros(g, dtype=np.int64)
+    for op in range(topo.num_operators):
+        base = topo.kg_base(op)
+        n_op = topo.operators[op].num_keygroups
+        alloc[base : base + n_op] = (np.arange(n_op) + op * (nodes // 2 + 1)) % nodes
+    eng = Engine(topo, nodes, initial_alloc=alloc, ser_cost=0.6, service_rate=3000.0, seed=seed)
+    air = airline_stream(StreamSpec(rate=220.0, seed=seed))
+    wx = weather_stream(StreamSpec(rate=80.0, seed=seed))
+
+    def feeder(engine, tick):
+        k, v, ts = next(air)
+        engine.push_source("airline", k, v, ts)
+        if "weather" in sources:
+            k, v, ts = next(wx)
+            engine.push_source("weather", k, v, ts)
+
+    return eng, feeder
+
+
+def run_albic(job_key, kgs, nodes, periods, ticks):
+    eng, feeder = build(job_key, kgs, nodes, seed=2)
+    ctl = Controller(
+        eng,
+        AdaptationFramework(
+            mode="albic",
+            max_migrations=10,
+            albic_params=AlbicParams(max_ld=15.0, time_limit=1.5),
+        ),
+        ControllerConfig(ticks_per_period=ticks),
+        feeder=feeder,
+    )
+    for _ in range(periods):
+        m = ctl.period()
+    h = ctl.history
+    return {
+        "collocation": m.collocation_factor,
+        "avg_ld": float(np.mean([x.load_distance for x in h[1:]])),
+        "load_index": m.load_index,
+        "migrations_per_spl": float(np.mean([x.num_migrations for x in h[1:]])),
+    }
+
+
+def run_cola(job_key, kgs, nodes, periods, ticks):
+    eng, feeder = build(job_key, kgs, nodes, seed=2)
+    load_index_base = None
+    metrics = {}
+    for p in range(periods):
+        for t in range(ticks):
+            feeder(eng, t)
+            eng.tick()
+        snap = eng.end_period()
+        sys_load = snap.system_load(eng.router.table)
+        if load_index_base is None and p >= 1:
+            load_index_base = max(sys_load, 1e-9)
+        if p >= 1:
+            plan = cola_allocate(snap, seed=p)
+            mp = plan_from_allocations(snap, plan.alloc)
+            execute_plan(mp, eng)
+            metrics = {
+                "collocation": snap.collocation_factor(eng.router.table),
+                "avg_ld": snap.load_distance(eng.router.table),
+                "load_index": 100.0 * sys_load / load_index_base,
+                "migrations_per_spl": mp.num_migrations,
+            }
+    return metrics
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    kgs, nodes = (16, 4) if quick else (30, 8)
+    periods, ticks = (5, 8) if quick else (8, 10)
+    jobs = ["job2_fig12"] if quick else list(JOBS)
+    for job_key in jobs:
+        for method, fn in (("albic", run_albic), ("cola", run_cola)):
+            t0 = time.perf_counter()
+            m = fn(job_key, kgs, nodes, periods, ticks)
+            dt = (time.perf_counter() - t0) / periods
+            rows.append(
+                csv_row(
+                    f"real_jobs/{job_key}/{method}",
+                    dt * 1e6,
+                    ";".join(
+                        f"{k}={v:.1f}" for k, v in m.items()
+                    ),
+                )
+            )
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

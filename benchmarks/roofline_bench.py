@@ -1,0 +1,59 @@
+"""Roofline table: reads the dry-run results (experiments/dryrun_results.json)
+and emits one row per (arch × shape × mesh) with the three terms, the
+dominant bottleneck, and the useful-FLOPs ratio."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_row
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "experiments/dryrun_results.json")
+
+
+def run(quick: bool = False) -> list[str]:  # noqa: ARG001 - table read, no quick mode
+    if not os.path.exists(RESULTS):
+        return [csv_row("roofline/missing", 0.0, f"no {RESULTS}; run repro.launch.dryrun")]
+    with open(RESULTS) as f:
+        rows_in = json.load(f)
+    rows = []
+    for r in rows_in:
+        if r.get("status") == "skip":
+            rows.append(
+                csv_row(
+                    f"roofline/{r['arch']}/{r['shape']}/-",
+                    0.0,
+                    f"SKIP:{r.get('reason','')[:60]}",
+                )
+            )
+            continue
+        if r.get("status") != "ok":
+            rows.append(
+                csv_row(
+                    f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh','?')}",
+                    0.0,
+                    f"FAIL:{r.get('error','')[:60]}",
+                )
+            )
+            continue
+        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append(
+            csv_row(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                bound_s * 1e6,  # the roofline-bound step time
+                f"dominant={r['dominant']};compute={r['compute_s']:.3f}s;"
+                f"memory={r['memory_s']:.3f}s;collective={r['collective_s']:.3f}s;"
+                f"useful={r['useful_ratio']:.2f}",
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks problem
+sizes for CI-style runs; the full run reproduces the paper's configurations.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+MODULES = [
+    "solver_perf",          # Figs 2–4
+    "integrated_scaling",   # Fig 5
+    "milp_vs_flux_potc",    # Figs 6–7
+    "unrestricted",         # Figs 8–9
+    "albic_vs_cola",        # Figs 10–11
+    "real_jobs",            # Figs 12–14
+    "roofline_bench",       # dry-run roofline table (this build)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes")
+    ap.add_argument("--only", default=None, help="comma-separated module names")
+    args = ap.parse_args()
+
+    names = args.only.split(",") if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            for row in mod.run(quick=args.quick):
+                print(row, flush=True)
+        except Exception as e:  # keep the harness going; record the failure
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{str(e)[:120]}", flush=True)
+        print(
+            f"# {name} finished in {time.perf_counter()-t0:.1f}s",
+            file=sys.stderr,
+            flush=True,
+        )
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Figs 2–4: MILP solve time vs solution quality, three cluster sizes,
+compared against Flux at equal migration budgets."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, synthetic_cluster
+from repro.core import solve_allocation
+from repro.core.baselines import flux_rebalance
+
+CONFIGS = [
+    ("fig2_20n_400kg", 20, 400, 10),
+    ("fig3_40n_800kg", 40, 800, 20),
+    ("fig4_60n_1200kg", 60, 1200, 30),
+]
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    configs = CONFIGS[:2] if quick else CONFIGS
+    budgets = [20] if quick else [10, 20]
+    time_limits = [2.0] if quick else [1.0, 4.0]
+    for name, nodes, kgs, ops in configs:
+        for varies in ([20.0] if quick else [10.0, 20.0]):
+            state = synthetic_cluster(nodes, kgs, ops, varies=varies, seed=1)
+            base_ld = state.load_distance()
+            for budget in budgets:
+                flux = flux_rebalance(state, max_migrations=budget)
+                for tl in time_limits:
+                    t0 = time.perf_counter()
+                    plan = solve_allocation(
+                        state, max_migrations=budget, time_limit=tl
+                    )
+                    dt = time.perf_counter() - t0
+                    rows.append(
+                        csv_row(
+                            f"solver_perf/{name}/v{varies:.0f}/m{budget}/t{tl:.0f}s",
+                            dt * 1e6,
+                            f"milp_ld={plan.load_distance:.2f};flux_ld={flux.load_distance:.2f};"
+                            f"base_ld={base_ld:.2f};status={plan.status}",
+                        )
+                    )
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

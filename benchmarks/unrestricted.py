@@ -1,0 +1,56 @@
+"""Figs 8–9: load-balance quality vs overhead as the migration budget varies
+(10 / 13 / 20 / unrestricted), on the Real-Job-1 engine workload."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from benchmarks.milp_vs_flux_potc import build
+from repro.core import AdaptationFramework
+from repro.engine import Controller, ControllerConfig
+
+
+def run(quick: bool = False) -> list[str]:
+    budgets = [10, None] if quick else [10, 13, 20, None]
+    periods, ticks = (4, 8) if quick else (7, 12)
+    rows = []
+    for budget in budgets:
+        eng, feeder = build(50 if quick else 100, 10 if quick else 20, seed=3)
+        ctl = Controller(
+            eng,
+            AdaptationFramework(
+                mode="milp",
+                max_migrations=budget,
+                time_limit=2.0,
+            ),
+            ControllerConfig(ticks_per_period=ticks),
+            feeder=feeder,
+        )
+        t0 = time.perf_counter()
+        for _ in range(periods):
+            m = ctl.period()
+        dt = (time.perf_counter() - t0) / periods
+        h = ctl.history[1:]
+        rows.append(
+            csv_row(
+                f"unrestricted/m{'inf' if budget is None else budget}",
+                dt * 1e6,
+                f"avg_ld={np.mean([x.load_distance for x in h]):.2f};"
+                f"max_ld={np.max([x.load_distance for x in h]):.2f};"
+                f"total_migrations={sum(x.num_migrations for x in h)};"
+                f"pause_s={sum(x.migration_pause_s for x in h):.3f}",
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

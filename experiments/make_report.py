@@ -1,0 +1,58 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run/§Roofline tables from the JSONs."""
+
+import json
+import sys
+
+ROOF = "experiments/dryrun_results.json"
+PERF = "experiments/perf_iterations.json"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.1f}"
+
+
+def roofline_table() -> str:
+    rows = json.load(open(ROOF))
+    ok = sorted(
+        (r for r in rows if r.get("status") == "ok"),
+        key=lambda r: (r["arch"], r["shape"], r["mesh"]),
+    )
+    skip = [r for r in rows if r.get("status") == "skip"]
+    out = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | dominant | MODEL/HLO | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in ok:
+        peak = (r.get("memory_analysis") or {}).get("peak_bytes")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {fmt_bytes(peak)} |"
+        )
+    out.append("")
+    out.append(f"Skipped cells ({len(skip)}):")
+    for r in skip:
+        out.append(f"- `{r['arch']} × {r['shape']}` — {r['reason']}")
+    return "\n".join(out)
+
+
+def perf_table() -> str:
+    rows = json.load(open(PERF))
+    out = [
+        "| cell | variant | compute (s) | memory (s) | collective (s) | dominant | useful | note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']}×{r['shape']}×{r['mesh']} | {r['variant']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} | {r.get('note','')[:70]} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    print(roofline_table() if which == "roofline" else perf_table())

@@ -1,0 +1,9 @@
+"""Fault-tolerance substrate: atomic, manifest-versioned, async checkpoints."""
+
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    load_pytree,
+    save_pytree,
+)
+
+__all__ = ["CheckpointManager", "load_pytree", "save_pytree"]

@@ -1,0 +1,158 @@
+"""Checkpoint/restart for training and the streaming engine.
+
+Design (scaled-down from what a 1000-node deployment needs, same invariants):
+
+* **Atomicity** — a checkpoint directory is staged under ``.tmp-<step>`` and
+  ``os.rename``d into place; the ``MANIFEST.json`` is written last inside the
+  stage, so a directory with a manifest is complete by construction.
+* **Versioned retention** — ``keep`` newest checkpoints are retained; garbage
+  is pruned after a successful commit, never before.
+* **Async** — ``save_async`` snapshots the (host) arrays synchronously
+  (cheap: device→host copy) and writes in a background thread, keeping the
+  training loop off the disk path.
+* **Self-describing** — arrays go into an ``.npz``; the pytree structure and
+  non-array leaves are pickled alongside; the manifest records step, wall
+  time and user metadata (data-pipeline cursor, engine routing table, RNG).
+
+On a real multi-host deployment each host writes its own shard of the
+jax.Array pieces (`addressable_shards`) under the same manifest — the layout
+here is the single-host specialization of that.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+MANIFEST = "MANIFEST.json"
+
+
+def _encode(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """npz-safe encoding: custom dtypes (bfloat16 etc.) stored as raw views."""
+    dt = str(arr.dtype)
+    if arr.dtype.kind == "V" or dt in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        width = {"bfloat16": np.uint16}.get(dt, np.uint8)
+        return arr.view(width), dt
+    return arr, dt
+
+
+def _decode(arr: np.ndarray, dt: str) -> np.ndarray:
+    if str(arr.dtype) == dt:
+        return arr
+    import ml_dtypes
+
+    return arr.view(np.dtype(getattr(ml_dtypes, dt)))
+
+
+def _flatten(tree: Any) -> tuple[list[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(x) for x in leaves], treedef
+
+
+def save_pytree(path: str, tree: Any, *, metadata: Optional[dict] = None) -> None:
+    """Synchronous atomic save of one pytree to a checkpoint directory."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    stage = path + ".tmp"
+    if os.path.exists(stage):
+        shutil.rmtree(stage)
+    os.makedirs(stage)
+    leaves, treedef = _flatten(tree)
+    encoded = [_encode(x) for x in leaves]
+    np.savez(os.path.join(stage, "arrays.npz"), *[e[0] for e in encoded])
+    with open(os.path.join(stage, "treedef.pkl"), "wb") as f:
+        pickle.dump((treedef, [e[1] for e in encoded]), f)
+    with open(os.path.join(stage, MANIFEST), "w") as f:
+        json.dump(
+            {
+                "num_leaves": len(leaves),
+                "written_at": time.time(),
+                "metadata": metadata or {},
+            },
+            f,
+        )
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(stage, path)
+
+
+def load_pytree(path: str) -> tuple[Any, dict]:
+    """Load (tree, metadata) from a checkpoint directory."""
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    with open(os.path.join(path, "treedef.pkl"), "rb") as f:
+        treedef, dtypes = pickle.load(f)
+    with np.load(os.path.join(path, "arrays.npz"), allow_pickle=True) as z:
+        leaves = [_decode(z[k], dt) for k, dt in zip(z.files, dtypes)]
+    return jax.tree.unflatten(treedef, leaves), manifest.get("metadata", {})
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with retention and async writing."""
+
+    def __init__(self, directory: str, *, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pending: Optional[threading.Thread] = None
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and os.path.exists(
+                os.path.join(self.directory, name, MANIFEST)
+            ):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    # -- writing --------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, metadata: Optional[dict] = None) -> None:
+        self.wait()
+        save_pytree(self._step_dir(step), tree, metadata={"step": step, **(metadata or {})})
+        self._prune()
+
+    def save_async(self, step: int, tree: Any, *, metadata: Optional[dict] = None) -> None:
+        """Snapshot now (host copy), write in the background."""
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work() -> None:
+            save_pytree(
+                self._step_dir(step), host_tree, metadata={"step": step, **(metadata or {})}
+            )
+            self._prune()
+
+        self._pending = threading.Thread(target=work, daemon=True)
+        self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _prune(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- reading --------------------------------------------------------------
+    def restore(self, step: Optional[int] = None) -> tuple[Any, dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        return load_pytree(self._step_dir(step))

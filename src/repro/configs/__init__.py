@@ -1,0 +1,27 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeSpec,
+    all_configs,
+    canon,
+    get_config,
+    input_specs,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeSpec",
+    "all_configs",
+    "canon",
+    "get_config",
+    "input_specs",
+    "shape_applicable",
+]

@@ -1,0 +1,51 @@
+"""The paper's primary contribution: integrative dynamic reconfiguration.
+
+Public surface:
+
+* :class:`repro.core.stats.ClusterState` — the shared allocation/statistics
+  snapshot (gLoad, load_i, out(g_i,g_j), kill marks, capacities).
+* :func:`repro.core.milp.solve_allocation` — the Table-2 MILP (load balancing
+  + integrated scale-in) over migration units.
+* :func:`repro.core.albic.albic` — Algorithm 2 (collocation on top of MILP).
+* :class:`repro.core.framework.AdaptationFramework` — Algorithm 1.
+* :mod:`repro.core.baselines` — Flux, PoTC, COLA comparison points.
+"""
+
+from repro.core.albic import AlbicParams, AlbicResult, albic
+from repro.core.framework import AdaptationFramework, AdaptationResult
+from repro.core.migration import (
+    Migration,
+    MigrationPlan,
+    execute_plan,
+    plan_from_allocations,
+)
+from repro.core.milp import AllocationPlan, solve_allocation
+from repro.core.scaling import (
+    LatencyProxyScaler,
+    NullScaler,
+    ScalingDecision,
+    UtilizationScaler,
+    apply_scaling,
+)
+from repro.core.stats import ClusterState, SPLWindow
+
+__all__ = [
+    "AdaptationFramework",
+    "AdaptationResult",
+    "AlbicParams",
+    "AlbicResult",
+    "albic",
+    "AllocationPlan",
+    "ClusterState",
+    "LatencyProxyScaler",
+    "Migration",
+    "MigrationPlan",
+    "NullScaler",
+    "ScalingDecision",
+    "SPLWindow",
+    "UtilizationScaler",
+    "apply_scaling",
+    "execute_plan",
+    "plan_from_allocations",
+    "solve_allocation",
+]

@@ -1,0 +1,7 @@
+"""Baselines the paper compares against: Flux [36], PoTC [29], COLA [21]."""
+
+from repro.core.baselines.cola import cola_allocate
+from repro.core.baselines.flux import flux_rebalance
+from repro.core.baselines.potc import PotcSimulator
+
+__all__ = ["flux_rebalance", "PotcSimulator", "cola_allocate"]

@@ -1,0 +1,264 @@
+"""The paper's Mixed-Integer Linear Program (§4.3.1, Table 2).
+
+    min  w1·d − w2·(d_u + d_l)
+    s.t. (1) ∀ g_k:  Σ_i x[i,k] = 1
+         (2) Σ_{i,k} (1 − q[i,k]) · x[i,k] · mc_k  ≤  maxMigrCost
+         (3) ∀ n_i ∈ N:            Σ_k x[i,k]·gLoad_k ≤ mean + (d − d_u)
+         (4) ∀ n_i ∈ N, kill_i=0:  Σ_k x[i,k]·gLoad_k ≥ mean − (d − d_l)
+         (5) mean − d ≥ 0
+
+with w1 ≫ w2 so d is minimized first and d_u + d_l maximized second.
+
+Generalizations carried from the paper text:
+
+* **Migration units** — ALBIC migrates collocated partitions as indivisible
+  units, so the program is built over *units* (sets of key groups); the pure
+  MILP is the special case of singleton units.
+* **Heterogeneity** — gLoad coefficients are divided by the node capacity
+  (paper §3 / "Extending to Heterogeneous Nodes").
+* **Pin constraints** — ALBIC step 3 pins a unit to a node; implemented by
+  fixing the corresponding binary's bounds.
+* **maxMigrations mode** — for the Flux comparison (§5.2.1) the budget counts
+  migrated key groups instead of migration cost.
+* **Multi-dimensional load** — optional extra per-resource capacity rows
+  ("Extending to Multi-Dimensional Load").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.stats import ClusterState
+from repro.solver.lp import MilpBuilder, solve_milp
+
+# w1 >> w2 per the paper's objective discussion.
+W1_DEFAULT = 1000.0
+W2_DEFAULT = 1.0
+
+
+@dataclasses.dataclass
+class AllocationPlan:
+    """Result of one key-group-allocation solve."""
+
+    alloc: np.ndarray  # (G,) node per key group
+    d: float
+    d_u: float
+    d_l: float
+    objective: float
+    status: str
+    solve_seconds: float
+    load_distance: float
+    migrations: list[tuple[int, int, int]]  # (kg, src_node, dst_node)
+    migration_cost: float
+
+    @property
+    def num_migrations(self) -> int:
+        return len(self.migrations)
+
+
+def _units_or_singletons(
+    num_keygroups: int, units: Optional[Sequence[Sequence[int]]]
+) -> list[np.ndarray]:
+    if units is None:
+        return [np.array([k]) for k in range(num_keygroups)]
+    covered = np.zeros(num_keygroups, dtype=bool)
+    out: list[np.ndarray] = []
+    for u in units:
+        arr = np.asarray(list(u), dtype=np.int64)
+        if covered[arr].any():
+            raise ValueError("units overlap")
+        covered[arr] = True
+        out.append(arr)
+    for k in np.where(~covered)[0]:
+        out.append(np.array([k]))
+    return out
+
+
+def solve_allocation(
+    state: ClusterState,
+    *,
+    max_migr_cost: Optional[float] = None,
+    max_migrations: Optional[int] = None,
+    units: Optional[Sequence[Sequence[int]]] = None,
+    pins: Optional[dict[int, int]] = None,
+    alpha: float = 1.0,
+    w1: float = W1_DEFAULT,
+    w2: float = W2_DEFAULT,
+    time_limit: float = 10.0,
+    extra_resources: Optional[dict[str, tuple[np.ndarray, np.ndarray]]] = None,
+    candidate_limit: Optional[int] = None,
+) -> AllocationPlan:
+    """Build and solve the Table-2 MILP; return the new allocation plan.
+
+    Args:
+      state: current cluster snapshot (q, gLoad, kill, capacities).
+      max_migr_cost: budget on Σ mc_k of migrated key groups (paper default).
+      max_migrations: alternative budget on the *count* of migrated key
+        groups (used for the Flux comparison, §5.2.1).  Exactly one of the two
+        budgets may be set; with neither, rebalancing is unrestricted (§5.2.2).
+      units: indivisible sets of key groups (ALBIC partitions).  Key groups
+        not covered become singleton units.
+      pins: {unit_index_in_`units`: node} collocation constraints (ALBIC
+        step 3).  Indexes into the *expanded* unit list returned by
+        `_units_or_singletons`, i.e. the order of `units` first.
+      alpha: state-size → migration-cost constant (mc_k = α·|σ_k|).
+      extra_resources: optional {name: (kg_usage (G,), node_cap (N,))} rows.
+      candidate_limit: beyond-paper scalability lever — restrict each unit's
+        binaries to {current node} ∪ pins ∪ the k least-loaded A-nodes.  The
+        paper's CPLEX solved the dense 72k-binary instances; HiGHS needs the
+        pruning to hit the same few-second solve times at 60×1200 scale.
+        Auto-enabled above 20k binaries.
+    """
+    if max_migr_cost is not None and max_migrations is not None:
+        raise ValueError("set at most one of max_migr_cost / max_migrations")
+
+    n, g = state.num_nodes, state.num_keygroups
+    unit_list = _units_or_singletons(g, units)
+    nu = len(unit_list)
+    mc = state.migration_costs(alpha)
+    mean = state.mean_load()
+    live = state.alive  # dead nodes take no variables at all
+    pins = pins or {}
+
+    if candidate_limit is None and nu * int(live.sum()) > 20_000:
+        candidate_limit = 8
+
+    b = MilpBuilder()
+    # Continuous deviation variables.  d ≤ mean encodes constraint (5).
+    vd = b.add_var("d", obj=w1, lb=0.0, ub=max(mean, 0.0))
+    vdu = b.add_var("d_u", obj=-w2, lb=0.0)
+    vdl = b.add_var("d_l", obj=-w2, lb=0.0)
+
+    # Assignment binaries x[u, i], only for live nodes (optionally pruned to
+    # per-unit candidate sets).
+    live_nodes = np.where(live)[0]
+    if candidate_limit is not None:
+        loads = state.node_loads()
+        a_sorted = [i for i in np.argsort(loads) if live[i] and not state.kill[i]]
+        base_cands = a_sorted[: max(candidate_limit, 1)]
+    xvar = -np.ones((nu, n), dtype=np.int64)
+    for u in range(nu):
+        if candidate_limit is None:
+            cands = live_nodes
+        else:
+            cset = set(base_cands)
+            for k in unit_list[u]:
+                home = int(state.alloc[k])
+                if live[home]:
+                    cset.add(home)
+            if u in pins:
+                cset.add(int(pins[u]))
+            cands = sorted(cset)
+        for i in cands:
+            xvar[u, i] = b.add_binary(f"x[{u},{int(i)}]")
+
+    for u, node in pins.items():
+        if not live[node]:
+            raise ValueError(f"pin to dead node {node}")
+        for i in live_nodes:
+            idx = xvar[u, i]
+            if idx < 0:
+                continue
+            # Fix bounds: 1 on the pinned node, 0 elsewhere.
+            b._lb[idx] = 1.0 if i == node else 0.0  # noqa: SLF001 - builder-internal fastpath
+            b._ub[idx] = 1.0 if i == node else 0.0  # noqa: SLF001
+
+    # (1) each unit on exactly one node.
+    for u in range(nu):
+        cols = [xvar[u, i] for i in live_nodes if xvar[u, i] >= 0]
+        b.add_row(cols, [1.0] * len(cols), lb=1.0, ub=1.0)
+
+    # (2) migration budget.  Coefficient of x[u,i] is the cost of the members
+    # of u that are not already on node i ((1−q)·mc summed over the unit).
+    if max_migr_cost is not None or max_migrations is not None:
+        cols, vals = [], []
+        for u, members in enumerate(unit_list):
+            cur = state.alloc[members]
+            for i in live_nodes:
+                if xvar[u, i] < 0:
+                    continue
+                moved = cur != i
+                cost = (
+                    float(moved.sum())
+                    if max_migrations is not None
+                    else float(mc[members][moved].sum())
+                )
+                if cost > 0:
+                    cols.append(xvar[u, i])
+                    vals.append(cost)
+        budget = float(max_migrations if max_migrations is not None else max_migr_cost)
+        if cols:
+            b.add_row(cols, vals, ub=budget)
+
+    # (3)/(4) load bounds per node.  Heterogeneity: divide by capacity.
+    unit_load = np.array([state.kg_load[m].sum() for m in unit_list])
+    for i in live_nodes:
+        us = [u for u in range(nu) if xvar[u, i] >= 0]
+        if not us:
+            continue  # pruned node: cannot receive anything, no bound needed
+        cols = [xvar[u, i] for u in us]
+        vals = list(unit_load[us] / state.capacity[i])
+        # (3): Σ load·x − d + d_u ≤ mean   (all live nodes, incl. B)
+        b.add_row(cols + [vd, vdu], vals + [-1.0, 1.0], ub=float(mean))
+        # (4): Σ load·x + d − d_l ≥ mean   (only nodes not marked for removal)
+        if not state.kill[i]:
+            b.add_row(cols + [vd, vdl], vals + [1.0, -1.0], lb=float(mean))
+
+    # Multi-dimensional load extension: cap each extra resource per node.
+    for _name, (usage, caps) in (extra_resources or {}).items():
+        res_unit = np.array([usage[m].sum() for m in unit_list])
+        for i in live_nodes:
+            us = [u for u in range(nu) if xvar[u, i] >= 0]
+            if not us:
+                continue
+            cols = [xvar[u, i] for u in us]
+            b.add_row(cols, list(res_unit[us]), ub=float(caps[i]))
+
+    problem = b.build()
+    # Warm start: keep every unit where its (first member) currently lives.
+    warm = np.zeros(problem.num_vars)
+    warm[0] = mean
+    for u, members in enumerate(unit_list):
+        home = int(state.alloc[members[0]])
+        if live[home] and xvar[u, home] >= 0:
+            warm[xvar[u, home]] = 1.0
+    result = solve_milp(problem, time_limit=time_limit, warm_start=warm)
+
+    if not result.ok:
+        # Infeasible (e.g. budget too tight for pins): fall back to identity.
+        return AllocationPlan(
+            alloc=state.alloc.copy(),
+            d=float("nan"),
+            d_u=0.0,
+            d_l=0.0,
+            objective=float("inf"),
+            status=result.status,
+            solve_seconds=result.solve_seconds,
+            load_distance=state.load_distance(),
+            migrations=[],
+            migration_cost=0.0,
+        )
+
+    x = result.x
+    alloc = state.alloc.copy()
+    for u, members in enumerate(unit_list):
+        scores = np.array([x[xvar[u, i]] if xvar[u, i] >= 0 else -1.0 for i in range(n)])
+        alloc[members] = int(np.argmax(scores))
+
+    moved = np.where(alloc != state.alloc)[0]
+    migrations = [(int(k), int(state.alloc[k]), int(alloc[k])) for k in moved]
+    return AllocationPlan(
+        alloc=alloc,
+        d=float(x[vd]),
+        d_u=float(x[vdu]),
+        d_l=float(x[vdl]),
+        objective=result.objective,
+        status=result.status,
+        solve_seconds=result.solve_seconds,
+        load_distance=state.load_distance(alloc),
+        migrations=migrations,
+        migration_cost=float(mc[moved].sum()),
+    )

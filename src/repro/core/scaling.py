@@ -1,0 +1,139 @@
+"""Horizontal scaling policies (paper §4.2).
+
+The paper deliberately plugs in *existing* scaling estimators ([10, 12]) —
+"developing a novel scaling optimizer is outside the scope".  We do the same:
+:class:`UtilizationScaler` is the standard watermark policy used by Gedik et
+al. [12]; :class:`LatencyProxyScaler` approximates DRS [10] with an M/M/1-style
+latency proxy.  What the paper *does* contribute is the integration contract
+(Algorithm 1): the scaler decides **on the basis of the potential allocation
+plan**, so load that mere re-balancing or collocation would absorb never
+triggers a scale-out, and scale-in is refused when the survivors could not be
+balanced.  That contract is enforced in :mod:`repro.core.framework`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Protocol
+
+import numpy as np
+
+from repro.core.milp import AllocationPlan
+from repro.core.stats import ClusterState
+
+
+@dataclasses.dataclass
+class ScalingDecision:
+    add_nodes: int = 0
+    mark_for_removal: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def scaled(self) -> bool:
+        return self.add_nodes > 0 or bool(self.mark_for_removal)
+
+
+class Scaler(Protocol):
+    def decide(self, state: ClusterState, plan: AllocationPlan) -> ScalingDecision: ...
+
+
+@dataclasses.dataclass
+class UtilizationScaler:
+    """Watermark policy over the *planned* (not current) node loads.
+
+    Scale out when the planned average load exceeds ``high_wm`` (enough nodes
+    to bring it to ``target``); scale in when it sits below ``low_wm`` and the
+    survivors stay under ``target`` — Algorithm 1 re-plans afterwards and will
+    veto the removal if balance under ``maxLD`` is unattainable.
+    """
+
+    high_wm: float = 80.0
+    low_wm: float = 40.0
+    target: float = 60.0
+    max_step: int = 8  # nodes added/removed per adaptation round
+
+    def decide(self, state: ClusterState, plan: AllocationPlan) -> ScalingDecision:
+        a = state.nodes_a
+        if len(a) == 0:
+            return ScalingDecision(add_nodes=1)
+        loads = state.node_loads(plan.alloc)
+        avg = float(loads[a].mean())
+        total = float((loads[a] * state.capacity[a]).sum())
+        if avg > self.high_wm:
+            want = math.ceil(total / self.target)
+            return ScalingDecision(add_nodes=min(max(want - len(a), 1), self.max_step))
+        if avg < self.low_wm and len(a) > 1:
+            keep = max(math.ceil(total / self.target), 1)
+            drop = min(len(a) - keep, self.max_step)
+            if drop <= 0:
+                return ScalingDecision()
+            # Prefer removing the least-loaded nodes: cheapest to drain.
+            order = a[np.argsort(loads[a])]
+            return ScalingDecision(mark_for_removal=[int(i) for i in order[:drop]])
+        return ScalingDecision()
+
+
+@dataclasses.dataclass
+class LatencyProxyScaler:
+    """DRS-style [10] latency-constrained sizing with an M/M/1 proxy.
+
+    Expected queueing delay on a node with utilization ρ scales as ρ/(1−ρ);
+    size the cluster so the *maximum planned* utilization keeps the proxy
+    under ``latency_budget`` (expressed in the same arbitrary units).
+    """
+
+    latency_budget: float = 4.0  # ρ/(1−ρ) ≤ budget  ⇒  ρ ≤ b/(1+b)
+    max_step: int = 8
+
+    def decide(self, state: ClusterState, plan: AllocationPlan) -> ScalingDecision:
+        a = state.nodes_a
+        if len(a) == 0:
+            return ScalingDecision(add_nodes=1)
+        rho_cap = 100.0 * self.latency_budget / (1.0 + self.latency_budget)
+        loads = state.node_loads(plan.alloc)
+        peak = float(loads[a].max())
+        total = float((loads[a] * state.capacity[a]).sum())
+        if peak > rho_cap:
+            want = math.ceil(total / rho_cap)
+            return ScalingDecision(add_nodes=min(max(want - len(a), 1), self.max_step))
+        # Scale in when even after consolidation the cap holds with slack.
+        if len(a) > 1:
+            keep = max(math.ceil(total / (0.8 * rho_cap)), 1)
+            drop = min(len(a) - keep, self.max_step)
+            if drop > 0:
+                order = a[np.argsort(loads[a])]
+                return ScalingDecision(mark_for_removal=[int(i) for i in order[:drop]])
+        return ScalingDecision()
+
+
+@dataclasses.dataclass
+class NullScaler:
+    """Never scales — pure load-balancing mode (used by several benchmarks)."""
+
+    def decide(self, state: ClusterState, plan: AllocationPlan) -> ScalingDecision:  # noqa: ARG002
+        return ScalingDecision()
+
+
+def apply_scaling(
+    state: ClusterState,
+    decision: ScalingDecision,
+    *,
+    new_node_capacity: float = 1.0,
+) -> ClusterState:
+    """Materialize a scaling decision on the cluster snapshot.
+
+    Adding nodes grows every per-node array (simulating instant provisioning;
+    Algorithm 1's "wait until new nodes are allocated").  Marking nodes only
+    flips ``kill`` — draining and termination are the MILP's and the
+    framework's job respectively (Lemmas 1–2).
+    """
+    out = state.copy()
+    if decision.add_nodes > 0:
+        n_new = decision.add_nodes
+        out.num_nodes += n_new
+        out.capacity = np.concatenate([out.capacity, np.full(n_new, new_node_capacity)])
+        out.kill = np.concatenate([out.kill, np.zeros(n_new, dtype=bool)])
+        out.alive = np.concatenate([out.alive, np.ones(n_new, dtype=bool)])
+    for i in decision.mark_for_removal:
+        out.kill[i] = True
+    return out

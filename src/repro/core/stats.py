@@ -1,0 +1,213 @@
+"""Cluster model and SPL statistics (paper §3).
+
+The controller maintains, per *statistics period* (SPL), the load of every key
+group (``gLoad_k``), the load of every node (``load_i``), and the pairwise
+communication rates ``out(g_i, g_j)``.  All of the paper's algorithms consume
+exactly this state, so it is factored into one dataclass,
+:class:`ClusterState`, shared by the MILP, ALBIC, the baselines and the
+engine's controller.
+
+Loads are percentage points of the bottleneck resource in ``[0, 100]`` as in
+the paper.  Heterogeneity (paper §3) is carried as a per-node ``capacity``
+weight: a node with capacity 2.0 exhibits half the load for the same work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClusterState:
+    """Allocation + statistics snapshot consumed by the optimizers.
+
+    Attributes:
+      num_nodes: |N|.
+      capacity: (num_nodes,) relative node capacities (1.0 == reference node).
+      kill: (num_nodes,) bool — marked for removal by the scaling algorithm
+        (the paper's set ``B``; ``A`` is the complement).
+      alive: (num_nodes,) bool — False once a node failed or was terminated.
+      kg_operator: (G,) int — operator that owns each key group.
+      kg_load: (G,) float — ``gLoad_k`` over the last SPL.
+      kg_state_bytes: (G,) float — |σ_k|, the serialized state size.
+      alloc: (G,) int — current node of each key group (``q_{i,k}``).
+      out_rates: (G, G) float — ``out(g_i, g_j)`` tuple rates over the SPL.
+        Kept dense; benchmark-scale is ≤ a few thousand key groups.
+      downstream: operator adjacency — downstream[o] = list of operator ids.
+    """
+
+    num_nodes: int
+    capacity: np.ndarray
+    kill: np.ndarray
+    alive: np.ndarray
+    kg_operator: np.ndarray
+    kg_load: np.ndarray
+    kg_state_bytes: np.ndarray
+    alloc: np.ndarray
+    out_rates: np.ndarray
+    downstream: dict[int, list[int]]
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def create(
+        num_nodes: int,
+        kg_operator: np.ndarray,
+        kg_load: np.ndarray,
+        alloc: np.ndarray,
+        *,
+        kg_state_bytes: np.ndarray | None = None,
+        out_rates: np.ndarray | None = None,
+        downstream: dict[int, list[int]] | None = None,
+        capacity: np.ndarray | None = None,
+    ) -> "ClusterState":
+        g = len(kg_load)
+        return ClusterState(
+            num_nodes=num_nodes,
+            capacity=(
+                np.ones(num_nodes) if capacity is None else np.asarray(capacity, dtype=np.float64)
+            ),
+            kill=np.zeros(num_nodes, dtype=bool),
+            alive=np.ones(num_nodes, dtype=bool),
+            kg_operator=np.asarray(kg_operator, dtype=np.int64),
+            kg_load=np.asarray(kg_load, dtype=np.float64),
+            kg_state_bytes=(
+                np.full(g, 1.0)
+                if kg_state_bytes is None
+                else np.asarray(kg_state_bytes, dtype=np.float64)
+            ),
+            alloc=np.asarray(alloc, dtype=np.int64),
+            out_rates=(np.zeros((g, g)) if out_rates is None else np.asarray(out_rates)),
+            downstream=dict(downstream or {}),
+        )
+
+    # -- derived quantities (paper Table 1 / §4.3.1) --------------------------
+    @property
+    def num_keygroups(self) -> int:
+        return int(self.kg_load.shape[0])
+
+    @property
+    def nodes_a(self) -> np.ndarray:
+        """A = nodes not marked for removal (and alive)."""
+        return np.where(~self.kill & self.alive)[0]
+
+    @property
+    def nodes_b(self) -> np.ndarray:
+        """B = nodes marked for removal (still alive, draining)."""
+        return np.where(self.kill & self.alive)[0]
+
+    def node_loads(self, alloc: np.ndarray | None = None) -> np.ndarray:
+        """load_i: capacity-normalized sum of gLoad over key groups on i."""
+        alloc = self.alloc if alloc is None else alloc
+        raw = np.bincount(alloc, weights=self.kg_load, minlength=self.num_nodes)
+        return raw / self.capacity
+
+    def mean_load(self) -> float:
+        """Paper: mean = ceil( (1/|A|) · Σ_{n_i ∈ N} load_i )."""
+        a = self.nodes_a
+        if len(a) == 0:
+            return 0.0
+        total = float(self.node_loads()[self.alive].sum())
+        return math.ceil(total / len(a))
+
+    def load_distance(self, alloc: np.ndarray | None = None) -> float:
+        """max_{n_i ∈ A} |load_i − mean| for the given (or current) alloc."""
+        loads = self.node_loads(alloc)
+        a = self.nodes_a
+        if len(a) == 0:
+            return 0.0
+        return float(np.max(np.abs(loads[a] - self.mean_load())))
+
+    def migration_costs(self, alpha: float = 1.0) -> np.ndarray:
+        """mc_k = α · |σ_k| (paper §4.3.1 cost model)."""
+        return alpha * self.kg_state_bytes
+
+    # -- communication metrics (ALBIC §4.3.2, experiments §5) -----------------
+    def collocation_factor(self, alloc: np.ndarray | None = None) -> float:
+        """Fraction of inter-key-group traffic that stays intra-node, in %.
+
+        Real Job 2's "perfect collocation" (all communicating pairs on one
+        node) measures 100; a worst-case allocation measures ~0.
+        """
+        alloc = self.alloc if alloc is None else alloc
+        total = float(self.out_rates.sum())
+        if total <= 0:
+            return 0.0
+        same = alloc[:, None] == alloc[None, :]
+        return 100.0 * float(self.out_rates[same].sum()) / total
+
+    def cross_node_rate(self, alloc: np.ndarray | None = None) -> float:
+        """Total tuple rate crossing node boundaries (drives the load index)."""
+        alloc = self.alloc if alloc is None else alloc
+        diff = alloc[:, None] != alloc[None, :]
+        return float(self.out_rates[diff].sum())
+
+    def system_load(self, alloc: np.ndarray | None = None, ser_cost: float = 0.0) -> float:
+        """Average node load including serialization cost of cross-node sends.
+
+        ``ser_cost`` is load points charged per unit of cross-node rate (it
+        models CPU serialization + deserialization in the paper; ICI/bytes on
+        TPU).  The *load index* metric divides this by its value at t0.
+        """
+        alloc = self.alloc if alloc is None else alloc
+        base = float(self.kg_load.sum())
+        comm = ser_cost * self.cross_node_rate(alloc)
+        a = self.nodes_a
+        return (base + comm) / max(len(a), 1)
+
+    def copy(self) -> "ClusterState":
+        return ClusterState(
+            num_nodes=self.num_nodes,
+            capacity=self.capacity.copy(),
+            kill=self.kill.copy(),
+            alive=self.alive.copy(),
+            kg_operator=self.kg_operator.copy(),
+            kg_load=self.kg_load.copy(),
+            kg_state_bytes=self.kg_state_bytes.copy(),
+            alloc=self.alloc.copy(),
+            out_rates=self.out_rates.copy(),
+            downstream={k: list(v) for k, v in self.downstream.items()},
+        )
+
+
+@dataclasses.dataclass
+class SPLWindow:
+    """Accumulates raw statistics over one statistics period (SPL).
+
+    The engine's controller feeds tuple counts / resource samples in; at the
+    end of the window it folds them into a :class:`ClusterState` snapshot.
+    Resources are tracked separately so the *bottleneck resource* (the one
+    with greatest total usage — paper §3) can be selected per window.
+    """
+
+    num_keygroups: int
+    resources: tuple[str, ...] = ("cpu", "network", "memory")
+
+    def __post_init__(self) -> None:
+        g = self.num_keygroups
+        self.kg_usage = {r: np.zeros(g) for r in self.resources}
+        self.out_counts = np.zeros((g, g))
+        self.samples = 0
+
+    def record_processing(self, resource: str, kg: int, usage: float) -> None:
+        self.kg_usage[resource][kg] += usage
+
+    def record_send(self, src_kg: int, dst_kg: int, tuples: float) -> None:
+        self.out_counts[src_kg, dst_kg] += tuples
+
+    def bottleneck_resource(self) -> str:
+        totals = {r: float(u.sum()) for r, u in self.kg_usage.items()}
+        return max(totals, key=totals.get)  # type: ignore[arg-type]
+
+    def fold(self, scale_to_percent: float = 1.0) -> tuple[np.ndarray, np.ndarray, str]:
+        """Return (gLoad vector on bottleneck resource, out_rates, resource)."""
+        r = self.bottleneck_resource()
+        return self.kg_usage[r] * scale_to_percent, self.out_counts.copy(), r
+
+    def reset(self) -> None:
+        for r in self.resources:
+            self.kg_usage[r][:] = 0
+        self.out_counts[:] = 0
+        self.samples = 0

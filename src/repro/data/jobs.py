@@ -1,0 +1,310 @@
+"""The paper's Real Jobs 1–4 (§5.2–§5.4) as engine topologies.
+
+Operator logic is genuinely executed (geohashing, windowed TopK, keyed sums,
+stream joins) — the engine measures the resulting loads and communication, it
+does not assume them.
+
+Job 1  wiki → GeoHash → windowed TopK → global TopK      (full partitioning —
+       the "LP-solver-only" case; collocation maxes out ~5%)
+Job 2  airline → ExtractDelay → SumDelay(airplane, year)  (same key both ops —
+       perfect collocation possible)
+Job 3  job 2 + RouteDelay(origin→dest)                    (different key — the
+       RouteDelay operator cannot collocate with SumDelay)
+Job 4  job 3 + weather → RainScore → join(route × rainscore) → courier
+       efficiency → store (periodic DB writes modelled as a sink)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import synthetic
+from repro.engine.topology import OperatorSpec, Topology
+
+# --------------------------------------------------------------------------
+# Shared operator bodies (state dicts are σ_k — everything must live there).
+# --------------------------------------------------------------------------
+
+
+def _geohash(lat: float, lon: float, precision: int = 5) -> str:
+    """Standard geohash (base32) — executed per tuple like the paper's job."""
+    _b32 = "0123456789bcdefghjkmnpqrstuvwxyz"
+    lat_r, lon_r = [-90.0, 90.0], [-180.0, 180.0]
+    bits, ch, even, out = 0, 0, True, []
+    while len(out) < precision:
+        if even:
+            mid = (lon_r[0] + lon_r[1]) / 2
+            if lon > mid:
+                ch = ch * 2 + 1
+                lon_r[0] = mid
+            else:
+                ch *= 2
+                lon_r[1] = mid
+        else:
+            mid = (lat_r[0] + lat_r[1]) / 2
+            if lat > mid:
+                ch = ch * 2 + 1
+                lat_r[0] = mid
+            else:
+                ch *= 2
+                lat_r[1] = mid
+        even = not even
+        bits += 1
+        if bits == 5:
+            out.append(_b32[ch])
+            bits, ch = 0, 0
+    return "".join(out)
+
+
+# Denmark bounding box (paper: "completely even distribution of GeoHash
+# values covering Denmark").
+_DK = (54.5, 57.8, 8.0, 12.7)
+
+
+def make_real_job_1(
+    *, keygroups_per_op: int = 100, topk: int = 10, window_ticks: float = 60.0
+) -> Topology:
+    def geohash_op(state, keys, values, ts):
+        out = []
+        for k, v, t in zip(keys, values, ts):
+            # Article id → deterministic pseudo-location inside Denmark.
+            rng = (int(k) * 2654435761) & 0xFFFFFFFF
+            lat = _DK[0] + (rng % 10_000) / 10_000 * (_DK[1] - _DK[0])
+            lon = _DK[2] + ((rng // 10_000) % 10_000) / 10_000 * (_DK[3] - _DK[2])
+            gh = _geohash(lat, lon)
+            out.append((gh, {"article": int(k), "gh": gh}, float(t)))
+        return state, out
+
+    def topk_op(state, keys, values, ts):
+        counts = state.setdefault("counts", {})
+        w_start = state.setdefault("w_start", float(ts[0]) if len(ts) else 0.0)
+        out = []
+        for k, v, t in zip(keys, values, ts):
+            art = v["article"]
+            counts[art] = counts.get(art, 0) + 1
+            if t - w_start >= window_ticks:
+                top = sorted(counts.items(), key=lambda x: -x[1])[:topk]
+                out.append((str(k), {"top": top, "gh": str(k)}, float(t)))
+                counts.clear()
+                state["w_start"] = float(t)
+                w_start = float(t)
+        return state, out
+
+    def global_topk_op(state, keys, values, ts):
+        counts = state.setdefault("counts", {})
+        w_start = state.setdefault("w_start", float(ts[0]) if len(ts) else 0.0)
+        out = []
+        for k, v, t in zip(keys, values, ts):
+            for art, c in v["top"]:
+                counts[art] = counts.get(art, 0) + c
+            if t - w_start >= window_ticks:
+                top = sorted(counts.items(), key=lambda x: -x[1])[:topk]
+                out.append(("global", {"top": top}, float(t)))
+                counts.clear()
+                state["w_start"] = float(t)
+                w_start = float(t)
+        return state, out
+
+    t = Topology()
+    t.add_operator(
+        OperatorSpec("wiki", None, num_keygroups=keygroups_per_op, is_source=True)
+    )
+    t.add_operator(
+        OperatorSpec("geohash", geohash_op, num_keygroups=keygroups_per_op, cost_per_tuple=1.2)
+    )
+    t.add_operator(OperatorSpec("topk", topk_op, num_keygroups=keygroups_per_op))
+    t.add_operator(
+        OperatorSpec(
+            "global_topk",
+            global_topk_op,
+            num_keygroups=keygroups_per_op,
+            is_sink=True,
+            key_fn=lambda k: "global",
+        )
+    )
+    t.connect("wiki", "geohash")
+    t.connect("geohash", "topk")
+    t.connect("topk", "global_topk")
+    return t
+
+
+def real_job_1(**kw) -> Topology:
+    return make_real_job_1(**kw)
+
+
+# --------------------------------------------------------------------------
+# Jobs 2–4 (airline + weather)
+# --------------------------------------------------------------------------
+
+
+def _extract_delay(state, keys, values, ts):
+    out = []
+    for k, v, t in zip(keys, values, ts):
+        delay = v["dep_delay"] + v["arr_delay"]
+        out.append(
+            (
+                v["airplane"],  # keyed by airplane → 1:1 with SumDelay
+                {
+                    "airplane": v["airplane"],
+                    "delay": delay,
+                    "year": v["year"],
+                    "origin": v["origin"],
+                    "dest": v["dest"],
+                },
+                float(t),
+            )
+        )
+    return state, out
+
+
+def _sum_delay(state, keys, values, ts):
+    sums = state.setdefault("sums", {})
+    out = []
+    for k, v, t in zip(keys, values, ts):
+        key = (v["airplane"], v["year"])
+        sums[key] = sums.get(key, 0.0) + v["delay"]
+        out.append((v["airplane"], {"airplane": v["airplane"], "sum": sums[key]}, float(t)))
+    return state, out
+
+
+def _route_delay(state, keys, values, ts):
+    sums = state.setdefault("route_sums", {})
+    out = []
+    for k, v, t in zip(keys, values, ts):
+        route = (v["origin"], v["dest"])
+        sums[route] = sums.get(route, 0.0) + v["delay"]
+        out.append(
+            (
+                v["origin"] * synthetic.num_airports() + v["dest"],
+                {"route": route, "origin": v["origin"], "sum": sums[route], "delay": v["delay"]},
+                float(t),
+            )
+        )
+    return state, out
+
+
+def real_job_2(*, keygroups_per_op: int = 100) -> Topology:
+    t = Topology()
+    t.add_operator(
+        OperatorSpec("airline", None, num_keygroups=keygroups_per_op, is_source=True)
+    )
+    # Both operators parallelized on the SAME attribute (airplane) — the
+    # One-To-One pattern where perfect collocation is possible (paper §5.4).
+    t.add_operator(
+        OperatorSpec(
+            "extract",
+            _extract_delay,
+            num_keygroups=keygroups_per_op,
+            key_by_value=lambda v: v["airplane"],
+        )
+    )
+    t.add_operator(
+        OperatorSpec(
+            "sumdelay",
+            _sum_delay,
+            num_keygroups=keygroups_per_op,
+            key_by_value=lambda v: v["airplane"],
+            is_sink=True,
+        )
+    )
+    t.connect("airline", "extract")
+    t.connect("extract", "sumdelay")
+    return t
+
+
+def real_job_3(*, keygroups_per_op: int = 100) -> Topology:
+    t = real_job_2(keygroups_per_op=keygroups_per_op)
+    t.operators[t._resolve("sumdelay")].is_sink = True
+    # RouteDelay partitions by route — a different attribute, so it CANNOT be
+    # collocated with SumDelay (paper: "collocation factor is only half").
+    t.add_operator(
+        OperatorSpec(
+            "routedelay",
+            _route_delay,
+            num_keygroups=keygroups_per_op,
+            key_by_value=lambda v: (v["origin"], v["dest"]),
+            is_sink=True,
+        )
+    )
+    t.connect("extract", "routedelay")
+    return t
+
+
+def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
+    def rainscore(state, keys, values, ts):
+        out = []
+        for k, v, t in zip(keys, values, ts):
+            score = 100.0 * v["precip"] / synthetic.max_precip()
+            out.append((v["airport"], {"airport": v["airport"], "rainscore": score}, float(t)))
+        return state, out
+
+    def join_route_rain(state, keys, values, ts):
+        rain = state.setdefault("rain", {})  # airport → latest rainscore
+        out = []
+        for k, v, t in zip(keys, values, ts):
+            if "rainscore" in v:
+                rain[v["airport"]] = v["rainscore"]
+            else:  # a route-delay tuple; join on origin airport
+                score = rain.get(v["origin"], 0.0)
+                out.append(
+                    (v["origin"], {"delay": v["delay"], "rainscore": score}, float(t))
+                )
+        return state, out
+
+    def courier_efficiency(state, keys, values, ts):
+        buckets = state.setdefault("buckets", {})  # rainscore decile → Σ delay
+        out = []
+        for k, v, t in zip(keys, values, ts):
+            b = min(int(v["rainscore"] // 10), 9)
+            buckets[b] = buckets.get(b, 0.0) + v["delay"]
+            out.append((b, {"bucket": b, "sum_delay": buckets[b]}, float(t)))
+        return state, out
+
+    def store(state, keys, values, ts):
+        rows = state.setdefault("rows", [])
+        for k, v, t in zip(keys, values, ts):
+            rows.append((int(k), v["sum_delay"], float(t)))
+        if len(rows) > 1_000:  # periodic flush to the "local database"
+            del rows[:-100]
+        return state, []
+
+    t = real_job_3(keygroups_per_op=keygroups_per_op)
+    t.operators[t._resolve("routedelay")].is_sink = False
+    t.add_operator(
+        OperatorSpec("weather", None, num_keygroups=keygroups_per_op, is_source=True)
+    )
+    t.add_operator(
+        OperatorSpec(
+            "rainscore",
+            rainscore,
+            num_keygroups=keygroups_per_op,
+            key_by_value=lambda v: v["station"],
+        )
+    )
+    t.add_operator(
+        OperatorSpec(
+            "join",
+            join_route_rain,
+            num_keygroups=keygroups_per_op,
+            # Both sides partition by airport id: rain tuples carry "airport",
+            # route tuples join on their origin airport.
+            key_by_value=lambda v: v["airport"] if "airport" in v else v["origin"],
+        )
+    )
+    t.add_operator(
+        OperatorSpec(
+            "efficiency",
+            courier_efficiency,
+            num_keygroups=keygroups_per_op,
+            key_by_value=lambda v: min(int(v["rainscore"] // 10), 9),
+        )
+    )
+    t.add_operator(
+        OperatorSpec("store", store, num_keygroups=keygroups_per_op, is_sink=True)
+    )
+    t.connect("weather", "rainscore")
+    t.connect("rainscore", "join")
+    t.connect("routedelay", "join")
+    t.connect("join", "efficiency")
+    t.connect("efficiency", "store")
+    return t

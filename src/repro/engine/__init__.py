@@ -1,0 +1,25 @@
+"""PSPE substrate: a keyed, stateful streaming engine the paper's controller
+reconfigures at runtime.
+
+The engine executes real operator logic (JAX/numpy) over key-group-partitioned
+state on a set of *logical nodes* (device shards on TPU; timeshared on CPU),
+maintains SPL statistics, and exposes direct state migration — everything
+:mod:`repro.core` needs to run Algorithm 1 against a live job.
+"""
+
+from repro.engine.topology import OperatorSpec, Topology
+from repro.engine.state import KeyedStore
+from repro.engine.router import Router
+from repro.engine.executor import Engine, EngineMetrics
+from repro.engine.controller import Controller, ControllerConfig
+
+__all__ = [
+    "Controller",
+    "ControllerConfig",
+    "Engine",
+    "EngineMetrics",
+    "KeyedStore",
+    "OperatorSpec",
+    "Router",
+    "Topology",
+]

@@ -1,0 +1,241 @@
+"""The engine: executes a topology over logical nodes, measuring everything
+the controller needs (paper §3 "Statistics", §5 metrics).
+
+Execution is tick-based.  Per tick every node drains up to
+``service_rate × capacity`` cost-units from its FIFO work queue; operator
+outputs are routed by key to downstream key groups; cross-node sends charge
+serialization cost to the sender and deserialization cost to the receiver
+(the CPU overhead ALBIC's collocation removes) plus network bytes.  Queue
+depth beyond the service budget becomes queueing latency and, via
+credit-based backpressure, throttles the sources — reproducing the dynamics
+that make long-term balance matter.
+
+On TPU deployments the logical nodes map 1:1 onto mesh devices and operator
+``fn``s are jitted shard_map shards; on CPU (tests, paper benchmarks) the
+nodes timeshare the host.  The engine semantics are identical — that is the
+point of keeping reconfiguration decisions as *data* (routing table) rather
+than recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.stats import ClusterState, SPLWindow
+from repro.engine.backpressure import CreditController, LatencyTracker
+from repro.engine.router import Router, concat_batches
+from repro.engine.state import KeyedStore
+from repro.engine.topology import Batch, Topology, make_batch
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    ticks: int = 0
+    processed_tuples: int = 0
+    emitted_tuples: int = 0
+    cross_node_tuples: int = 0
+    intra_node_tuples: int = 0
+    dropped_credits: int = 0
+    sink_outputs: list = dataclasses.field(default_factory=list)
+
+    def throughput(self) -> float:
+        return self.processed_tuples / max(self.ticks, 1)
+
+
+class Engine:
+    """Single-process execution of a Topology over ``num_nodes`` logical nodes."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        num_nodes: int,
+        *,
+        initial_alloc: Optional[np.ndarray] = None,
+        capacity: Optional[np.ndarray] = None,
+        service_rate: float = 1_000.0,  # cost-units a reference node serves per tick
+        ser_cost: float = 0.25,  # cost-units per cross-node tuple (each side)
+        seed: int = 0,
+    ) -> None:
+        topology.validate()
+        self.topology = topology
+        self.num_nodes = num_nodes
+        self.capacity = np.ones(num_nodes) if capacity is None else np.asarray(capacity)
+        self.service_rate = service_rate
+        self.ser_cost = ser_cost
+        g = topology.num_keygroups
+        rng = np.random.default_rng(seed)
+        if initial_alloc is None:
+            initial_alloc = rng.integers(0, num_nodes, size=g)
+        self.store = KeyedStore(g)
+        self.router = Router(g, initial_alloc)
+        self.window = SPLWindow(g)
+        self.metrics = EngineMetrics()
+        self.latency = LatencyTracker()
+        self.backpressure = CreditController(num_nodes, high_wm=50 * service_rate)
+        # Per-node FIFO of (op, kg, batch, enqueue_tick); queue cost tracked.
+        self._queues: list[deque] = [deque() for _ in range(num_nodes)]
+        self._queue_cost = np.zeros(num_nodes)
+        self._kg_op = topology.kg_operator()
+        self._downstream = topology.downstream()
+        self._ticks_this_period = 0
+        self.alive = np.ones(num_nodes, dtype=bool)
+
+    # ------------------------------------------------------------------ feed
+    def source_credits(self) -> int:
+        return self.backpressure.credits(self._queue_cost)
+
+    def push_source(self, op: str | int, keys, values, ts) -> int:
+        """Feed tuples into a source operator; returns tuples accepted."""
+        oid = self.topology._resolve(op)
+        spec = self.topology.operators[oid]
+        if not spec.is_source:
+            raise ValueError(f"{spec.name!r} is not a source")
+        credits = self.source_credits()
+        n = min(len(keys), credits)
+        if n < len(keys):
+            self.metrics.dropped_credits += len(keys) - n
+        if n == 0:
+            return 0
+        batch = make_batch(keys[:n], values[:n], ts[:n])
+        self._route_batch(oid, batch, src_kg=None, src_node=None)
+        return n
+
+    def _route_batch(
+        self, op: int, batch: Batch, *, src_kg: Optional[int], src_node: Optional[int]
+    ) -> None:
+        """Partition a batch by the operator's key groups and enqueue."""
+        keys, values, ts = batch
+        if len(keys) == 0:
+            return
+        kgs = np.fromiter(
+            (self.topology.keygroup_of(op, k, v) for k, v in zip(keys, values)),
+            dtype=np.int64,
+            count=len(keys),
+        )
+        for kg in np.unique(kgs):
+            mask = kgs == kg
+            sub = (keys[mask], values[mask], ts[mask])
+            node, buffered = self.router.route(int(kg), sub)
+            n_tuples = int(mask.sum())
+            if src_kg is not None:
+                self.window.record_send(src_kg, int(kg), n_tuples)
+                if src_node is not None and src_node != node:
+                    # Cross-node: serialization at src, deserialization at dst,
+                    # plus network bytes on both (paper §4.3.2 rationale).
+                    self.window.record_processing("cpu", src_kg, self.ser_cost * n_tuples)
+                    self.window.record_processing("cpu", int(kg), self.ser_cost * n_tuples)
+                    self.window.record_processing("network", src_kg, n_tuples)
+                    self.window.record_processing("network", int(kg), n_tuples)
+                    self.metrics.cross_node_tuples += n_tuples
+                else:
+                    self.metrics.intra_node_tuples += n_tuples
+            if not buffered:
+                self._enqueue(node, op, int(kg), sub)
+
+    def _enqueue(self, node: int, op: int, kg: int, batch: Batch) -> None:
+        cost = self.topology.operators[op].cost_per_tuple * len(batch[0])
+        self._queues[node].append((op, kg, batch, self.metrics.ticks, cost))
+        self._queue_cost[node] += cost
+        # Queueing-latency estimate at admission: work ahead / service speed.
+        budget = self.service_rate * self.capacity[node]
+        self.latency.record(self._queue_cost[node] / max(budget, 1e-9), len(batch[0]))
+
+    # ------------------------------------------------------------------ tick
+    def tick(self) -> None:
+        self.metrics.ticks += 1
+        self._ticks_this_period += 1
+        for node in range(self.num_nodes):
+            if not self.alive[node]:
+                continue
+            budget = self.service_rate * self.capacity[node]
+            q = self._queues[node]
+            while q and budget > 0:
+                op, kg, batch, _tick_in, cost = q.popleft()
+                self._queue_cost[node] -= cost
+                budget -= cost
+                self._process(node, op, kg, batch)
+
+    def _process(self, node: int, op: int, kg: int, batch: Batch) -> None:
+        spec = self.topology.operators[op]
+        keys, values, ts = batch
+        n = len(keys)
+        self.metrics.processed_tuples += n
+        self.window.record_processing("cpu", kg, spec.cost_per_tuple * n)
+        if spec.fn is None:  # source pass-through
+            outputs = list(zip(keys.tolist(), values.tolist(), ts.tolist()))
+        else:
+            state = self.store.get(kg)
+            state, outputs = spec.fn(state, keys, values, ts)
+            self.store.put(kg, state)
+        if not outputs:
+            return
+        self.metrics.emitted_tuples += len(outputs)
+        if spec.is_sink or not self._downstream[op]:
+            self.metrics.sink_outputs.extend(outputs)
+            return
+        out_keys = [o[0] for o in outputs]
+        out_vals = [o[1] for o in outputs]
+        out_ts = [o[2] for o in outputs]
+        for dop in self._downstream[op]:
+            self._route_batch(
+                dop, make_batch(out_keys, out_vals, out_ts), src_kg=kg, src_node=node
+            )
+
+    # ------------------------------------------------------- SPL statistics
+    def end_period(self) -> ClusterState:
+        """Fold the SPL window into a ClusterState snapshot and reset it."""
+        ticks = max(self._ticks_this_period, 1)
+        scale = 100.0 / (ticks * self.service_rate)  # → % of a reference node
+        kg_load, out_rates, _resource = self.window.fold(scale_to_percent=scale)
+        state = ClusterState.create(
+            self.num_nodes,
+            self._kg_op,
+            kg_load,
+            self.router.table.copy(),
+            kg_state_bytes=self.store.state_bytes(refresh=True),
+            out_rates=out_rates,
+            downstream=self._downstream,
+            capacity=self.capacity.copy(),
+        )
+        state.alive = self.alive.copy()
+        self.window.reset()
+        self._ticks_this_period = 0
+        return state
+
+    # ------------------------------------------------- direct state migration
+    # StateMover protocol (repro.core.migration).
+    def redirect(self, keygroup: int, dst: int) -> None:
+        self.router.redirect(keygroup, dst)
+
+    def serialize(self, keygroup: int) -> bytes:
+        return self.store.serialize(keygroup)
+
+    def install(self, keygroup: int, dst: int, blob: bytes) -> None:
+        self.store.deserialize(keygroup, blob)
+        op = int(self._kg_op[keygroup])
+        for batch in self.router.complete(keygroup):
+            self._enqueue(dst, op, keygroup, batch)  # replay buffered tuples
+
+    # --------------------------------------------------------------- elastic
+    def add_nodes(self, count: int, capacity: float = 1.0) -> None:
+        self.num_nodes += count
+        self.capacity = np.concatenate([self.capacity, np.full(count, capacity)])
+        self.alive = np.concatenate([self.alive, np.ones(count, dtype=bool)])
+        self._queues.extend(deque() for _ in range(count))
+        self._queue_cost = np.concatenate([self._queue_cost, np.zeros(count)])
+        self.backpressure.num_nodes = self.num_nodes
+
+    def fail_node(self, node: int) -> np.ndarray:
+        """Simulate a node crash: queue lost, key groups orphaned.
+
+        Returns the orphaned key groups; the controller reallocates them (their
+        state is recovered from the last checkpoint — see repro.checkpoint).
+        """
+        self.alive[node] = False
+        self._queues[node].clear()
+        self._queue_cost[node] = 0.0
+        return self.router.keygroups_on(node)

@@ -1,0 +1,64 @@
+"""Routing table: key group → node, with redirect/buffer for direct migration.
+
+During a migration of g_k from n1 to n2 (paper §3):
+
+  * `redirect(k, n2)` flips the table immediately — upstream sends for g_k now
+    land at n2 and are *buffered* there (n2 does not own σ_k yet);
+  * `install(...)` (driven by the engine's StateMover) hands σ_k over, after
+    which `drain(k)` returns the buffered tuples for replay and the key group
+    resumes at n2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine.topology import Batch, empty_batch
+
+
+class Router:
+    def __init__(self, num_keygroups: int, initial_alloc: np.ndarray) -> None:
+        if len(initial_alloc) != num_keygroups:
+            raise ValueError("alloc length mismatch")
+        self.table = np.asarray(initial_alloc, dtype=np.int64).copy()
+        self._buffers: dict[int, list[Batch]] = {}
+        self._in_flight: set[int] = set()
+
+    # -- routing -------------------------------------------------------------
+    def node_of(self, kg: int) -> int:
+        return int(self.table[kg])
+
+    def route(self, kg: int, batch: Batch) -> tuple[int, bool]:
+        """Return (target node, buffered?).  Buffered while migration in flight."""
+        node = self.node_of(kg)
+        if kg in self._in_flight:
+            self._buffers.setdefault(kg, []).append(batch)
+            return node, True
+        return node, False
+
+    # -- migration protocol ----------------------------------------------------
+    def redirect(self, kg: int, dst: int) -> None:
+        self.table[kg] = dst
+        self._in_flight.add(kg)
+        self._buffers.setdefault(kg, [])
+
+    def complete(self, kg: int) -> list[Batch]:
+        """State installed at dst: stop buffering, return tuples to replay."""
+        self._in_flight.discard(kg)
+        return self._buffers.pop(kg, [])
+
+    @property
+    def in_flight(self) -> set[int]:
+        return set(self._in_flight)
+
+    def keygroups_on(self, node: int) -> np.ndarray:
+        return np.where(self.table == node)[0]
+
+
+def concat_batches(batches: list[Batch]) -> Batch:
+    if not batches:
+        return empty_batch()
+    ks = np.concatenate([b[0] for b in batches])
+    vs = np.concatenate([b[1] for b in batches])
+    ts = np.concatenate([b[2] for b in batches])
+    return ks, vs, ts

@@ -1,0 +1,165 @@
+"""Job topology: a DAG of operators connected by keyed streams (paper §3).
+
+A job is ⟨O, E⟩ with src operators producing input and sink operators
+producing none.  Each operator's input keys are hash-partitioned into a fixed
+number of *key groups*; the processing of key groups is independent (the
+paper's main execution-model assumption), which is what makes key groups the
+unit of allocation and migration.
+
+Operator logic is opaque to the system (paper §4.3.2: no pre-analysis of key
+relations is possible) — the engine only sees tuples, keys and measured rates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+# A tuple batch: parallel arrays ⟨key, value, ts⟩.  Values are object arrays so
+# operators may carry arbitrary payloads (dicts, floats, small arrays).
+Batch = tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+def make_batch(keys: Sequence, values: Sequence, ts: Sequence) -> Batch:
+    k = np.asarray(keys)
+    v = np.empty(len(values), dtype=object)
+    v[:] = list(values)
+    return k, v, np.asarray(ts, dtype=np.float64)
+
+
+def empty_batch() -> Batch:
+    return np.empty(0, dtype=np.int64), np.empty(0, dtype=object), np.empty(0)
+
+
+# Operator state-transition function:
+#   fn(state: dict, keys, values, ts) -> (state', list[(out_key, out_value, out_ts)])
+# It is called once per (key group, batch); `state` is that key group's σ_k.
+OperatorFn = Callable[[dict, np.ndarray, np.ndarray, np.ndarray], tuple[dict, list]]
+
+
+@dataclasses.dataclass
+class OperatorSpec:
+    """One operator O_i.
+
+    Attributes:
+      name: unique id.
+      fn: keyed state transition (None for sources; sources are driven by the
+        engine's input feeder).
+      num_keygroups: how many key groups this operator's input is split into.
+      cost_per_tuple: load points charged per processed tuple (the measured
+        CPU cost in the paper's statistics; calibrated per operator).
+      key_fn: maps an input tuple key to the partitioning key (defaults to
+        identity).  The engine hashes the result into a key group.
+      key_by_value: optional — partition by a function of the tuple *value*
+        instead (e.g. RouteDelay partitions extract's airplane-keyed tuples
+        by (origin, dest)).  Takes precedence over key_fn.
+      is_source / is_sink: role flags.
+    """
+
+    name: str
+    fn: Optional[OperatorFn]
+    num_keygroups: int = 8
+    cost_per_tuple: float = 1.0
+    key_fn: Callable[[object], object] = staticmethod(lambda k: k)
+    key_by_value: Optional[Callable[[object], object]] = None
+    is_source: bool = False
+    is_sink: bool = False
+
+
+class Topology:
+    """DAG of :class:`OperatorSpec` plus the global key-group index space.
+
+    Key groups are numbered globally and contiguously per operator, so a
+    single allocation vector covers the whole job (matching
+    :class:`repro.core.stats.ClusterState`).
+    """
+
+    def __init__(self) -> None:
+        self.operators: list[OperatorSpec] = []
+        self.edges: list[tuple[int, int]] = []
+        self._name_to_id: dict[str, int] = {}
+
+    # -- construction --------------------------------------------------------
+    def add_operator(self, spec: OperatorSpec) -> int:
+        if spec.name in self._name_to_id:
+            raise ValueError(f"duplicate operator {spec.name!r}")
+        oid = len(self.operators)
+        self.operators.append(spec)
+        self._name_to_id[spec.name] = oid
+        return oid
+
+    def connect(self, src: str | int, dst: str | int) -> None:
+        s = self._resolve(src)
+        d = self._resolve(dst)
+        self.edges.append((s, d))
+
+    def _resolve(self, ref: str | int) -> int:
+        return ref if isinstance(ref, int) else self._name_to_id[ref]
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def num_operators(self) -> int:
+        return len(self.operators)
+
+    @property
+    def num_keygroups(self) -> int:
+        return sum(o.num_keygroups for o in self.operators)
+
+    def kg_base(self, op: int) -> int:
+        return sum(o.num_keygroups for o in self.operators[:op])
+
+    def kg_operator(self) -> np.ndarray:
+        return np.concatenate(
+            [np.full(o.num_keygroups, i, dtype=np.int64) for i, o in enumerate(self.operators)]
+        )
+
+    def downstream(self) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = {i: [] for i in range(self.num_operators)}
+        for s, d in self.edges:
+            out[s].append(d)
+        return out
+
+    def upstream(self) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = {i: [] for i in range(self.num_operators)}
+        for s, d in self.edges:
+            out[d].append(s)
+        return out
+
+    def topo_order(self) -> list[int]:
+        indeg = [0] * self.num_operators
+        for _, d in self.edges:
+            indeg[d] += 1
+        order, stack = [], [i for i, v in enumerate(indeg) if v == 0]
+        while stack:
+            u = stack.pop()
+            order.append(u)
+            for s, d in self.edges:
+                if s == u:
+                    indeg[d] -= 1
+                    if indeg[d] == 0:
+                        stack.append(d)
+        if len(order) != self.num_operators:
+            raise ValueError("topology has a cycle")
+        return order
+
+    def keygroup_of(self, op: int, key: object, value: object = None) -> int:
+        """Hash-partition a tuple into one of the operator's key groups."""
+        spec = self.operators[op]
+        part_key = (
+            spec.key_by_value(value)
+            if (spec.key_by_value is not None and value is not None)
+            else spec.key_fn(key)
+        )
+        h = hash(part_key) & 0x7FFFFFFF
+        return self.kg_base(op) + (h % spec.num_keygroups)
+
+    def validate(self) -> None:
+        self.topo_order()  # raises on cycles
+        downs = self.downstream()
+        for i, o in enumerate(self.operators):
+            if o.is_sink and downs[i]:
+                raise ValueError(f"sink {o.name!r} has downstream edges")
+            if not o.is_source and o.fn is None:
+                raise ValueError(f"non-source {o.name!r} lacks fn")

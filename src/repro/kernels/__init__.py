@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package ships three modules:
+
+* ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec VMEM
+  tiling (TPU is the target; ``interpret=True`` validates on CPU),
+* ``ops.py``   — the jit-ready wrapper that picks Pallas on TPU and the pure
+  XLA reference elsewhere,
+* ``ref.py``   — the pure-jnp oracle the tests assert against.
+
+The paper itself contributes scheduling, not kernels; these cover the LM
+workloads' hot spots (DESIGN.md §2): flash_attention (causal/windowed GQA),
+decode_attention (single-token flash-decode), rglru_scan (blocked linear
+recurrence), moe_gemm (grouped expert matmul).
+"""

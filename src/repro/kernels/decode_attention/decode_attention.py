@@ -1,0 +1,124 @@
+"""Single-token flash-decode attention (Pallas TPU).
+
+Decode is memory-bound: the whole KV cache streams HBM→VMEM once while the
+query stays resident.  Grid: (batch, kv_heads, num_kv_blocks) with the KV
+block dim innermost; the online-softmax state for *all* q heads in the group
+is carried in VMEM scratch.  Per-batch ``kv_len`` masks unwritten cache slots.
+
+VMEM per cell: k/v block (BK, hd) ×2 + q (G, hd) + scores (G, BK) + state —
+with BK = 1024, hd = 128, G = 16: ~1.3 MB.  The q@k matmul is (G×hd)·(hd×BK),
+MXU-aligned for hd, BK multiples of 128 (G is padded to the 8-sublane tile by
+Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+LANES = 128
+
+
+def _kernel(
+    kvlen_ref,  # SMEM (1,)   int32 — this batch row's cache length
+    q_ref,  # (1, 1, G*?, hd) block: all heads of this kv group
+    k_ref,  # (1, bk, 1, hd)
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    bk: int,
+    nkv: int,
+    scale: float,
+):
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = kvlen_ref[0]
+    k_start = jk * bk
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0, 0, :, :].astype(jnp.float32)  # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = (
+            jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            * scale
+        )  # (G, bk)
+        tpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(tpos < kv_len, s, NEG_INF)
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_scr[:, 0] * alpha + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(jk == nkv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, 0], 1e-37)
+        o_ref[0, 0, 0, :, :] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, T, KV, hd)
+    v_cache: jax.Array,
+    kv_len: jax.Array,  # (B,) int32
+    *,
+    block_kv: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    b, one, h, hd = q.shape
+    assert one == 1
+    t, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    bk = min(block_kv, t)
+    assert t % bk == 0
+    nkv = t // bk
+    scale = 1.0 / (hd ** 0.5)
+
+    # Regroup q so one grid cell sees all heads of one kv group.
+    qg = q.reshape(b, 1, kvh, g, hd)
+
+    kernel = functools.partial(_kernel, bk=bk, nkv=nkv, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, nkv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM, block_shape=(1,), index_map=lambda b_, h_, j: (b_,)),
+            pl.BlockSpec((1, 1, 1, g, hd), lambda b_, h_, j: (b_, 0, h_, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, h_, j: (b_, j, h_, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, h_, j: (b_, j, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, g, hd), lambda b_, h_, j: (b_, 0, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1, kvh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, 1, h, hd)

@@ -1,0 +1,25 @@
+"""Dispatching wrapper for decode attention."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_len: jax.Array,
+    *,
+    block_kv: int = 1024,
+    force_pallas: bool = False,
+) -> jax.Array:
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return decode_attention_pallas(
+            q, k_cache, v_cache, kv_len, block_kv=block_kv, interpret=not on_tpu
+        )
+    return decode_attention_ref(q, k_cache, v_cache, kv_len)

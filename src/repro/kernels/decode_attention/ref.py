@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash-decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, T, KV, hd)
+    v_cache: jax.Array,
+    kv_len: jax.Array,  # (B,)
+) -> jax.Array:
+    b, _, h, hd = q.shape
+    t, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k_cache.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd)
+    valid = jnp.arange(t)[None, :] < kv_len[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,34 @@
+"""Dispatching wrapper: Pallas kernel on TPU, interpret/XLA path elsewhere."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    force_pallas: bool = False,
+) -> jax.Array:
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return flash_attention_pallas(
+            q,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            block_q=block_q,
+            block_kv=block_kv,
+            interpret=not on_tpu,
+        )
+    return attention_ref(q, k, v, causal=causal, window=window)

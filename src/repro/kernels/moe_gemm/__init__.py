@@ -1,0 +1,3 @@
+from repro.kernels.moe_gemm.ops import moe_gemm
+
+__all__ = ["moe_gemm"]

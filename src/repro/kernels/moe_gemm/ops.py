@@ -1,0 +1,15 @@
+"""Dispatching wrapper for the grouped expert matmul."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.moe_gemm.moe_gemm import moe_gemm_pallas
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+
+def moe_gemm(x: jax.Array, w: jax.Array, *, force_pallas: bool = False) -> jax.Array:
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return moe_gemm_pallas(x, w, interpret=not on_tpu)
+    return moe_gemm_ref(x, w)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the grouped expert matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(E,C,d) × (E,d,f) → (E,C,f) in f32 accumulation."""
+    out = jnp.einsum(
+        "ecd,edf->ecf",
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+    )
+    return out.astype(x.dtype)

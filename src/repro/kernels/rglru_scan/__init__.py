@@ -1,0 +1,3 @@
+from repro.kernels.rglru_scan.ops import rglru_scan_op
+
+__all__ = ["rglru_scan_op"]

@@ -1,0 +1,21 @@
+"""Dispatching wrapper for the RG-LRU blocked scan."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+
+
+def rglru_scan_op(
+    a: jax.Array,
+    b: jax.Array,
+    h0: jax.Array,
+    *,
+    force_pallas: bool = False,
+) -> jax.Array:
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return rglru_scan_pallas(a, b, h0, interpret=not on_tpu)
+    return rglru_scan_ref(a, b, h0)

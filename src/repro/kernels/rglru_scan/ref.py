@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: sequential linear recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t·h_{t−1} + b_t.  a, b (B,S,W); h0 (B,W) → (B,S,W)."""
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h_new = a_t * h + b_t
+        return h_new, h_new
+
+    af = a.astype(jnp.float32).swapaxes(0, 1)  # (S,B,W)
+    bf = b.astype(jnp.float32).swapaxes(0, 1)
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), (af, bf))
+    return hs.swapaxes(0, 1).astype(a.dtype)

@@ -1,0 +1,73 @@
+"""Blocked linear recurrence h_t = a_t·h_{t−1} + b_t (Pallas TPU).
+
+The RG-LRU recurrence is elementwise over the width dimension, so it tiles
+perfectly: grid (batch, width_blocks, seq_blocks) with the *sequence* dim
+innermost/sequential, carrying h across sequence blocks in VMEM scratch.
+Within a block the recurrence runs as a ``fori_loop`` over rows — a VPU
+(8×128 vector) workload, not MXU.  This is the TPU-native replacement for
+the paper's (GPU) fused linear-scan kernel: HBM traffic is exactly one read
+of (a, b) and one write of h per element, the roofline floor for a scan.
+
+VMEM per cell: 3 blocks of (BS, BW) f32 + (1, BW) carry ≈ 3·(256×512)·4 B
+≈ 1.6 MB at the default tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, carry_scr, *, bs: int):
+    js = pl.program_id(2)
+
+    @pl.when(js == 0)
+    def _init():
+        carry_scr[...] = h0_ref[0, :].astype(jnp.float32)[None, :]
+
+    a = a_ref[0].astype(jnp.float32)  # (bs, bw)
+    b = b_ref[0].astype(jnp.float32)
+
+    def row(i, h):
+        h_new = a[i] * h + b[i]
+        o_ref[0, i, :] = h_new.astype(o_ref.dtype)
+        return h_new
+
+    h_final = jax.lax.fori_loop(0, bs, row, carry_scr[0, :])
+    carry_scr[...] = h_final[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_seq", "block_width", "interpret"))
+def rglru_scan_pallas(
+    a: jax.Array,  # (B, S, W)
+    b: jax.Array,  # (B, S, W)
+    h0: jax.Array,  # (B, W)
+    *,
+    block_seq: int = 256,
+    block_width: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, s, w = a.shape
+    bs = min(block_seq, s)
+    bw = min(block_width, w)
+    assert s % bs == 0 and w % bw == 0, (s, w, bs, bw)
+    ns, nw = s // bs, w // bw
+
+    kernel = functools.partial(_kernel, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, nw, ns),
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda b_, iw, js: (b_, js, iw)),
+            pl.BlockSpec((1, bs, bw), lambda b_, iw, js: (b_, js, iw)),
+            pl.BlockSpec((1, bw), lambda b_, iw, js: (b_, iw)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bw), lambda b_, iw, js: (b_, js, iw)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, sharding resolution, multi-pod dry-run,
+roofline extraction, and the train/serve drivers."""

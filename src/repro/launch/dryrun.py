@@ -1,0 +1,210 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST set XLA_FLAGS before any other import — jax locks the device count on
+first init.  The 512 placeholder host devices exist ONLY here; smoke tests
+and benchmarks see the real single device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4_9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi    # 2×16×16 only
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (the two lines above must precede every other import)
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax import ShapeDtypeStruct
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    canon,
+    get_config,
+    input_specs,
+    shape_applicable,
+)
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import build_report
+from repro.models import make_prefill_step, make_serve_step, make_train_step
+from repro.models.common import activation_rules
+from repro.optim import AdamW
+
+RESULTS_PATH = os.environ.get("DRYRUN_RESULTS", "experiments/dryrun_results.json")
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str, *, remat=None):
+    cfg = get_config(arch)
+    if remat is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    rules = shd.rules_for(cfg, shape, mesh)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+
+    p_shapes = shd.param_shapes(cfg)
+    p_shard = shd.param_shardings(cfg, mesh, rules)
+    batch_specs = input_specs(cfg, shape)
+    b_shard = shd.batch_shardings(cfg, shape, mesh, rules)
+    rep = NamedSharding(mesh, P())
+
+    with activation_rules(rules, mesh=mesh):
+        if shape.kind == "train":
+            opt = AdamW(learning_rate=1e-4)
+            o_shapes = shd.opt_shapes(cfg, opt)
+            o_shard = shd.opt_shardings(cfg, mesh, rules)
+            step = make_train_step(cfg, opt)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, {"loss": rep, "grad_norm": rep}),
+            )
+            lowered = jitted.lower(p_shapes, o_shapes, batch_specs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            c_shard = shd.cache_shardings(cfg, shape, mesh, rules)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, b_shard),
+                out_shardings=(shd.logits_sharding(cfg, mesh, rules), c_shard),
+            )
+            lowered = jitted.lower(p_shapes, batch_specs)
+        else:  # decode
+            step = make_serve_step(cfg)
+            c_shapes = shd.cache_shapes(cfg, shape)
+            c_shard = shd.cache_shardings(cfg, shape, mesh, rules)
+            tok_shard = b_shard["tokens"]
+            pos_shard = b_shard["positions"]
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+                out_shardings=(shd.logits_sharding(cfg, mesh, rules), c_shard),
+            )
+            lowered = jitted.lower(
+                p_shapes, c_shapes, batch_specs["tokens"], batch_specs["positions"]
+            )
+    return cfg, shape, lowered, chips
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *, remat=None) -> dict:
+    t0 = time.perf_counter()
+    cfg, shape, lowered, chips = lower_cell(arch, shape_name, mesh, mesh_name, remat=remat)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    report = build_report(
+        arch=arch,
+        shape=shape,
+        cfg=cfg,
+        mesh_name=mesh_name,
+        chips=chips,
+        compiled=compiled,
+    )
+    row = report.row()
+    row.update(
+        {
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory_analysis": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+        }
+    )
+    print(
+        f"[dryrun] {arch:>22s} × {shape_name:<12s} × {mesh_name:<6s} OK  "
+        f"compute={report.compute_s:.4f}s memory={report.memory_s:.4f}s "
+        f"collective={report.collective_s:.4f}s dominant={report.dominant} "
+        f"useful={report.useful_flops_ratio:.2f} "
+        f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)",
+        flush=True,
+    )
+    print(f"  memory_analysis: {row['memory_analysis']}", flush=True)
+    print(f"  cost: flops/dev={report.hlo_flops_per_device:.3e} "
+          f"bytes/dev={report.hlo_bytes_per_device:.3e} "
+          f"wire/dev={report.wire_bytes_per_device:.3e} "
+          f"collectives={report.collectives}", flush=True)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (canon or dashed)")
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--remat", default=None, choices=["full", "none", "dots"])
+    ap.add_argument("--out", default=RESULTS_PATH)
+    args = ap.parse_args()
+
+    archs = [canon(args.arch)] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results: list[dict] = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r.get("status") == "ok"}
+
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            ok, reason = shape_applicable(cfg, SHAPES[shape_name])
+            if not ok:
+                print(f"[dryrun] {arch} × {shape_name}: SKIP ({reason})", flush=True)
+                results = [
+                    r for r in results if not (r["arch"] == arch and r["shape"] == shape_name)
+                ] + [{"arch": arch, "shape": shape_name, "mesh": "-", "status": "skip", "reason": reason}]
+                continue
+            for mesh_name, mesh in meshes:
+                if (arch, shape_name, mesh_name) in done:
+                    continue
+                try:
+                    with mesh:
+                        row = run_cell(arch, shape_name, mesh, mesh_name, remat=args.remat)
+                    results.append(row)
+                except Exception as e:  # a failure here is a bug in our sharding
+                    failures += 1
+                    traceback.print_exc()
+                    results.append(
+                        {
+                            "arch": arch,
+                            "shape": shape_name,
+                            "mesh": mesh_name,
+                            "status": "fail",
+                            "error": f"{type(e).__name__}: {e}"[:500],
+                        }
+                    )
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+    print(f"[dryrun] wrote {args.out}; failures={failures}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

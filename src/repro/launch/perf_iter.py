@@ -1,0 +1,145 @@
+"""§Perf hillclimb driver: measure one (arch × shape × mesh) cell under a
+named variant and append the result to experiments/perf_iterations.json.
+
+    PYTHONPATH=src python -m repro.launch.perf_iter --arch dbrx_132b \
+        --shape train_4k --variant chunked_attn
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.configs.base import SHAPES, canon, get_config
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import build_report
+
+OUT = "experiments/perf_iterations.json"
+
+
+def apply_variant(cfg, variant: str):
+    if variant == "baseline":
+        return cfg
+    if variant == "chunked_attn":
+        return dataclasses.replace(cfg, full_attn_max_seq=2048)
+    if variant == "remat_dots":
+        return dataclasses.replace(cfg, remat="dots")
+    if variant == "remat_none":
+        return dataclasses.replace(cfg, remat="none")
+    if variant == "chunked_attn+remat_dots":
+        return dataclasses.replace(cfg, full_attn_max_seq=2048, remat="dots")
+    if variant == "seq_parallel":  # handled via rules_for wrapper in main()
+        return cfg
+    if variant == "seq_parallel+chunked_attn":
+        return dataclasses.replace(cfg, full_attn_max_seq=2048)
+    raise ValueError(variant)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--note", default="")
+    ap.add_argument("--dump-collectives", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun  # imports after XLA_FLAGS
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    arch = canon(args.arch)
+    base_cfg = get_config(arch)
+    cfg = apply_variant(base_cfg, args.variant)
+
+    # Patch the registry lookup so dryrun.lower_cell sees the variant config.
+    import repro.configs.base as cfgbase
+
+    orig_get = cfgbase.get_config
+    cfgbase.get_config = lambda a, smoke=False: cfg if canon(a) == arch else orig_get(a, smoke=smoke)
+    dryrun.get_config = cfgbase.get_config
+    if "seq_parallel" in args.variant:
+        # Megatron-SP: hidden stream sequence-sharded over the model axis —
+        # the per-layer TP all-reduce becomes reduce-scatter + all-gather.
+        orig_rules = shd.rules_for
+
+        def sp_rules(cfg_, shape_, mesh_):
+            r = orig_rules(cfg_, shape_, mesh_)
+            if shape_.seq_len % mesh_.shape["model"] == 0:
+                # vocab must leave the model axis: the (B, S, V) logits would
+                # otherwise need 'model' on two dims.
+                r = dict(r, seq="model", vocab=None)
+            return r
+
+        shd.rules_for = sp_rules
+        dryrun.shd.rules_for = sp_rules
+    try:
+        t0 = time.perf_counter()
+        with mesh:
+            _cfg, shape, lowered, chips = dryrun.lower_cell(
+                arch, args.shape, mesh, args.mesh
+            )
+            compiled = lowered.compile()
+        dt = time.perf_counter() - t0
+        report = build_report(
+            arch=arch,
+            shape=shape,
+            cfg=cfg,
+            mesh_name=args.mesh,
+            chips=chips,
+            compiled=compiled,
+        )
+        mem = compiled.memory_analysis()
+    finally:
+        cfgbase.get_config = orig_get
+        dryrun.get_config = orig_get
+        if "seq_parallel" in args.variant:
+            shd.rules_for = orig_rules
+            dryrun.shd.rules_for = orig_rules
+
+    row = report.row()
+    row.update(
+        {
+            "variant": args.variant,
+            "note": args.note,
+            "compile_s": round(dt, 1),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    )
+    rows = []
+    if os.path.exists(OUT):
+        rows = json.load(open(OUT))
+    rows.append(row)
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    json.dump(rows, open(OUT, "w"), indent=1, default=str)
+    print(
+        f"[perf] {arch}×{args.shape}×{args.mesh} variant={args.variant}: "
+        f"compute={report.compute_s:.3f}s memory={report.memory_s:.3f}s "
+        f"collective={report.collective_s:.3f}s dominant={report.dominant} "
+        f"useful={report.useful_flops_ratio:.2f} peak={row['peak_bytes']}"
+    )
+    if args.dump_collectives:
+        from repro.launch import roofline as rl
+
+        text = compiled.as_text()
+        comps, parsed, shapes, mult, fusion_bodies = rl._parse_module(text)
+        items = []
+        for cname, instrs in parsed.items():
+            m = mult.get(cname, 1.0)
+            for name, op, line in instrs:
+                got = rl._collective_bytes_of_line(line)
+                if got:
+                    items.append((got[1] * m / 1e9, got[0], m, line.strip()[:120]))
+        items.sort(reverse=True)
+        for it in items[:10]:
+            print(f"  {it[0]:9.1f}GB x{it[2]:5.0f} {it[1]:18s} {it[3]}")
+
+
+if __name__ == "__main__":
+    main()

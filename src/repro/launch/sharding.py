@@ -1,0 +1,164 @@
+"""Sharding resolution: logical axes → NamedSharding trees per (arch, shape).
+
+The production policy (DESIGN.md §5):
+
+* batch over ``("pod","data")`` (pure DP on the pod axis),
+* TP over ``model`` (heads / ff columns / experts / lru width / vocab),
+* FSDP over ``data`` (params + optimizer state; XLA all-gathers per layer),
+* decode caches head-sharded when kv_heads divides the model axis, else
+  sequence-sharded (flash-decode style partial softmax, handled by GSPMD
+  reductions over the sharded seq dim),
+* degenerate batches (long_500k: batch 1) replicate the batch axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec, input_specs
+from repro.models import kvcache
+from repro.models.common import DEFAULT_RULES, ParamSpec, logical_spec
+from repro.models.transformer import param_specs
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict[str, Any]:
+    """Resolve the logical→mesh rules for one (arch, shape, mesh) cell.
+
+    Explicit arg shardings require exact divisibility under GSPMD, so each
+    logical axis falls back to replication when its size does not divide the
+    mesh axis (e.g. llama3.2's 24 heads on a 16-wide model axis → attention
+    params FSDP-only; the MLP keeps TP via d_ff).  These fallbacks are
+    baseline policy — §Perf iterates on the ones that dominate the roofline.
+    """
+    rules = dict(DEFAULT_RULES)
+    model = mesh_axis_size(mesh, "model")
+    data = mesh_axis_size(mesh, "data")
+
+    div = lambda n, m: (n > 0) and (n % m == 0)
+    rules["heads"] = "model" if div(cfg.num_heads, model) else None
+    rules["kv_heads"] = None  # replicated by default (GQA kv heads are few)
+    rules["ff"] = "model" if div(cfg.d_ff, model) else None
+    rules["vocab"] = "model" if div(cfg.vocab_size, model) else None
+    rules["embed"] = "data" if div(cfg.d_model, data) else None
+    if cfg.moe is not None:
+        rules["expert"] = "model" if div(cfg.moe.num_experts, model) else None
+    lru = cfg.lru_width or cfg.d_model
+    rules["lru"] = "model" if div(lru, model) else None
+
+    has_pod = "pod" in mesh.shape
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh_axis_size(mesh, a)
+    if shape.global_batch % dp != 0 or shape.global_batch < dp:
+        # Degenerate batch (long_500k): replicate batch, keep TP.
+        rules["batch"] = None
+        rules["cache_batch"] = None
+    else:
+        rules["batch"] = batch_axes
+        rules["cache_batch"] = batch_axes
+
+    if shape.kind in ("decode", "prefill"):  # both produce/carry caches
+        cap = min(shape.seq_len, cfg.max_seq_len)
+        if div(cfg.num_kv_heads, model):
+            rules["cache_heads"], rules["cache_seq"] = "model", None
+        elif div(cap, model):
+            # Sequence-sharded cache (flash-decode): kv heads replicated.
+            rules["cache_heads"], rules["cache_seq"] = None, "model"
+        else:
+            rules["cache_heads"], rules["cache_seq"] = None, None
+        if cfg.local_window and min(cfg.local_window, shape.seq_len) % model != 0:
+            # Ring-buffer caches with non-dividing windows stay replicated.
+            rules["cache_seq"] = None if rules["cache_heads"] is None else rules["cache_seq"]
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Spec/shape trees
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    dtype = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda s: ShapeDtypeStruct(s.shape, dtype),
+        param_specs(cfg),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_shardings(cfg: ModelConfig, mesh, rules) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, logical_spec(s.logical, rules)),
+        param_specs(cfg),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def opt_shapes(cfg: ModelConfig, optimizer) -> Any:
+    from repro.optim.adamw import AdamWState
+
+    ps = param_shapes(cfg)
+    f32 = lambda sd: ShapeDtypeStruct(sd.shape, jnp.float32)
+    return AdamWState(
+        step=ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(f32, ps),
+        v=jax.tree.map(f32, ps),
+    )
+
+
+def opt_shardings(cfg: ModelConfig, mesh, rules) -> Any:
+    from repro.optim.adamw import AdamWState
+
+    psh = param_shardings(cfg, mesh, rules)
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=psh,
+        v=psh,
+    )
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh, rules) -> dict:
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, sd in specs.items():
+        if sd.ndim == 3:  # (B, S, D) embeds
+            spec = P(rules["batch"], rules["seq"], None)
+        elif sd.ndim == 2:  # (B, S) tokens/labels
+            spec = P(rules["batch"], rules["seq"])
+        else:  # (B,) positions
+            spec = P(rules["batch"])
+        out[name] = NamedSharding(mesh, spec)
+    return out
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    enc_len = shape.seq_len if cfg.is_encdec else 0
+    return kvcache.cache_specs(cfg, shape.global_batch, shape.seq_len, enc_len=enc_len)
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh, rules) -> dict:
+    logical = kvcache.cache_logical(cfg)
+    shapes = cache_shapes(cfg, shape)
+    return jax.tree.map(
+        lambda ax, sd: NamedSharding(mesh, logical_spec(ax, rules)),
+        logical,
+        shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        ),
+    )
+
+
+def logits_sharding(cfg: ModelConfig, mesh, rules) -> NamedSharding:
+    return NamedSharding(mesh, P(rules["batch"], None, rules["vocab"]))

@@ -1,0 +1,23 @@
+"""LM workloads hosted by the framework: the 10 assigned architectures.
+
+A single :class:`repro.models.transformer.Model` assembles any of the
+families (dense GQA, MoE, RG-LRU hybrid, enc-dec, VLM backbone, xLSTM) from a
+:class:`repro.configs.base.ModelConfig` block pattern; layers are stacked with
+``jax.lax.scan`` so HLO size and compile time stay flat in depth.
+"""
+
+from repro.models.transformer import (
+    Model,
+    init_params,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "Model",
+    "init_params",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+]

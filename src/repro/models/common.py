@@ -1,0 +1,238 @@
+"""Shared model primitives: norms, RoPE variants, initializers, and the
+logical-axis sharding rules that map parameters onto the production mesh.
+
+Sharding convention (GSPMD, MaxText-style): parameters carry *logical* axis
+names; `logical_spec` resolves them to mesh axes via a rules table.  The
+default rules implement TP over ``model`` + FSDP over ``data`` (ZeRO-3-ish:
+params and optimizer state sharded over the data axis, all-gathered per layer
+by XLA), with the ``pod`` axis as pure DP for gradients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical axis rules
+# ---------------------------------------------------------------------------
+
+# logical axis name → mesh axis (or None = replicated)
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),  # activation batch
+    "seq": None,  # sequence (sharded only under SP rules)
+    "embed": "data",  # model width — FSDP shard
+    "embed_nofsdp": None,
+    "vocab": "model",  # vocab — TP shard
+    "heads": "model",  # attention heads — TP shard
+    "kv_heads": None,  # kv heads (often < model axis; replicate by default)
+    "head_dim": None,
+    "ff": "model",  # MLP hidden — TP shard
+    "expert": "model",  # MoE experts — EP shard
+    "layers": None,  # scan-stacked layer dim
+    "lru": "model",  # recurrence width — TP shard
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "cache_heads": "model",
+}
+
+# Sequence-parallel override used by long-context shapes (see launch/dryrun).
+SP_RULES = dict(DEFAULT_RULES, seq="model", cache_seq="model", cache_heads=None)
+
+
+def logical_spec(axes: tuple[Optional[str], ...], rules: dict[str, Any] | None = None) -> P:
+    rules = rules or DEFAULT_RULES
+    resolved = []
+    for ax in axes:
+        if ax is None:
+            resolved.append(None)
+        else:
+            resolved.append(rules.get(ax))
+    return P(*resolved)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (set during distributed lowering)
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_RULES: list[Optional[dict]] = [None]
+_ACTIVATION_MESH: list[Any] = [None]
+
+
+class activation_rules:
+    """Context manager: enable with_sharding_constraint on activations.
+
+    The dry-run / production launchers trace step functions inside this
+    context so GSPMD propagation stays pinned to the intended layouts (found
+    necessary: tied-embedding contractions otherwise de-shard the batch axis
+    and cascade full-batch all-reduces through the backward scan — §Perf
+    iteration 1).  Also carries the mesh: ``get_abstract_mesh()`` is empty
+    inside a jit trace under a plain ``with mesh:`` block, so shard_map-based
+    layers (MoE expert parallelism) read the mesh from here.  On
+    single-device CPU (tests) the context is never entered and `constrain`
+    is a no-op.
+    """
+
+    def __init__(self, rules: dict, mesh: Any = None):
+        self.rules = rules
+        self.mesh = mesh
+
+    def __enter__(self):
+        _ACTIVATION_RULES.append(self.rules)
+        _ACTIVATION_MESH.append(self.mesh)
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVATION_RULES.pop()
+        _ACTIVATION_MESH.pop()
+        return False
+
+
+def current_mesh():
+    return _ACTIVATION_MESH[-1]
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    rules = _ACTIVATION_RULES[-1]
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_spec(tuple(axes), rules))
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """A parameter: shape, dtype, logical axes, initializer."""
+
+    shape: tuple[int, ...]
+    logical: tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def initializer(self, key: jax.Array, dtype: jnp.dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        std = self.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape) * std).astype(dtype)
+
+
+def tree_logical(tree_specs: Any) -> Any:
+    """Map a tree of ParamSpec to its logical axes (for sharding resolution)."""
+    return jax.tree.map(
+        lambda s: s.logical, tree_specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def init_from_specs(tree_specs: Any, key: jax.Array, dtype: jnp.dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        tree_specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.initializer(k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    normed = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+def make_norm(kind: str) -> Callable[..., jax.Array]:
+    return rms_norm if kind == "rmsnorm" else layer_norm
+
+
+def norm_specs(kind: str, d: int) -> dict[str, ParamSpec]:
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), (None,), init="zeros")}
+    return {
+        "scale": ParamSpec((d,), (None,), init="ones"),
+        "bias": ParamSpec((d,), (None,), init="zeros"),
+    }
+
+
+def apply_norm(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # (..., S, 1, hd/2) → broadcast over heads
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(
+        x.dtype
+    )
+
+
+def mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """Split hd/2 rotary dims into (t, h, w) sections — qwen2-vl uses 16/24/24
+    for hd=128; generalize proportionally."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return t, h, w
+
+
+def apply_mrope(x: jax.Array, positions_thw: jax.Array, theta: float) -> jax.Array:
+    """M-RoPE: positions_thw (..., S, 3) with temporal/height/width ids."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (half,)
+    t, h, w = mrope_sections(hd)
+    sec = jnp.concatenate(
+        [jnp.zeros(t, jnp.int32), jnp.ones(h, jnp.int32), jnp.full(w, 2, jnp.int32)]
+    )  # (half,) → which position stream drives each rotary dim
+    pos = positions_thw.astype(jnp.float32)[..., sec]  # (..., S, half)
+    angles = pos * freqs  # (..., S, half)
+    angles = angles[..., None, :]  # broadcast over heads
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(
+        x.dtype
+    )
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """Text-only M-RoPE: all three streams share the token index."""
+    return jnp.stack([positions] * 3, axis=-1)
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return logits
+    return jnp.tanh(logits / cap) * cap

@@ -1,0 +1,163 @@
+"""Decode caches for every block kind, as pytrees with a stacked scan dim.
+
+Cache layout mirrors the parameter layout: one stacked entry per pattern
+position (leading dim = cycles), plus unstacked entries for remainder blocks
+and, for enc-dec models, a per-decoder-layer cross-attention cache.
+
+``cache_specs`` builds the ShapeDtypeStruct version for the dry-run (no
+allocation); ``init_cache`` materializes zeros for real serving.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+
+from repro.configs.base import ATTN, ATTN_MOE, LOCAL_ATTN, MLSTM, RGLRU, SLSTM, ModelConfig
+
+
+def _block_cache_shapes(
+    cfg: ModelConfig, kind: str, batch: int, capacity: int
+) -> dict[str, tuple[tuple[int, ...], Any]]:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    h = cfg.num_heads
+    d = cfg.d_model
+    if kind in (ATTN, ATTN_MOE):
+        cap = min(capacity, cfg.max_seq_len)
+        return {
+            "k": ((batch, cap, kv, hd), jnp.bfloat16),
+            "v": ((batch, cap, kv, hd), jnp.bfloat16),
+        }
+    if kind == LOCAL_ATTN:
+        w = min(cfg.local_window, capacity)
+        return {
+            "k": ((batch, w, kv, hd), jnp.bfloat16),
+            "v": ((batch, w, kv, hd), jnp.bfloat16),
+        }
+    if kind == RGLRU:
+        w = cfg.lru_width or d
+        return {
+            "h": ((batch, w), jnp.float32),
+            "conv": ((batch, 3, w), jnp.bfloat16),
+        }
+    if kind == MLSTM:
+        mhd = d // h
+        return {
+            "C": ((batch, h, mhd, mhd), jnp.float32),
+            "n": ((batch, h, mhd), jnp.float32),
+            "m": ((batch, h), jnp.float32),
+        }
+    if kind == SLSTM:
+        return {
+            "c": ((batch, d), jnp.float32),
+            "n": ((batch, d), jnp.float32),
+            "h": ((batch, d), jnp.bfloat16),
+            "m": ((batch, d), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+_LOGICAL_BY_KIND: dict[str, dict[str, tuple]] = {
+    ATTN: {
+        "k": ("cache_batch", "cache_seq", "cache_heads", None),
+        "v": ("cache_batch", "cache_seq", "cache_heads", None),
+    },
+    LOCAL_ATTN: {
+        "k": ("cache_batch", "cache_seq", "cache_heads", None),
+        "v": ("cache_batch", "cache_seq", "cache_heads", None),
+    },
+    RGLRU: {"h": ("cache_batch", "lru"), "conv": ("cache_batch", None, "lru")},
+    MLSTM: {
+        "C": ("cache_batch", "heads", None, None),
+        "n": ("cache_batch", "heads", None),
+        "m": ("cache_batch", "heads"),
+    },
+    SLSTM: {
+        "c": ("cache_batch", None),
+        "n": ("cache_batch", None),
+        "h": ("cache_batch", None),
+        "m": ("cache_batch", None),
+    },
+}
+_LOGICAL_BY_KIND[ATTN_MOE] = _LOGICAL_BY_KIND[ATTN]
+
+
+def cache_logical(cfg: ModelConfig) -> dict:
+    """Logical-axis tree mirroring cache_specs/init_cache structure."""
+    out: dict[str, Any] = {"scan": [], "rem": []}
+    for kind in cfg.pattern:
+        out["scan"].append(
+            {n: ("layers", *ax) for n, ax in _LOGICAL_BY_KIND[kind].items()}
+        )
+    for kind in cfg.remainder:
+        out["rem"].append(dict(_LOGICAL_BY_KIND[kind]))
+    if cfg.is_encdec:
+        out["cross"] = {
+            "k": ("layers", "cache_batch", "cache_seq", "cache_heads", None),
+            "v": ("layers", "cache_batch", "cache_seq", "cache_heads", None),
+        }
+    return out
+
+
+def _build(
+    cfg: ModelConfig,
+    batch: int,
+    capacity: int,
+    make: Callable[[tuple[int, ...], Any], Any],
+    enc_len: int = 0,
+) -> dict:
+    cache: dict[str, Any] = {"scan": [], "rem": []}
+    for kind in cfg.pattern:
+        shapes = _block_cache_shapes(cfg, kind, batch, capacity)
+        cache["scan"].append(
+            {n: make((cfg.cycles, *shp), dt) for n, (shp, dt) in shapes.items()}
+        )
+    for kind in cfg.remainder:
+        shapes = _block_cache_shapes(cfg, kind, batch, capacity)
+        cache["rem"].append({n: make(shp, dt) for n, (shp, dt) in shapes.items()})
+    if cfg.is_encdec:
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        # Cross-attention k/v over the encoder sequence, one per decoder layer.
+        cache["cross"] = {
+            "k": make((cfg.cycles, batch, enc_len, kv, hd), jnp.bfloat16),
+            "v": make((cfg.cycles, batch, enc_len, kv, hd), jnp.bfloat16),
+        }
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int, enc_len: int = 0) -> dict:
+    return _build(
+        cfg, batch, capacity, lambda s, d: ShapeDtypeStruct(s, d), enc_len=enc_len
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, enc_len: int = 0) -> dict:
+    return _build(cfg, batch, capacity, lambda s, d: jnp.zeros(s, d), enc_len=enc_len)
+
+
+def cache_capacity(cfg: ModelConfig, kind: str, capacity: int) -> int:
+    if kind == LOCAL_ATTN:
+        return min(cfg.local_window, capacity)
+    return min(capacity, cfg.max_seq_len)
+
+
+def update_kv(
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    positions: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Write one token's k/v at per-batch positions (mod capacity)."""
+    cap = cache_k.shape[1]
+    idx = positions % cap
+
+    def write(c, n, i):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+
+    ck = jax.vmap(write)(cache_k, k_new, idx)
+    cv = jax.vmap(write)(cache_v, v_new, idx)
+    return ck, cv

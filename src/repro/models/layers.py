@@ -1,0 +1,262 @@
+"""Attention (GQA full / chunked-flash / local-window / decode / cross) and
+MLP (SwiGLU / GeGLU / GELU) layers, functional style.
+
+GQA is computed with an explicit group dimension so repeated KV heads are
+never materialized:  q (B,S,KV,G,hd) × k (B,T,KV,hd) → scores (B,KV,G,S,T).
+
+Long sequences use a chunked, online-softmax ("flash-style") path built from
+``jax.lax.scan`` so activation memory is O(S·chunk) rather than O(S²) — the
+XLA fallback for the Pallas kernel in :mod:`repro.kernels.flash_attention`
+(selected on TPU).  The causal chunked path skips fully-masked KV chunks'
+*memory*, not their FLOPs; the §Perf log tracks that overhead explicitly.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    ParamSpec,
+    apply_mrope,
+    apply_rope,
+    norm_specs,
+    text_mrope_positions,
+)
+
+NEG_INF = -2.0e38
+CHUNK_Q = 1024
+CHUNK_KV = 1024
+FULL_ATTN_MAX_SEQ = 8192  # above this, use the chunked path
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig, *, cross: bool = False) -> dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+        **{f"norm_{k}": v for k, v in norm_specs(cfg.norm_kind, d).items()},
+    }
+
+
+def mlp_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d, f), ("embed", "ff")),
+            "w_up": ParamSpec((d, f), ("embed", "ff")),
+            "w_down": ParamSpec((f, d), ("ff", "embed")),
+            **{f"norm_{k}": v for k, v in norm_specs(cfg.norm_kind, d).items()},
+        }
+    return {
+        "w_up": ParamSpec((d, f), ("embed", "ff")),
+        "w_down": ParamSpec((f, d), ("ff", "embed")),
+        **{f"norm_{k}": v for k, v in norm_specs(cfg.norm_kind, d).items()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Projections + positional encoding
+# ---------------------------------------------------------------------------
+
+
+def qkv_project(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    return q, k, v
+
+
+def position_encode(
+    cfg: ModelConfig, q: jax.Array, k: jax.Array, positions: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    if cfg.rope_kind == "rope":
+        return (
+            apply_rope(q, positions, cfg.rope_theta),
+            apply_rope(k, positions, cfg.rope_theta),
+        )
+    if cfg.rope_kind == "mrope":
+        thw = text_mrope_positions(positions)
+        return (
+            apply_mrope(q, thw, cfg.rope_theta),
+            apply_mrope(k, thw, cfg.rope_theta),
+        )
+    return q, k  # "none" | "learned" (handled at the embedding)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (GQA, grouped)
+# ---------------------------------------------------------------------------
+
+
+def _grouped(q: jax.Array, num_kv: int) -> jax.Array:
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, hd)
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Unchunked GQA attention.  q (B,S,H,hd); k,v (B,T,KV,hd)."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    qg = _grouped(q, kvh)  # (B,S,KV,G,hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    # Positions: q_offset may be scalar or per-batch (B,) (windowed decode).
+    offset = jnp.asarray(q_offset)
+    spos = jnp.arange(s)[None, :, None] + offset.reshape(-1, 1, 1)  # (B?|1, S, 1)
+    tpos = jnp.arange(t)[None, None, :]  # (1, 1, T)
+    mask = jnp.ones(jnp.broadcast_shapes(spos.shape, tpos.shape), dtype=bool)
+    if causal:
+        mask &= tpos <= spos
+    if window is not None:
+        mask &= tpos > spos - window
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    if kv_len is not None:  # decode: only the first kv_len cache slots exist
+        valid = jnp.arange(t)[None, :] < kv_len[:, None]  # (B,T)
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk_q: int = CHUNK_Q,
+    chunk_kv: int = CHUNK_KV,
+) -> jax.Array:
+    """Flash-style online-softmax attention with O(S·chunk) memory.
+
+    Outer scan over query chunks; inner scan over KV chunks with an
+    (m, l, acc) carry.  Masked-out chunks contribute nothing numerically;
+    fully-masked chunks are still *computed* on the XLA path (see module
+    docstring) — the Pallas kernel version skips them.
+    """
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nq, nkv = s // chunk_q, t // chunk_kv
+    assert s % chunk_q == 0 and t % chunk_kv == 0, (s, t, chunk_q, chunk_kv)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qg = _grouped(q, kvh).reshape(b, nq, chunk_q, kvh, g, hd)
+    kc = k.reshape(b, nkv, chunk_kv, kvh, hd)
+    vc = v.reshape(b, nkv, chunk_kv, kvh, hd)
+
+    def q_block(qi: jax.Array, q_chunk: jax.Array) -> jax.Array:
+        # q_chunk: (B, Cq, KV, G, hd)
+        m0 = jnp.full((b, kvh, g, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, chunk_q, hd), jnp.float32)
+
+        def kv_block(carry, inputs):
+            m, l, acc = carry
+            kj, k_chunk, v_chunk = inputs
+            sc = (
+                jnp.einsum("bskgh,btkh->bkgst", q_chunk, k_chunk).astype(jnp.float32)
+                * scale
+            )
+            spos = qi * chunk_q + jnp.arange(chunk_q)[:, None]
+            tpos = kj * chunk_kv + jnp.arange(chunk_kv)[None, :]
+            mask = jnp.ones((chunk_q, chunk_kv), dtype=bool)
+            if causal:
+                mask &= tpos <= spos
+            if window is not None:
+                mask &= tpos > spos - window
+            sc = jnp.where(mask, sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgst,btkh->bkgsh", p.astype(v_chunk.dtype), v_chunk)
+            acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        ks = jnp.arange(nkv)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block,
+            (m0, l0, a0),
+            (ks, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+        )
+        out = acc / jnp.maximum(l, 1e-37)[..., None]  # (B,KV,G,Cq,hd)
+        return jnp.moveaxis(out, 3, 1).astype(q.dtype)  # (B,Cq,KV,G,hd)
+
+    qs = jnp.arange(nq)
+    outs = jax.lax.map(
+        lambda args: q_block(args[0], args[1]), (qs, jnp.moveaxis(qg, 1, 0))
+    )  # (nq, B, Cq, KV, G, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return out
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    max_full_seq: int = FULL_ATTN_MAX_SEQ,
+) -> jax.Array:
+    s = q.shape[1]
+    if s <= max_full_seq or s % CHUNK_Q != 0 or k.shape[1] % CHUNK_KV != 0:
+        return full_attention(q, k, v, causal=causal, window=window)
+    return chunked_attention(q, k, v, causal=causal, window=window)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_len: jax.Array,
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """One-token decode against a (B,T,KV,hd) cache with per-batch lengths."""
+    return full_attention(
+        q,
+        k_cache,
+        v_cache,
+        causal=False,
+        window=window,
+        q_offset=jnp.maximum(kv_len - 1, 0) if window is not None else 0,
+        kv_len=kv_len,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_forward(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp_kind == "swiglu":
+        gate = jax.nn.silu(x @ p["w_gate"])
+        return (gate * (x @ p["w_up"])) @ p["w_down"]
+    if cfg.mlp_kind == "geglu":
+        gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+        return (gate * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"], approximate=True) @ p["w_down"]

@@ -1,0 +1,140 @@
+"""RecurrentGemma RG-LRU block (arXiv:2402.19427).
+
+Block structure (Griffin recurrent block):
+
+    x ─ norm ─┬─ linear → GeLU ───────────────────┐
+              └─ linear → conv1d(4) → RG-LRU ──────┤⊙ → linear → + residual
+
+RG-LRU recurrence (per channel):
+
+    r_t = σ(W_a x_t + b_a)                    recurrence gate
+    i_t = σ(W_x x_t + b_x)                    input gate
+    a_t = exp(−c · softplus(Λ) · r_t)         gated decay, a ∈ (0,1)
+    h_t = a_t · h_{t−1} + √(1 − a_t²) · (i_t ⊙ x_t)
+
+TPU adaptation: the GPU reference uses a fused linear-scan CUDA kernel; here
+the training/prefill path is a ``jax.lax.associative_scan`` over (a, b) pairs
+(log-depth on the VPU) with a Pallas blocked-scan kernel as the TPU hot-spot
+implementation (repro.kernels.rglru_scan); decode is the O(1) step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, norm_specs
+
+RGLRU_C = 8.0  # the paper's fixed decay temperature
+CONV_WIDTH = 4
+
+
+def rglru_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "w_gate_branch": ParamSpec((d, w), ("embed", "lru")),
+        "w_x_branch": ParamSpec((d, w), ("embed", "lru")),
+        "conv_w": ParamSpec((CONV_WIDTH, w), (None, "lru")),
+        "conv_b": ParamSpec((w,), ("lru",), init="zeros"),
+        "w_a": ParamSpec((w, w), ("lru", None)),
+        "b_a": ParamSpec((w,), (None,), init="zeros"),
+        "w_i": ParamSpec((w, w), ("lru", None)),
+        "b_i": ParamSpec((w,), (None,), init="zeros"),
+        "lam": ParamSpec((w,), (None,), init="ones"),  # Λ (softplus → decay)
+        "w_out": ParamSpec((w, d), ("lru", "embed")),
+        **{f"norm_{k}": v for k, v in norm_specs(cfg.norm_kind, d).items()},
+    }
+
+
+def _decay(p: dict, gated_x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Return (a_t, gated input b_t) for the recurrence h = a·h⁻ + b."""
+    r = jax.nn.sigmoid(gated_x @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(gated_x @ p["w_i"] + p["b_i"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r  # (…, w)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * gated_x)
+    return a, b
+
+
+def conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width 4.  x (B,S,W); w (4,W)."""
+    pads = jnp.pad(x, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    out = sum(
+        pads[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(CONV_WIDTH)
+    )
+    return out + b
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t h_{t−1} + b_t over axis 1, via associative scan."""
+    if h0 is not None:
+        # Fold h0 into the first step: b_0 += a_0 · h0
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_forward(
+    cfg: ModelConfig, p: dict, x_branch: jax.Array, h0: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Sequence form.  x_branch (B,S,W) post-conv; returns (h_seq, h_last)."""
+    a, b = _decay(p, x_branch.astype(jnp.float32))
+    h = rglru_scan(a, b, h0)
+    return h.astype(x_branch.dtype), h[:, -1, :]
+
+
+def rglru_step(
+    cfg: ModelConfig, p: dict, x_t: jax.Array, h_prev: jax.Array
+) -> jax.Array:
+    """Decode step.  x_t (B,W); h_prev (B,W) → h_t."""
+    a, bb = _decay(p, x_t.astype(jnp.float32))
+    return (a * h_prev + bb).astype(x_t.dtype)
+
+
+def rglru_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Full Griffin recurrent block.  x (B,S,d).
+
+    With ``cache`` (decode): uses/updates {"h": (B,W), "conv": (B,3,W)}.
+    """
+    from repro.models.common import apply_norm
+
+    normed = apply_norm(cfg.norm_kind, {k[5:]: v for k, v in p.items() if k.startswith("norm_")}, x)
+    gate = jax.nn.gelu(normed @ p["w_gate_branch"], approximate=True)
+    xb = normed @ p["w_x_branch"]
+
+    if cache is None:
+        xb_conv = conv1d_causal(xb, p["conv_w"], p["conv_b"])
+        h, h_last = rglru_forward(cfg, p, xb_conv)
+        out = (gate * h) @ p["w_out"]
+        # Built decode cache: final recurrent state + last 3 raw conv inputs.
+        s = xb.shape[1]
+        if s >= 3:
+            conv_buf = xb[:, -3:, :]
+        else:
+            conv_buf = jnp.pad(xb, ((0, 0), (3 - s, 0), (0, 0)))
+        built = {"h": h_last.astype(jnp.float32), "conv": conv_buf}
+        return x + out, built
+
+    # Decode: xb (B,1,W). Conv over the rolling buffer of the last 3 inputs.
+    xb_t = xb[:, 0, :]
+    conv_buf = cache["conv"]  # (B, 3, W) — previous inputs, oldest first
+    window = jnp.concatenate([conv_buf, xb_t[:, None, :]], axis=1)  # (B,4,W)
+    conv_out = jnp.einsum("bcw,cw->bw", window, p["conv_w"]) + p["conv_b"]
+    h_t = rglru_step(cfg, p, conv_out, cache["h"])
+    out = (gate[:, 0, :] * h_t) @ p["w_out"]
+    new_cache = {"h": h_t, "conv": window[:, 1:, :]}
+    return x + out[:, None, :], new_cache

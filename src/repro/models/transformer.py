@@ -1,0 +1,559 @@
+"""Model assembly: any assigned architecture from its block pattern.
+
+Layers are stacked with ``jax.lax.scan`` over *pattern cycles* (params carry a
+leading ``cycles`` dim), so HLO size and compile time are flat in depth —
+essential for dry-running 40-layer models on 512 virtual devices.  Remainder
+blocks (e.g. recurrentgemma's trailing two RG-LRU layers) run outside the
+scan.  Remat (``jax.checkpoint``) wraps the cycle body per config policy.
+
+Three public step builders:
+
+* ``make_train_step``  — loss + grads + optimizer update (training shapes)
+* ``make_prefill_step``— forward + cache construction (prefill shapes)
+* ``make_serve_step``  — one-token decode against a cache (decode shapes)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ATTN,
+    ATTN_MOE,
+    LOCAL_ATTN,
+    MLSTM,
+    RGLRU,
+    SLSTM,
+    ModelConfig,
+)
+from repro.models import kvcache as kv
+from repro.models.common import (
+    ParamSpec,
+    apply_norm,
+    constrain,
+    init_from_specs,
+    norm_specs,
+    softcap,
+)
+from repro.models.layers import (
+    attention,
+    attn_specs,
+    decode_attention,
+    full_attention,
+    mlp_forward,
+    mlp_specs,
+    position_encode,
+    qkv_project,
+)
+from repro.models.moe import moe_forward, moe_specs
+from repro.models.rglru import rglru_block, rglru_specs
+from repro.models.xlstm import mlstm_block, mlstm_specs, slstm_block, slstm_specs
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _block_specs(cfg: ModelConfig, kind: str, *, with_cross: bool = False) -> dict:
+    if kind == ATTN:
+        s = {"attn": attn_specs(cfg), "mlp": mlp_specs(cfg)}
+    elif kind == ATTN_MOE:
+        s = {"attn": attn_specs(cfg), "moe": moe_specs(cfg)}
+    elif kind == LOCAL_ATTN:
+        s = {"attn": attn_specs(cfg), "mlp": mlp_specs(cfg)}
+    elif kind == RGLRU:
+        s = {"rglru": rglru_specs(cfg), "mlp": mlp_specs(cfg)}
+    elif kind == MLSTM:
+        s = {"mlstm": mlstm_specs(cfg)}
+    elif kind == SLSTM:
+        s = {"slstm": slstm_specs(cfg)}
+    else:
+        raise ValueError(kind)
+    if with_cross:
+        s["cross"] = attn_specs(cfg, cross=True)
+    return s
+
+
+def _stack_spec(spec: ParamSpec, n: int) -> ParamSpec:
+    return ParamSpec(
+        shape=(n, *spec.shape),
+        logical=("layers", *spec.logical),
+        init=spec.init,
+        scale=spec.scale,
+    )
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    # NB: the embedding's d_model dim is deliberately NOT FSDP-sharded —
+    # sharding it over "data" makes the (un)embedding contraction conflict
+    # with batch-over-data activations and GSPMD de-shards the batch
+    # (full-batch f32 logits all-gathers; §Perf iteration 1).
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed_nofsdp")),
+        "final_norm": norm_specs(cfg.norm_kind, d),
+        "blocks": [],
+        "rem_blocks": [],
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, v), ("embed_nofsdp", "vocab"))
+    if cfg.rope_kind == "learned":
+        specs["pos_embed"] = ParamSpec((cfg.max_seq_len, d), (None, "embed"))
+    with_cross = cfg.is_encdec
+    for kind in cfg.pattern:
+        blk = _block_specs(cfg, kind, with_cross=with_cross)
+        specs["blocks"].append(
+            jax.tree.map(
+                lambda s: _stack_spec(s, cfg.cycles),
+                blk,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            )
+        )
+    for kind in cfg.remainder:
+        specs["rem_blocks"].append(_block_specs(cfg, kind, with_cross=with_cross))
+    if cfg.is_encdec:
+        enc_blk = _block_specs(cfg, ATTN)
+        specs["encoder"] = {
+            "blocks": jax.tree.map(
+                lambda s: _stack_spec(s, cfg.encoder_layers),
+                enc_blk,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            ),
+            "final_norm": norm_specs(cfg.norm_kind, d),
+            "pos_embed": ParamSpec((1 << 16, d), (None, "embed")),
+        }
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    return init_from_specs(param_specs(cfg), key, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _norms(p: dict) -> dict:
+    return {k[5:]: v for k, v in p.items() if k.startswith("norm_")}
+
+
+def _attn_part(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    cache: Optional[dict],
+    decode_positions: Optional[jax.Array],
+) -> tuple[jax.Array, dict]:
+    """Attention sublayer.  Returns (residual-added x, built/updated cache)."""
+    h = apply_norm(cfg.norm_kind, _norms(p), x)
+    q, k_, v_ = qkv_project(cfg, p, h)
+    if cache is None:
+        q, k_ = position_encode(cfg, q, k_, positions)
+        out = attention(
+            q, k_, v_, causal=causal, window=window, max_full_seq=cfg.full_attn_max_seq
+        )
+        new_cache = {"k": k_, "v": v_}  # full-sequence kv = prefill-built cache
+    else:
+        pos = decode_positions  # (B,)
+        q, k_ = position_encode(cfg, q, k_, pos[:, None])
+        ck, cv = kv.update_kv(cache["k"], cache["v"], k_, v_, pos)
+        out = decode_attention(q, ck, cv, pos + 1, window=window)
+        new_cache = {"k": ck, "v": cv}
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return x, new_cache
+
+
+def _cross_part(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    encoder_out: Optional[jax.Array],
+    cross_cache: Optional[dict],
+) -> tuple[jax.Array, Optional[dict]]:
+    h = apply_norm(cfg.norm_kind, _norms(p), x)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    if cross_cache is not None:
+        ck, cv = cross_cache["k"], cross_cache["v"]
+    else:
+        assert encoder_out is not None
+        ck = jnp.einsum("bsd,dhk->bshk", encoder_out, p["wk"])
+        cv = jnp.einsum("bsd,dhk->bshk", encoder_out, p["wv"])
+    out = full_attention(q, ck, cv, causal=False)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return x, {"k": ck, "v": cv}
+
+
+def block_forward(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    decode_positions: Optional[jax.Array] = None,
+    encoder_out: Optional[jax.Array] = None,
+    cross_cache: Optional[dict] = None,
+    causal: bool = True,
+) -> tuple[jax.Array, dict, jax.Array, Optional[dict]]:
+    """Returns (x, built/updated cache, aux_loss, built cross cache).
+
+    In sequence mode (cache=None) the returned cache is the *built* decode
+    cache (full-sequence kv for attention kinds, final state for recurrent
+    kinds); in decode mode it is the updated cache.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    new_cross: Optional[dict] = None
+
+    if kind in (ATTN, ATTN_MOE, LOCAL_ATTN):
+        window = cfg.local_window if kind == LOCAL_ATTN else None
+        x, new_cache = _attn_part(
+            cfg,
+            p["attn"],
+            x,
+            positions,
+            causal=causal,
+            window=window,
+            cache=cache,
+            decode_positions=decode_positions,
+        )
+        if "cross" in p:
+            x, new_cross = _cross_part(
+                cfg, p["cross"], x, encoder_out=encoder_out, cross_cache=cross_cache
+            )
+        if kind == ATTN_MOE:
+            h = apply_norm(cfg.norm_kind, _norms(p["moe"]), x)
+            moe_out, stats = moe_forward(cfg, p["moe"], h, return_router_stats=True)
+            x = x + moe_out
+            # Router z-loss-style aux kept tiny; recorded for the controller.
+            aux = aux + 1e-3 * jnp.mean(
+                jnp.square(jax.nn.logsumexp(stats["router_logits"], axis=-1))
+            )
+        else:
+            h = apply_norm(cfg.norm_kind, _norms(p["mlp"]), x)
+            x = x + mlp_forward(cfg, p["mlp"], h)
+    elif kind == RGLRU:
+        x, new_cache = rglru_block(cfg, p["rglru"], x, cache=cache)
+        h = apply_norm(cfg.norm_kind, _norms(p["mlp"]), x)
+        x = x + mlp_forward(cfg, p["mlp"], h)
+    elif kind == MLSTM:
+        x, new_cache = mlstm_block(cfg, p["mlstm"], x, cache=cache)
+    elif kind == SLSTM:
+        x, new_cache = slstm_block(cfg, p["slstm"], x, cache=cache)
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux, new_cross
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # -- embedding ---------------------------------------------------------
+    def embed(self, params: dict, tokens: jax.Array) -> jax.Array:
+        return params["embed"][tokens].astype(jnp.dtype(self.cfg.dtype))
+
+    def unembed(self, params: dict, x: jax.Array) -> jax.Array:
+        w = params["embed"].T if self.cfg.tie_embeddings else params["unembed"]
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        return softcap(logits, self.cfg.logits_softcap)
+
+    # -- encoder (whisper) ---------------------------------------------------
+    def encode(self, params: dict, encoder_embeds: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        enc = params["encoder"]
+        s = encoder_embeds.shape[1]
+        x = encoder_embeds + enc["pos_embed"][:s].astype(encoder_embeds.dtype)
+        positions = jnp.arange(s)[None, :]
+
+        def body(xc, layer_params):
+            xc, _, _, _ = block_forward(
+                cfg, ATTN, layer_params, xc, positions, causal=False
+            )
+            return xc, None
+
+        body = _maybe_remat(cfg, body)
+        x, _ = jax.lax.scan(body, x, enc["blocks"])
+        return apply_norm(cfg.norm_kind, enc["final_norm"], x)
+
+    # -- full-sequence forward (train / prefill) ------------------------------
+    def forward(
+        self,
+        params: dict,
+        *,
+        tokens: Optional[jax.Array] = None,
+        inputs_embeds: Optional[jax.Array] = None,
+        encoder_embeds: Optional[jax.Array] = None,
+        build_cache: bool = False,
+        cache_capacity: Optional[int] = None,
+    ) -> tuple[jax.Array, Optional[dict], jax.Array]:
+        """Returns (logits, cache_or_None, aux_loss)."""
+        cfg = self.cfg
+        if inputs_embeds is not None:
+            x = inputs_embeds.astype(jnp.dtype(cfg.dtype))
+        else:
+            x = self.embed(params, tokens)
+        b, s = x.shape[:2]
+        positions = jnp.arange(s)[None, :]
+        if cfg.rope_kind == "learned":
+            x = x + params["pos_embed"][:s].astype(x.dtype)
+
+        encoder_out = None
+        if cfg.is_encdec:
+            assert encoder_embeds is not None
+            encoder_out = self.encode(params, encoder_embeds)
+
+        aux_total = jnp.zeros((), jnp.float32)
+
+        x = constrain(x, "batch", "seq", None)
+
+        # Scanned cycles.
+        def cycle(carry, cycle_params):
+            xc, aux = carry
+            xc = constrain(xc, "batch", "seq", None)
+            built_list = []
+            cross_list = []
+            for j, kind in enumerate(cfg.pattern):
+                xc, built, a, cross = block_forward(
+                    cfg,
+                    kind,
+                    cycle_params[j],
+                    xc,
+                    positions,
+                    encoder_out=encoder_out,
+                    causal=True,
+                )
+                aux = aux + a
+                built_list.append(built)
+                cross_list.append(cross)
+            ys = (built_list, cross_list) if build_cache else None
+            return (xc, aux), ys
+
+        cycle = _maybe_remat(cfg, cycle)
+        blocks_stacked = _as_tuple_tree(params["blocks"])
+        (x, aux_total), ys = jax.lax.scan(cycle, (x, aux_total), blocks_stacked)
+
+        # Remainder blocks.
+        rem_built = []
+        for j, kind in enumerate(cfg.remainder):
+            x, built, a, _ = block_forward(
+                cfg,
+                kind,
+                params["rem_blocks"][j],
+                x,
+                positions,
+                encoder_out=encoder_out,
+                causal=True,
+            )
+            aux_total = aux_total + a
+            rem_built.append(built)
+
+        x = apply_norm(cfg.norm_kind, params["final_norm"], x)
+        x = constrain(x, "batch", "seq", None)
+        logits = self.unembed(params, x)
+        logits = constrain(logits, "batch", "seq", "vocab")
+
+        cache = None
+        if build_cache:
+            cache = self._cache_from_built(ys, rem_built, s, cache_capacity or s)
+        return logits, cache, aux_total
+
+    def _cache_from_built(self, ys, rem_built, s, capacity) -> dict:
+        """Assemble a decode cache from prefill by-products.
+
+        Attention kinds: the full-sequence k/v *is* the cache (capacity ==
+        prefill length for the assigned decode shapes); LOCAL_ATTN keeps the
+        last ``window`` tokens, rolled so token t sits in ring slot t % W.
+        Recurrent kinds: the final state returned by the block.
+        """
+        cfg = self.cfg
+        cache: dict[str, Any] = {"scan": [], "rem": []}
+        built_list, cross_list = ys if ys is not None else ([], [])
+
+        def fix_local(entry: dict, stacked: bool) -> dict:
+            w = min(cfg.local_window, capacity)
+            seq_ax = 2 if stacked else 1
+            out = {}
+            for n in ("k", "v"):
+                sliced = jax.lax.slice_in_dim(entry[n], s - w, s, axis=seq_ax)
+                out[n] = jnp.roll(sliced, s % w, axis=seq_ax)
+            return out
+
+        def fix_full(entry: dict, stacked: bool) -> dict:
+            # Grow the cache to `capacity` so decode at position s does not
+            # wrap onto slot 0 (capacity == s would overwrite token 0).
+            if capacity <= s:
+                return entry
+            seq_ax = 2 if stacked else 1
+            pad = [(0, 0)] * entry["k"].ndim
+            pad[seq_ax] = (0, capacity - s)
+            return {n: jnp.pad(entry[n], pad) for n in ("k", "v")}
+
+        for j, kind in enumerate(cfg.pattern):
+            entry = built_list[j]
+            if kind == LOCAL_ATTN:
+                entry = fix_local(entry, stacked=True)
+            elif kind in (ATTN, ATTN_MOE):
+                entry = fix_full(entry, stacked=True)
+            cache["scan"].append(entry)
+        for j, kind in enumerate(cfg.remainder):
+            entry = rem_built[j]
+            if kind == LOCAL_ATTN:
+                entry = fix_local(entry, stacked=False)
+            elif kind in (ATTN, ATTN_MOE):
+                entry = fix_full(entry, stacked=False)
+            cache["rem"].append(entry)
+        if cfg.is_encdec and cross_list and cross_list[0] is not None:
+            cache["cross"] = cross_list[0]
+        return cache
+
+    # -- decode step -----------------------------------------------------------
+    def decode_step(
+        self,
+        params: dict,
+        cache: dict,
+        tokens: jax.Array,
+        positions: jax.Array,
+    ) -> tuple[jax.Array, dict]:
+        """One-token decode.  tokens (B,1); positions (B,)."""
+        cfg = self.cfg
+        x = self.embed(params, tokens)
+        if cfg.rope_kind == "learned":
+            x = x + params["pos_embed"][positions][:, None].astype(x.dtype)
+
+        x = constrain(x, "cache_batch", None, None)
+
+        def cycle(xc, inp):
+            cycle_params, cycle_cache, cycle_cross = inp
+            xc = constrain(xc, "cache_batch", None, None)
+            new_caches = []
+            for j, kind in enumerate(cfg.pattern):
+                xc, nc, _, _ = block_forward(
+                    cfg,
+                    kind,
+                    cycle_params[j],
+                    xc,
+                    positions[:, None],
+                    cache=cycle_cache[j],
+                    decode_positions=positions,
+                    cross_cache=cycle_cross,
+                )
+                new_caches.append(nc)
+            return xc, new_caches
+
+        blocks_stacked = _as_tuple_tree(params["blocks"])
+        cache_stacked = _as_tuple_tree(cache["scan"])
+        cross = cache.get("cross")
+        xs = (blocks_stacked, cache_stacked, cross)
+        x, new_scan = jax.lax.scan(cycle, x, xs)
+
+        new_rem = []
+        for j, kind in enumerate(cfg.remainder):
+            x, nc, _, _ = block_forward(
+                cfg,
+                kind,
+                params["rem_blocks"][j],
+                x,
+                positions[:, None],
+                cache=cache["rem"][j],
+                decode_positions=positions,
+                cross_cache=None,
+            )
+            new_rem.append(nc)
+
+        x = apply_norm(cfg.norm_kind, params["final_norm"], x)
+        logits = self.unembed(params, x)
+        new_cache = {"scan": new_scan, "rem": new_rem}
+        if cross is not None:
+            new_cache["cross"] = cross
+        return logits, new_cache
+
+    # -- loss ---------------------------------------------------------------
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        logits, _, aux = self.forward(
+            params,
+            tokens=batch.get("tokens"),
+            inputs_embeds=batch.get("inputs_embeds"),
+            encoder_embeds=batch.get("encoder_embeds"),
+        )
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return nll.mean() + aux
+
+
+def _as_tuple_tree(lst: list) -> tuple:
+    """lax.scan xs must be a pytree with arrays at leaves; lists are fine but
+    convert to tuple for hashability of the structure."""
+    return tuple(lst)
+
+
+def _maybe_remat(cfg: ModelConfig, fn: Callable) -> Callable:
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Step builders (jit targets for training / dry-run)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, optimizer) -> Callable:
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+    model = Model(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+        gnorm = optimizer.global_norm(grads)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    model = Model(cfg)
+
+    def prefill_step(params, batch):
+        logits, cache, _ = model.forward(
+            params,
+            tokens=batch.get("tokens"),
+            inputs_embeds=batch.get("inputs_embeds"),
+            encoder_embeds=batch.get("encoder_embeds"),
+            build_cache=True,
+        )
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    model = Model(cfg)
+
+    def serve_step(params, cache, tokens, positions):
+        return model.decode_step(params, cache, tokens, positions)
+
+    return serve_step

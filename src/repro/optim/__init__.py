@@ -1,0 +1,15 @@
+"""Optimizer substrate: AdamW with ZeRO-shardable state, LR schedules, and
+gradient compression utilities for slow (cross-pod) links."""
+
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.optim.compress import compress_int8, decompress_int8
+
+__all__ = [
+    "AdamW",
+    "AdamWState",
+    "cosine_schedule",
+    "linear_warmup",
+    "compress_int8",
+    "decompress_int8",
+]

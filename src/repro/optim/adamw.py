@@ -1,0 +1,77 @@
+"""AdamW with fp32 state over (possibly bf16) params.
+
+State layout mirrors the parameter pytree, so the same logical-axis sharding
+rules apply — under the production mesh the m/v moments are FSDP-sharded over
+the ``data`` axis exactly like the parameters (ZeRO).  The update is pure
+jnp; XLA fuses it into the backward pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step: jax.Array) -> jax.Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def global_norm(self, grads: Any) -> jax.Array:
+        sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads)
+        return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+    def update(self, grads: Any, state: AdamWState, params: Any) -> tuple[Any, AdamWState]:
+        step = state.step + 1
+        lr = self._lr(step)
+        gnorm = self.global_norm(grads)
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m + (1 - self.b1) * g
+            v_new = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            m_hat = m_new / (1 - self.b1 ** step.astype(jnp.float32))
+            v_hat = v_new / (1 - self.b2 ** step.astype(jnp.float32))
+            delta = m_hat / (jnp.sqrt(v_hat) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * delta).astype(jnp.float32), m_new, v_new
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return updates, AdamWState(step=step, m=new_m, v=new_v)

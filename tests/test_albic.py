@@ -1,0 +1,92 @@
+"""ALBIC (§4.3.2, Algorithm 2) behaviour."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AlbicParams, albic, solve_allocation
+from repro.core.albic import _score_pairs, _split_set, _union_sets
+
+from conftest import make_cluster
+
+
+def test_albic_respects_max_ld():
+    state = make_cluster(seed=1)
+    res = albic(state, max_migr_cost=200.0, params=AlbicParams(max_ld=10.0, time_limit=3.0))
+    assert res.plan.status != "infeasible"
+    assert res.plan.load_distance <= 10.0 + 1e-6 or res.retries > 0
+
+
+def test_albic_increases_collocation_over_rounds():
+    state = make_cluster(seed=2, one_to_one_frac=0.8)
+    start = state.collocation_factor()
+    for i in range(8):
+        res = albic(
+            state,
+            max_migrations=10,
+            params=AlbicParams(max_ld=15.0, time_limit=2.0, seed=i),
+        )
+        state = state.copy()
+        state.alloc = res.plan.alloc
+    assert state.collocation_factor() > start + 5.0
+
+
+def test_albic_degenerates_to_milp_at_zero_pl():
+    state = make_cluster(seed=3)
+    res = albic(
+        state,
+        max_migr_cost=100.0,
+        params=AlbicParams(max_pl=0.0, time_limit=3.0),
+    )
+    pure = solve_allocation(state, max_migr_cost=100.0, time_limit=3.0)
+    assert res.units == [] and res.pinned_pair is None
+    assert abs(res.plan.load_distance - pure.load_distance) < 2.0
+
+
+def test_score_pairs_selects_heavy_edges():
+    state = make_cluster(seed=4, one_to_one_frac=0.5)
+    col, tobe = _score_pairs(state, score_factor=1.5)
+    pairs = col + [(a, b) for a, b, _ in tobe]
+    assert pairs, "no candidate pairs found"
+    # Every selected pair must exceed the sF·avg threshold by construction.
+    for gi, gj in pairs:
+        downs = state.downstream[int(state.kg_operator[gi])]
+        down_kgs = np.concatenate([np.where(state.kg_operator == d)[0] for d in downs])
+        avg = state.out_rates[gi, down_kgs].sum() / len(down_kgs)
+        assert state.out_rates[gi, gj] > 1.5 * avg
+
+
+def test_union_sets_merges_transitively():
+    sets = _union_sets([(1, 2), (2, 3), (7, 8), (9, 7)])
+    as_sets = {frozenset(s) for s in sets}
+    assert frozenset({1, 2, 3}) in as_sets
+    assert frozenset({7, 8, 9}) in as_sets
+
+
+def test_split_set_respects_constraints():
+    state = make_cluster(seed=5)
+    members = list(range(12))
+    rng = np.random.default_rng(0)
+    parts = _split_set(
+        state, members, max_migr_cost=25.0, max_pl=3.0, alpha=1.0, rng=rng
+    )
+    covered = sorted(g for p in parts for g in p)
+    assert covered == members
+    for p in parts:
+        if len(p) > 1:
+            assert state.kg_load[p].sum() <= 3.0 + max(state.kg_load[p])  # split sanity
+            assert state.migration_costs()[p].sum() <= 25.0 + max(
+                state.migration_costs()[p]
+            )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), sf=st.floats(1.0, 3.0))
+def test_property_albic_valid_allocation(seed, sf):
+    state = make_cluster(num_nodes=4, kgs_per_op=8, num_ops=3, seed=seed)
+    res = albic(
+        state,
+        max_migrations=8,
+        params=AlbicParams(score_factor=sf, time_limit=2.0, seed=seed),
+    )
+    assert ((res.plan.alloc >= 0) & (res.plan.alloc < 4)).all()
+    assert res.plan.num_migrations <= 8

@@ -1,0 +1,194 @@
+"""Streaming engine end-to-end: execution, statistics, migration, elasticity,
+failure recovery — the live substrate Algorithm 1 reconfigures."""
+
+import numpy as np
+import pytest
+
+from repro.core import AdaptationFramework, AlbicParams, UtilizationScaler
+from repro.data import airline_stream, real_job_1, real_job_2
+from repro.data.synthetic import StreamSpec, wiki_edit_stream
+from repro.engine import Controller, ControllerConfig, Engine
+
+
+def make_job2_engine(num_nodes=6, kgs=24, ser_cost=0.5, *, worst_alloc=True, seed=0):
+    topo = real_job_2(keygroups_per_op=kgs)
+    g = topo.num_keygroups
+    alloc = np.zeros(g, dtype=np.int64)
+    alloc[:kgs] = np.arange(kgs) % num_nodes
+    alloc[kgs : 2 * kgs] = np.arange(kgs) % num_nodes
+    shift = num_nodes // 2 if worst_alloc else 0
+    alloc[2 * kgs :] = (np.arange(kgs) + shift) % num_nodes
+    return Engine(
+        topo,
+        num_nodes,
+        initial_alloc=alloc,
+        ser_cost=ser_cost,
+        service_rate=2000.0,
+        seed=seed,
+    )
+
+
+def airline_feeder(rate=250.0, seed=0):
+    stream = airline_stream(StreamSpec(rate=rate, seed=seed))
+
+    def feeder(engine, tick):
+        keys, values, ts = next(stream)
+        engine.push_source("airline", keys, values, ts)
+
+    return feeder
+
+
+def test_engine_processes_and_measures():
+    eng = make_job2_engine()
+    feeder = airline_feeder()
+    for t in range(10):
+        feeder(eng, t)
+        eng.tick()
+    snap = eng.end_period()
+    assert eng.metrics.processed_tuples > 1000
+    assert snap.kg_load.sum() > 0
+    assert snap.out_rates.sum() > 0
+    # SumDelay actually computed sums (real operator semantics).
+    sums = [
+        s.get("sums")
+        for _, s in eng.store.items()
+        if "sums" in s
+    ]
+    assert sums and any(len(x) > 0 for x in sums)
+
+
+def test_cross_node_traffic_charged():
+    worst = make_job2_engine(worst_alloc=True)
+    best = make_job2_engine(worst_alloc=False)
+    feeder = airline_feeder()
+    for engine in (worst, best):
+        for t in range(10):
+            feeder(engine, t)
+            engine.tick()
+    assert worst.metrics.cross_node_tuples > best.metrics.cross_node_tuples
+
+
+def test_albic_controller_improves_collocation_and_load_index():
+    """The Fig. 12 reproduction in miniature."""
+    eng = make_job2_engine()
+    ctl = Controller(
+        eng,
+        AdaptationFramework(
+            mode="albic",
+            max_migrations=10,
+            albic_params=AlbicParams(max_ld=15.0, time_limit=2.0),
+        ),
+        ControllerConfig(ticks_per_period=10),
+        feeder=airline_feeder(),
+    )
+    first = ctl.period()
+    for _ in range(7):
+        last = ctl.period()
+    assert last.collocation_factor > first.collocation_factor + 10
+    assert last.load_index < 95.0
+    assert all(m.num_migrations <= 10 for m in ctl.history)
+
+
+def test_milp_controller_balances_load():
+    eng = make_job2_engine()
+    ctl = Controller(
+        eng,
+        AdaptationFramework(mode="milp", max_migrations=13, time_limit=2.0),
+        ControllerConfig(ticks_per_period=10),
+        feeder=airline_feeder(seed=7),
+    )
+    for _ in range(5):
+        m = ctl.period()
+    assert m.load_distance < 15.0
+
+
+def test_migration_preserves_state():
+    """Direct state migration: σ_k arrives intact, buffered tuples replay."""
+    eng = make_job2_engine()
+    feeder = airline_feeder()
+    for t in range(8):
+        feeder(eng, t)
+        eng.tick()
+    # Pick a key group with state and migrate it by hand.
+    kg = next(k for k, s in eng.store.items() if s.get("sums"))
+    before = dict(eng.store.get(kg)["sums"])
+    src = eng.router.node_of(kg)
+    dst = (src + 1) % eng.num_nodes
+    eng.redirect(kg, dst)
+    feeder(eng, 99)  # traffic lands in the buffer meanwhile
+    blob = eng.serialize(kg)
+    eng.install(kg, dst, blob)
+    assert eng.router.node_of(kg) == dst
+    after = eng.store.get(kg)["sums"]
+    for key, val in before.items():
+        assert key in after and after[key] >= val - 1e-9
+    # Replay: buffered batches were re-enqueued.
+    for _ in range(5):
+        eng.tick()
+    assert not eng.router.in_flight
+
+
+def test_scale_out_on_overload():
+    topo = real_job_1(keygroups_per_op=20)
+    eng = Engine(topo, 2, ser_cost=0.2, service_rate=500.0, seed=1)
+    stream = wiki_edit_stream(StreamSpec(rate=400.0, seed=1))
+
+    def feeder(engine, tick):
+        keys, values, ts = next(stream)
+        engine.push_source("wiki", keys, values, ts)
+
+    ctl = Controller(
+        eng,
+        AdaptationFramework(
+            scaler=UtilizationScaler(high_wm=60.0, target=40.0),
+            mode="milp",
+            max_migrations=20,
+            time_limit=2.0,
+        ),
+        ControllerConfig(ticks_per_period=8),
+        feeder=feeder,
+    )
+    for _ in range(6):
+        m = ctl.period()
+    assert eng.num_nodes > 2, "engine never scaled out under overload"
+
+
+def test_node_failure_recovery():
+    eng = make_job2_engine()
+    feeder = airline_feeder(seed=3)
+    ctl = Controller(
+        eng,
+        AdaptationFramework(mode="milp", max_migrations=10, time_limit=2.0),
+        ControllerConfig(ticks_per_period=8),
+        feeder=feeder,
+    )
+    ctl.period()
+    snap = eng.end_period()
+    # Run another period to have fresh stats, then kill node 1.
+    for t in range(8):
+        feeder(eng, t)
+        eng.tick()
+    snap = eng.end_period()
+    victim = 1
+    result = ctl.handle_node_failure(victim, snap)
+    assert not eng.alive[victim]
+    assert (eng.router.table != victim).all(), "orphans not reallocated"
+    # Engine keeps processing afterwards.
+    for t in range(5):
+        feeder(eng, t)
+        eng.tick()
+    assert eng.metrics.processed_tuples > 0
+
+
+def test_backpressure_throttles_sources():
+    topo = real_job_1(keygroups_per_op=10)
+    eng = Engine(topo, 1, service_rate=50.0, seed=2)  # tiny node
+    stream = wiki_edit_stream(StreamSpec(rate=2000.0, seed=2))
+    pushed = 0
+    for t in range(30):
+        keys, values, ts = next(stream)
+        pushed += eng.push_source("wiki", keys, values, ts)
+        eng.tick()
+    assert eng.metrics.dropped_credits > 0, "no backpressure under overload"
+    lat = eng.latency.summary()
+    assert lat["p99"] > lat["p50"]

@@ -1,0 +1,92 @@
+"""Balanced graph partitioning (METIS stand-in) quality and invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.solver.graphpart import (
+    Graph,
+    cut_weight,
+    graph_from_dense,
+    part_weights,
+    partition_graph,
+)
+
+
+def ring_graph(n: int, w: float = 1.0) -> Graph:
+    u = np.arange(n)
+    return Graph(n, u, (u + 1) % n, np.full(n, w), np.ones(n))
+
+
+def clustered_graph(clusters: int, size: int, seed: int = 0) -> Graph:
+    """Dense intra-cluster edges, sparse inter-cluster — obvious best cut."""
+    rng = np.random.default_rng(seed)
+    n = clusters * size
+    w = np.zeros((n, n))
+    for c in range(clusters):
+        lo = c * size
+        blk = rng.uniform(5, 10, (size, size))
+        w[lo : lo + size, lo : lo + size] = np.triu(blk, 1)
+    # weak inter-cluster edges
+    for c in range(clusters - 1):
+        w[c * size, (c + 1) * size] = 0.01
+    return graph_from_dense(w, np.ones(n))
+
+
+def test_partition_covers_all_vertices():
+    g = ring_graph(32)
+    labels = partition_graph(g, 4)
+    assert labels.shape == (32,)
+    assert set(labels.tolist()) == {0, 1, 2, 3}
+
+
+def test_balance_constraint():
+    g = ring_graph(64)
+    labels = partition_graph(g, 4, balance_tol=0.10)
+    weights = part_weights(g, labels, 4)
+    assert weights.max() <= (64 / 4) * 1.10 + 1e-9
+
+
+def test_finds_natural_clusters():
+    g = clustered_graph(4, 8)
+    labels = partition_graph(g, 4)
+    # Cut should avoid the heavy intra-cluster edges almost entirely.
+    assert cut_weight(g, labels) < 0.1 * g.edge_w.sum()
+
+
+def test_deterministic_given_seed():
+    g = clustered_graph(3, 6, seed=1)
+    a = partition_graph(g, 3, seed=42)
+    b = partition_graph(g, 3, seed=42)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_single_part():
+    g = ring_graph(8)
+    labels = partition_graph(g, 1)
+    assert (labels == 0).all()
+
+
+def test_parts_geq_vertices():
+    g = ring_graph(4)
+    labels = partition_graph(g, 8)
+    assert labels.shape == (4,)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(6, 40),
+    nparts=st.integers(2, 5),
+    seed=st.integers(0, 999),
+)
+def test_property_partition_valid(n, nparts, seed):
+    rng = np.random.default_rng(seed)
+    w = np.triu(rng.uniform(0, 1, (n, n)) * (rng.random((n, n)) < 0.3), 1)
+    g = graph_from_dense(w, rng.uniform(0.5, 2.0, n))
+    labels = partition_graph(g, nparts, seed=seed)
+    assert labels.shape == (n,)
+    assert labels.min() >= 0 and labels.max() < nparts
+    if nparts < n:
+        weights = part_weights(g, labels, nparts)
+        # Hard cap from _rebalance (tolerance + one heaviest vertex slack).
+        cap = g.vertex_w.sum() / nparts * 1.10 + g.vertex_w.max()
+        assert weights.max() <= cap + 1e-9

@@ -1,0 +1,152 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gemm.moe_gemm import moe_gemm_pallas
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+
+TOL = {jnp.float32: dict(atol=3e-5, rtol=3e-5), jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,s,h,kv,hd,causal,window,dtype",
+    [
+        (1, 256, 4, 2, 64, True, None, jnp.float32),
+        (2, 256, 4, 4, 32, True, None, jnp.float32),
+        (1, 512, 8, 2, 64, True, 128, jnp.float32),
+        (1, 256, 4, 1, 64, False, None, jnp.float32),
+        (1, 256, 8, 8, 128, True, None, jnp.bfloat16),
+        (2, 384, 6, 3, 64, True, None, jnp.float32),  # uneven block tail-free
+    ],
+)
+def test_flash_attention_matches_ref(b, s, h, kv, hd, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+    bq = 128 if s % 128 == 0 else 64
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=bq, block_kv=bq, interpret=True
+    )
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    s=st.sampled_from([128, 256]),
+    h=st.sampled_from([2, 4]),
+    g=st.sampled_from([1, 2]),
+    seed=st.integers(0, 100),
+)
+def test_property_flash_attention(s, h, g, seed):
+    kv = max(h // g, 1)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, s, h, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, s, kv, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, s, kv, 32), jnp.float32)
+    out = flash_attention_pallas(q, k, v, block_q=64, block_kv=64, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,h,kv,hd,t,dtype",
+    [
+        (3, 8, 2, 64, 512, jnp.float32),
+        (1, 4, 4, 32, 256, jnp.float32),
+        (2, 16, 2, 128, 512, jnp.bfloat16),
+        (1, 2, 1, 64, 1024, jnp.float32),
+    ],
+)
+def test_decode_attention_matches_ref(b, h, kv, hd, t, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd), dtype)
+    kc = jax.random.normal(ks[1], (b, t, kv, hd), dtype)
+    vc = jax.random.normal(ks[2], (b, t, kv, hd), dtype)
+    kv_len = jnp.asarray(
+        np.random.default_rng(0).integers(1, t + 1, size=b), jnp.int32
+    )
+    out = decode_attention_pallas(q, kc, vc, kv_len, block_kv=128, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )
+
+
+# ---------------------------------------------------------------------------
+# rglru scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,s,w,bs,bw",
+    [(2, 256, 256, 64, 128), (1, 128, 512, 128, 128), (3, 512, 128, 256, 128)],
+)
+def test_rglru_scan_matches_ref(b, s, w, bs, bw):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    a = jax.random.uniform(ks[0], (b, s, w), jnp.float32, 0.2, 0.999)
+    bb = jax.random.normal(ks[1], (b, s, w), jnp.float32) * 0.1
+    h0 = jax.random.normal(ks[2], (b, w), jnp.float32)
+    out = rglru_scan_pallas(a, bb, h0, block_seq=bs, block_width=bw, interpret=True)
+    ref = rglru_scan_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_rglru_scan_stability(seed):
+    """With |a|<1 the recurrence must stay bounded (no blow-up)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.random.uniform(ks[0], (1, 128, 128), jnp.float32, 0.0, 0.99)
+    b = jax.random.normal(ks[1], (1, 128, 128), jnp.float32)
+    h0 = jnp.zeros((1, 128))
+    out = rglru_scan_pallas(a, b, h0, block_seq=64, block_width=128, interpret=True)
+    bound = float(jnp.abs(b).max()) / (1.0 - 0.99) + 1.0
+    assert float(jnp.abs(out).max()) <= bound
+
+
+# ---------------------------------------------------------------------------
+# moe gemm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "e,c,d,f,dtype",
+    [
+        (4, 128, 256, 128, jnp.float32),
+        (8, 64, 128, 256, jnp.float32),
+        (2, 256, 512, 128, jnp.bfloat16),
+    ],
+)
+def test_moe_gemm_matches_ref(e, c, d, f, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = jax.random.normal(ks[0], (e, c, d), dtype)
+    w = (jax.random.normal(ks[1], (e, d, f), jnp.float32) * 0.05).astype(dtype)
+    out = moe_gemm_pallas(x, w, block_c=64, block_d=128, block_f=64, interpret=True)
+    ref = moe_gemm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )

@@ -1,0 +1,158 @@
+"""MILP (§4.3.1) invariants: constraints, budgets, Lemmas 1–2, extensions."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ClusterState, solve_allocation
+from repro.core.scaling import ScalingDecision, apply_scaling
+
+from conftest import make_cluster
+
+
+def test_assignment_complete(cluster):
+    plan = solve_allocation(cluster, max_migr_cost=50.0, time_limit=5.0)
+    assert plan.status in ("optimal", "time_limit")
+    assert plan.alloc.shape == (cluster.num_keygroups,)
+    assert ((plan.alloc >= 0) & (plan.alloc < cluster.num_nodes)).all()
+
+
+def test_migration_cost_budget(cluster):
+    budget = 30.0
+    plan = solve_allocation(cluster, max_migr_cost=budget, time_limit=5.0)
+    assert plan.migration_cost <= budget + 1e-6
+
+
+def test_migration_count_budget(cluster):
+    plan = solve_allocation(cluster, max_migrations=5, time_limit=5.0)
+    assert plan.num_migrations <= 5
+
+
+def test_improves_load_distance(cluster):
+    before = cluster.load_distance()
+    plan = solve_allocation(cluster, max_migr_cost=100.0, time_limit=5.0)
+    assert plan.load_distance <= before + 1e-9
+
+
+def test_unrestricted_beats_restricted(cluster):
+    tight = solve_allocation(cluster, max_migrations=3, time_limit=5.0)
+    free = solve_allocation(cluster, time_limit=5.0)
+    assert free.load_distance <= tight.load_distance + 1e-6
+
+
+def test_zero_budget_is_identity(cluster):
+    plan = solve_allocation(cluster, max_migr_cost=0.0, time_limit=5.0)
+    assert plan.num_migrations == 0
+    np.testing.assert_array_equal(plan.alloc, cluster.alloc)
+
+
+def test_pins_respected(cluster):
+    # Pin key groups 0 and 1 (as singleton units) to node 3.
+    plan = solve_allocation(
+        cluster,
+        max_migr_cost=1e9,
+        units=[[0], [1]],
+        pins={0: 3, 1: 3},
+        time_limit=5.0,
+    )
+    assert plan.alloc[0] == 3 and plan.alloc[1] == 3
+
+
+def test_units_move_together(cluster):
+    unit = [0, 5, 9]
+    plan = solve_allocation(cluster, max_migr_cost=1e9, units=[unit], time_limit=5.0)
+    assert len({int(plan.alloc[k]) for k in unit}) == 1
+
+
+def test_lemma1_no_migration_into_b(cluster):
+    """Lemma 1: no key group migrates from A to B (marked-for-removal)."""
+    state = cluster.copy()
+    state.kill[1] = True
+    plan = solve_allocation(state, max_migr_cost=100.0, time_limit=5.0)
+    for kg, src, dst in plan.migrations:
+        assert not state.kill[dst], f"kg {kg} moved {src}→{dst} (B!)"
+
+
+def test_lemma2_drain_converges(cluster):
+    """Lemma 2: repeated solving drains all key groups from B."""
+    state = cluster.copy()
+    state.kill[0] = True
+    for _ in range(30):
+        plan = solve_allocation(state, max_migr_cost=60.0, time_limit=5.0)
+        state.alloc = plan.alloc
+        if (state.alloc != 0).all():
+            break
+    assert (state.alloc != 0).all(), "node 0 not drained"
+
+
+def test_dead_node_excluded(cluster):
+    state = cluster.copy()
+    state.alive[2] = False
+    orphans = state.alloc == 2
+    state.kg_state_bytes[orphans] = 0.0  # recovery from checkpoint
+    plan = solve_allocation(state, time_limit=5.0)
+    assert (plan.alloc != 2).all()
+
+
+def test_heterogeneous_capacity(cluster):
+    """A 2× node should receive ~2× the raw load of a 1× node."""
+    state = cluster.copy()
+    state.capacity = np.ones(state.num_nodes)
+    state.capacity[0] = 2.0
+    plan = solve_allocation(state, time_limit=5.0)
+    raw = np.bincount(plan.alloc, weights=state.kg_load, minlength=state.num_nodes)
+    assert raw[0] > raw[1:].mean() * 1.4
+
+
+def test_multi_resource_constraint(cluster):
+    """The multi-dimensional-load extension caps a second resource."""
+    g = cluster.num_keygroups
+    mem = np.ones(g)  # each key group uses 1 unit of memory
+    caps = np.full(cluster.num_nodes, np.ceil(g / cluster.num_nodes) + 2)
+    plan = solve_allocation(
+        cluster, time_limit=5.0, extra_resources={"memory": (mem, caps)}
+    )
+    used = np.bincount(plan.alloc, weights=mem, minlength=cluster.num_nodes)
+    assert (used <= caps + 1e-9).all()
+
+
+def test_scale_out_rebalances():
+    state = make_cluster(num_nodes=4, skew=True)
+    grown = apply_scaling(state, ScalingDecision(add_nodes=2))
+    plan = solve_allocation(grown, time_limit=5.0)
+    assert len(np.unique(plan.alloc)) == 6  # new nodes actually used
+
+
+# ----------------------------------------------------------------------------
+# Property-based invariants
+# ----------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    nodes=st.integers(2, 6),
+    kgs=st.integers(4, 16),
+    budget=st.floats(0.0, 80.0),
+)
+def test_property_budget_and_assignment(seed, nodes, kgs, budget):
+    state = make_cluster(num_nodes=nodes, kgs_per_op=kgs, num_ops=2, seed=seed)
+    plan = solve_allocation(state, max_migr_cost=budget, time_limit=2.0)
+    if plan.status == "infeasible":
+        pytest.skip("solver budget infeasible for random instance")
+    assert plan.migration_cost <= budget + 1e-6
+    assert ((plan.alloc >= 0) & (plan.alloc < nodes)).all()
+    # Never worse than doing nothing.
+    assert plan.load_distance <= state.load_distance() + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_lemma1(seed):
+    state = make_cluster(num_nodes=5, kgs_per_op=10, num_ops=2, seed=seed)
+    state.kill[seed % 5] = True
+    plan = solve_allocation(state, max_migr_cost=50.0, time_limit=2.0)
+    if plan.status == "infeasible":
+        pytest.skip("infeasible instance")
+    for _, src, dst in plan.migrations:
+        assert not state.kill[dst]

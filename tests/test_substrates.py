@@ -1,0 +1,149 @@
+"""Checkpointing, optimizer, data pipeline, gradient compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.data.pipeline import PipelineConfig, Prefetcher, TokenPipeline
+from repro.optim import AdamW, compress_int8, cosine_schedule, decompress_int8
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_with_bf16(tmp_path):
+    tree = {
+        "w": jnp.ones((4, 4), jnp.bfloat16) * 1.5,
+        "m": {"v": np.arange(6, dtype=np.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    p = str(tmp_path / "ckpt")
+    save_pytree(p, tree, metadata={"note": "x"})
+    loaded, meta = load_pytree(p)
+    assert meta["note"] == "x"
+    np.testing.assert_array_equal(
+        np.asarray(loaded["w"], np.float32), np.asarray(tree["w"], np.float32)
+    )
+    assert str(loaded["w"].dtype) == "bfloat16"
+    np.testing.assert_array_equal(loaded["m"]["v"], tree["m"]["v"])
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for step in (10, 20, 30):
+        mgr.save(step, {"x": np.full(3, step)})
+    assert mgr.steps() == [20, 30]
+    tree, meta = mgr.restore()
+    assert meta["step"] == 30
+    np.testing.assert_array_equal(tree["x"], np.full(3, 30))
+
+
+def test_manager_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save_async(1, {"x": np.ones(4)})
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(5, {"x": np.ones(2)})
+    for name in os.listdir(tmp_path):
+        assert not name.endswith(".tmp")
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    opt = AdamW(learning_rate=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        updates, state = opt.update(grads, state, params)
+        return jax.tree.map(lambda p, u: p + u, params, updates), state
+
+    for _ in range(150):
+        params, state = step(params, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(learning_rate=1.0, grad_clip=1e-3)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    updates, _ = opt.update({"w": jnp.full(3, 1e6)}, state, params)
+    assert np.isfinite(np.asarray(updates["w"])).all()
+
+
+def test_cosine_schedule_shape():
+    fn = cosine_schedule(1.0, 10, 100)
+    assert float(fn(jnp.asarray(0))) < 0.2
+    assert abs(float(fn(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(fn(jnp.asarray(100))) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_deterministic_restart():
+    cfg = PipelineConfig(vocab_size=1000, seq_len=16, global_batch=8, num_shards=4)
+    a = TokenPipeline(cfg)
+    b1 = a.next_batch()
+    b2 = a.next_batch()
+    cursor = a.cursor()
+    b3 = a.next_batch()
+    b = TokenPipeline(cfg)
+    b.restore(cursor)
+    b3r = b.next_batch()
+    np.testing.assert_array_equal(b3["tokens"], b3r["tokens"])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_pipeline_labels_shift():
+    cfg = PipelineConfig(vocab_size=100, seq_len=8, global_batch=4, num_shards=2)
+    batch = TokenPipeline(cfg).next_batch()
+    assert batch["tokens"].shape == (4, 8)
+    assert batch["labels"].shape == (4, 8)
+    assert (batch["tokens"] < 100).all()
+
+
+def test_prefetcher_passthrough():
+    cfg = PipelineConfig(vocab_size=100, seq_len=8, global_batch=4, num_shards=2)
+    pipe = TokenPipeline(cfg)
+    ref = TokenPipeline(cfg)
+    pf = Prefetcher(iter(pipe), depth=2)
+    for _ in range(3):
+        got = next(pf)
+        np.testing.assert_array_equal(got["tokens"], ref.next_batch()["tokens"])
+    pf.close()
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))
+def test_property_int8_compression_bounded_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale, 64).astype(np.float32))
+    q, s = compress_int8(x)
+    back = decompress_int8(q, s)
+    # Error bounded by one quantization step.
+    assert float(jnp.abs(back - x).max()) <= float(s) + 1e-9
+    assert q.dtype == jnp.int8

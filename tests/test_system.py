@@ -1,0 +1,160 @@
+"""End-to-end behaviour tests for the paper's system: the headline claims
+reproduced in miniature, plus Algorithm-1 integration semantics."""
+
+import numpy as np
+
+from repro.core import (
+    AdaptationFramework,
+    AlbicParams,
+    UtilizationScaler,
+    solve_allocation,
+)
+from repro.core.baselines import flux_rebalance
+from repro.data import airline_stream, real_job_2, real_job_3, real_job_4
+from repro.data.synthetic import StreamSpec, weather_stream
+from repro.engine import Controller, ControllerConfig, Engine
+
+from conftest import make_cluster
+
+
+def test_claim_milp_load_distance_beats_flux_over_time():
+    """§5.2.1: MILP holds a stable low load distance where Flux fluctuates."""
+    rng = np.random.default_rng(0)
+    milp_ld, flux_ld = [], []
+    milp_state = make_cluster(num_nodes=10, kgs_per_op=25, num_ops=4, seed=0)
+    flux_state = milp_state.copy()
+    for t in range(8):
+        # Workload drift each period.
+        drift = rng.uniform(0.9, 1.1, milp_state.num_keygroups)
+        for st_ in (milp_state, flux_state):
+            st_.kg_load = st_.kg_load * drift
+        p = solve_allocation(milp_state, max_migrations=13, time_limit=2.0)
+        milp_state.alloc = p.alloc
+        milp_ld.append(milp_state.load_distance())
+        f = flux_rebalance(flux_state, max_migrations=13)
+        flux_state.alloc = f.alloc
+        flux_ld.append(flux_state.load_distance())
+    assert np.mean(milp_ld[2:]) <= np.mean(flux_ld[2:]) + 1e-9
+    assert np.max(milp_ld[2:]) <= np.max(flux_ld[2:]) + 1e-9
+
+
+def test_claim_albic_halves_load_index_on_real_job_2():
+    """§5.4 Fig. 12: collocation cuts system load substantially."""
+    topo = real_job_2(keygroups_per_op=24)
+    g = topo.num_keygroups
+    n = 6
+    alloc = np.zeros(g, dtype=np.int64)
+    alloc[:24] = np.arange(24) % n
+    alloc[24:48] = np.arange(24) % n
+    alloc[48:] = (np.arange(24) + n // 2) % n  # anti-collocated start
+    eng = Engine(topo, n, initial_alloc=alloc, ser_cost=0.75, service_rate=2000.0)
+    stream = airline_stream(StreamSpec(rate=250.0, seed=5))
+
+    def feeder(engine, tick):
+        keys, values, ts = next(stream)
+        engine.push_source("airline", keys, values, ts)
+
+    ctl = Controller(
+        eng,
+        AdaptationFramework(
+            mode="albic",
+            max_migrations=10,
+            albic_params=AlbicParams(max_ld=15.0, time_limit=2.0),
+        ),
+        ControllerConfig(ticks_per_period=10),
+        feeder=feeder,
+    )
+    for _ in range(10):
+        m = ctl.period()
+    assert m.load_index < 75.0, f"load index only reached {m.load_index:.1f}"
+    assert m.collocation_factor > 80.0
+
+
+def test_claim_job3_collocation_limited_by_routedelay():
+    """§5.4 Fig. 13: RouteDelay partitions by a different key, capping the
+    obtainable collocation below job 2's."""
+    results = {}
+    for job_fn, name in ((real_job_2, "job2"), (real_job_3, "job3")):
+        topo = job_fn(keygroups_per_op=16)
+        eng = Engine(topo, 4, ser_cost=0.5, service_rate=2000.0, seed=1)
+        stream = airline_stream(StreamSpec(rate=200.0, seed=6))
+
+        def feeder(engine, tick, stream=stream):
+            keys, values, ts = next(stream)
+            engine.push_source("airline", keys, values, ts)
+
+        ctl = Controller(
+            eng,
+            AdaptationFramework(
+                mode="albic",
+                max_migrations=10,
+                albic_params=AlbicParams(max_ld=20.0, time_limit=1.5),
+            ),
+            ControllerConfig(ticks_per_period=8),
+            feeder=feeder,
+        )
+        for _ in range(8):
+            m = ctl.period()
+        results[name] = m.collocation_factor
+    assert results["job3"] < results["job2"] - 5.0
+
+
+def test_real_job_4_runs_and_improves():
+    """The full enrichment pipeline (weather join) executes and adapts."""
+    topo = real_job_4(keygroups_per_op=10)
+    eng = Engine(topo, 4, ser_cost=0.5, service_rate=3000.0, seed=2)
+    air = airline_stream(StreamSpec(rate=150.0, seed=7))
+    wx = weather_stream(StreamSpec(rate=60.0, seed=7))
+
+    def feeder(engine, tick):
+        k, v, ts = next(air)
+        engine.push_source("airline", k, v, ts)
+        k, v, ts = next(wx)
+        engine.push_source("weather", k, v, ts)
+
+    ctl = Controller(
+        eng,
+        AdaptationFramework(
+            mode="albic",
+            max_migrations=10,
+            albic_params=AlbicParams(max_ld=20.0, time_limit=1.5),
+        ),
+        ControllerConfig(ticks_per_period=8),
+        feeder=feeder,
+    )
+    first = ctl.period()
+    for _ in range(6):
+        last = ctl.period()
+    assert eng.metrics.processed_tuples > 2000
+    assert last.collocation_factor >= first.collocation_factor
+    # The join actually joined: efficiency buckets accumulated delay sums.
+    bucket_state = [s for _, s in eng.store.items() if s.get("buckets")]
+    assert bucket_state, "courier-efficiency operator never produced state"
+
+
+def test_integration_scaling_sees_the_plan():
+    """§4.1: overload fixable by re-balancing must NOT trigger scale-out."""
+    state = make_cluster(num_nodes=6, kgs_per_op=20, num_ops=2, seed=9, skew=True)
+    # Average load is low; only the skewed node is hot.
+    state.kg_load = state.kg_load * (30.0 / max(state.node_loads().mean(), 1e-9) / 6)
+    scaler = UtilizationScaler(high_wm=80.0, low_wm=5.0, target=50.0)
+    fw = AdaptationFramework(scaler=scaler, mode="milp", max_migr_cost=1e9, time_limit=2.0)
+    result = fw.adapt(state)
+    assert result.scaling.add_nodes == 0, "scaled out despite balanceable load"
+    assert result.plan.load_distance < state.load_distance()
+
+
+def test_scale_in_drains_and_terminates():
+    """Marked nodes drain over periods and are terminated when empty."""
+    state = make_cluster(num_nodes=6, kgs_per_op=10, num_ops=2, seed=11, skew=False)
+    state.kill[5] = True
+    fw = AdaptationFramework(mode="milp", max_migr_cost=40.0, time_limit=2.0)
+    terminated = []
+    for _ in range(25):
+        result = fw.adapt(state)
+        state = result.state
+        terminated.extend(result.terminated)
+        if 5 in terminated:
+            break
+    assert 5 in terminated, "node 5 never drained+terminated"
+    assert (state.alloc != 5).all()
