@@ -27,15 +27,13 @@ def synthetic_cluster(
     mean_load = 60.0 / (num_keygroups / num_nodes)  # ~60% node utilization
     load = mean_load * rng.uniform(0.95, 1.05, num_keygroups)
 
-    # Adjust 20% of nodes by ±varies/2 via their key groups.
+    # Adjust 20% of nodes by ±varies/2 (%) via their key groups.
     n_adj = max(int(0.2 * num_nodes), 2)
     adjusted = rng.choice(num_nodes, size=n_adj, replace=False)
     for i, node in enumerate(adjusted):
         sign = +1.0 if i < n_adj // 2 else -1.0
         kgs = np.where(alloc == node)[0]
-        load[kgs] *= 1.0 + sign * (varies / 2.0) / 100.0 * num_keygroups / num_nodes / (
-            num_keygroups / num_nodes
-        )
+        load[kgs] *= 1.0 + sign * (varies / 2.0) / 100.0
 
     out = np.zeros((num_keygroups, num_keygroups))
     n11 = int(kg_per_op * one_to_one_pct / 100.0)

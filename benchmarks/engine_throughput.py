@@ -1,0 +1,141 @@
+"""Engine data-plane throughput: end-to-end tuples/sec on a synthetic
+multi-operator pipeline, plus MILP constraint-assembly time at the paper's
+largest scale (Fig. 4: 60 nodes × 1200 key groups).
+
+The pipeline job keeps operator bodies trivially cheap (a C-level re-key) so
+the measurement isolates the engine hot path itself: key hashing, key-group
+routing, queueing, and statistics recording.  The MILP row reports assembly
+time separately from HiGHS solve time (``total − solve_seconds``) so the
+constraint-build cost is pinned by its own number in the perf trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, synthetic_cluster
+from repro.core import solve_allocation
+from repro.engine import Engine
+from repro.engine.topology import OperatorSpec, Topology
+
+
+def _rekey_stage(shift: int):
+    """Near-zero-cost operator: re-key every tuple by an integer shift.
+
+    Uses the engine's array-native output protocol (a Batch instead of a list
+    of tuples).  The pre-PR baseline was measured with the equivalent
+    list-of-tuples body — the only protocol that engine supported.
+    """
+
+    def fn(state, keys, values, ts):
+        state["n"] = state.get("n", 0) + len(keys)
+        return state, (keys + shift, values, ts)
+
+    return fn
+
+
+def _counting_sink(state, keys, values, ts):
+    state["n"] = state.get("n", 0) + len(keys)
+    return state, []
+
+
+def make_pipeline_job(*, num_keygroups: int = 64, depth: int = 3) -> Topology:
+    """source → depth−1 re-key stages → counting sink, all int-keyed."""
+    t = Topology()
+    t.add_operator(
+        OperatorSpec("src", None, num_keygroups=num_keygroups, is_source=True)
+    )
+    prev = "src"
+    for i in range(depth - 1):
+        name = f"stage{i}"
+        t.add_operator(
+            OperatorSpec(name, _rekey_stage(17 * (i + 1)), num_keygroups=num_keygroups)
+        )
+        t.connect(prev, name)
+        prev = name
+    t.add_operator(
+        OperatorSpec("sink", _counting_sink, num_keygroups=num_keygroups, is_sink=True)
+    )
+    t.connect(prev, "sink")
+    return t
+
+
+def measure_pipeline(
+    *,
+    batch: int = 2048,
+    ticks: int = 50,
+    num_keygroups: int = 64,
+    depth: int = 4,
+    repeats: int = 3,
+) -> tuple[float, float]:
+    """Return (tuples/sec processed, µs per tick) on the pipeline job.
+
+    Best of ``repeats`` fresh engines — the minimum-time estimator, robust to
+    scheduler noise on shared hosts.
+    """
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 1_000_000, size=batch).astype(np.int64)
+    values = rng.random(batch)
+    ts = np.zeros(batch)
+    best = 0.0
+    for _ in range(max(repeats, 1)):
+        topo = make_pipeline_job(num_keygroups=num_keygroups, depth=depth)
+        eng = Engine(topo, num_nodes=8, service_rate=1e12, seed=0)
+        # Warm up one tick (store/window allocation) outside the timed region.
+        eng.push_source("src", keys, values, ts)
+        eng.tick()
+        start_processed = eng.metrics.processed_tuples
+        t0 = time.perf_counter()
+        for tick in range(ticks):
+            eng.push_source("src", keys, values, ts + float(tick))
+            eng.tick()
+        dt = time.perf_counter() - t0
+        processed = eng.metrics.processed_tuples - start_processed
+        best = max(best, processed / dt)
+    # src + (depth−1) stages + sink = depth+1 operators process each tuple.
+    return best, batch * (depth + 1) / best * 1e6
+
+
+def measure_milp_assembly(
+    *, nodes: int = 60, kgs: int = 1200, ops: int = 30, time_limit: float = 1.0
+) -> tuple[float, float, str]:
+    """Return (assembly seconds, solve seconds, status) at the Fig. 4 scale."""
+    state = synthetic_cluster(nodes, kgs, ops, varies=20.0, seed=1)
+    t0 = time.perf_counter()
+    plan = solve_allocation(state, max_migrations=20, time_limit=time_limit)
+    total = time.perf_counter() - t0
+    return total - plan.solve_seconds, plan.solve_seconds, plan.status
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    batch = 512 if quick else 2048
+    ticks = 15 if quick else 50
+    tps, us_tick = measure_pipeline(batch=batch, ticks=ticks)
+    rows.append(
+        csv_row(
+            f"engine_throughput/pipeline_d4_64kg_b{batch}",
+            us_tick,
+            f"tuples_per_sec={tps:.0f}",
+        )
+    )
+    assembly, solve, status = measure_milp_assembly(time_limit=0.5 if quick else 1.0)
+    rows.append(
+        csv_row(
+            "engine_throughput/milp_assembly_60x1200",
+            assembly * 1e6,
+            f"solve={solve:.2f}s;status={status}",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ import time
 
 MODULES = [
     "solver_perf",          # Figs 2–4
+    "engine_throughput",    # data-plane tuples/sec + MILP assembly time
     "integrated_scaling",   # Fig 5
     "milp_vs_flux_potc",    # Figs 6–7
     "unrestricted",         # Figs 8–9

@@ -59,6 +59,24 @@ class AllocationPlan:
         return len(self.migrations)
 
 
+def _pad_units(
+    unit_list: list[np.ndarray],
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad ragged units to a (nu, max_size) member matrix.
+
+    Returns (members, valid, sizes): ``members`` holds key-group ids (0-padded),
+    ``valid`` masks real entries, ``sizes`` is the per-unit member count.  Lets
+    per-unit reductions (loads, migration costs) run as one masked sum.
+    """
+    nu = len(unit_list)
+    sizes = np.fromiter((len(m) for m in unit_list), dtype=np.int64, count=nu)
+    maxm = int(sizes.max()) if nu else 1
+    members = np.zeros((nu, maxm), dtype=np.int64)
+    valid = np.arange(maxm)[None, :] < sizes[:, None]
+    members[valid] = np.concatenate(unit_list) if nu else []
+    return members, valid, sizes
+
+
 def _units_or_singletons(
     num_keygroups: int, units: Optional[Sequence[Sequence[int]]]
 ) -> list[np.ndarray]:
@@ -132,99 +150,111 @@ def solve_allocation(
     vdu = b.add_var("d_u", obj=-w2, lb=0.0)
     vdl = b.add_var("d_l", obj=-w2, lb=0.0)
 
-    # Assignment binaries x[u, i], only for live nodes (optionally pruned to
-    # per-unit candidate sets).
+    members, valid, sizes = _pad_units(unit_list)
+    mem_alloc = state.alloc[members]  # (nu, maxm); garbage where ~valid
+
+    # Candidate mask (nu, n): which node each unit may be assigned to.  With
+    # pruning: the k least-loaded A-nodes ∪ the unit's current homes ∪ pins.
+    cand = np.zeros((nu, n), dtype=bool)
     live_nodes = np.where(live)[0]
-    if candidate_limit is not None:
+    if candidate_limit is None:
+        cand[:, live_nodes] = True
+    else:
         loads = state.node_loads()
         a_sorted = [i for i in np.argsort(loads) if live[i] and not state.kill[i]]
-        base_cands = a_sorted[: max(candidate_limit, 1)]
-    xvar = -np.ones((nu, n), dtype=np.int64)
-    for u in range(nu):
-        if candidate_limit is None:
-            cands = live_nodes
-        else:
-            cset = set(base_cands)
-            for k in unit_list[u]:
-                home = int(state.alloc[k])
-                if live[home]:
-                    cset.add(home)
-            if u in pins:
-                cset.add(int(pins[u]))
-            cands = sorted(cset)
-        for i in cands:
-            xvar[u, i] = b.add_binary(f"x[{u},{int(i)}]")
+        cand[:, a_sorted[: max(candidate_limit, 1)]] = True
+        home_ok = valid & live[mem_alloc]
+        cand[np.nonzero(home_ok)[0], mem_alloc[home_ok]] = True
+        for u, node in pins.items():
+            cand[u, int(node)] = True
+
+    # Assignment binaries x[u, i] for every candidate pair, allocated as one
+    # contiguous block and scattered into the (nu, n) variable map.
+    u_idx, i_idx = np.nonzero(cand)
+    nbin = len(u_idx)
+    xstart = b.add_binaries(nbin)
+    bin_ids = xstart + np.arange(nbin, dtype=np.int64)
+    xvar = np.full((nu, n), -1, dtype=np.int64)
+    xvar[u_idx, i_idx] = bin_ids
 
     for u, node in pins.items():
         if not live[node]:
             raise ValueError(f"pin to dead node {node}")
         for i in live_nodes:
-            idx = xvar[u, i]
+            idx = int(xvar[u, i])
             if idx < 0:
                 continue
             # Fix bounds: 1 on the pinned node, 0 elsewhere.
-            b._lb[idx] = 1.0 if i == node else 0.0  # noqa: SLF001 - builder-internal fastpath
-            b._ub[idx] = 1.0 if i == node else 0.0  # noqa: SLF001
+            fixed = 1.0 if i == node else 0.0
+            b.set_var_bounds(idx, fixed, fixed)
 
-    # (1) each unit on exactly one node.
-    for u in range(nu):
-        cols = [xvar[u, i] for i in live_nodes if xvar[u, i] >= 0]
-        b.add_row(cols, [1.0] * len(cols), lb=1.0, ub=1.0)
+    # (1) each unit on exactly one node — one block row per unit.
+    b.add_rows(u_idx, bin_ids, np.ones(nbin), num_rows=nu, lb=1.0, ub=1.0)
 
     # (2) migration budget.  Coefficient of x[u,i] is the cost of the members
     # of u that are not already on node i ((1−q)·mc summed over the unit).
     if max_migr_cost is not None or max_migrations is not None:
-        cols, vals = [], []
-        for u, members in enumerate(unit_list):
-            cur = state.alloc[members]
-            for i in live_nodes:
-                if xvar[u, i] < 0:
-                    continue
-                moved = cur != i
-                cost = (
-                    float(moved.sum())
-                    if max_migrations is not None
-                    else float(mc[members][moved].sum())
-                )
-                if cost > 0:
-                    cols.append(xvar[u, i])
-                    vals.append(cost)
+        moved = (mem_alloc[u_idx] != i_idx[:, None]) & valid[u_idx]
+        if max_migrations is not None:
+            cost = moved.sum(axis=1).astype(np.float64)
+        else:
+            cost = (mc[members][u_idx] * moved).sum(axis=1)
         budget = float(max_migrations if max_migrations is not None else max_migr_cost)
-        if cols:
-            b.add_row(cols, vals, ub=budget)
+        nz = cost > 0
+        if nz.any():
+            b.add_row(bin_ids[nz], cost[nz], ub=budget)
 
-    # (3)/(4) load bounds per node.  Heterogeneity: divide by capacity.
-    unit_load = np.array([state.kg_load[m].sum() for m in unit_list])
-    for i in live_nodes:
-        us = [u for u in range(nu) if xvar[u, i] >= 0]
-        if not us:
-            continue  # pruned node: cannot receive anything, no bound needed
-        cols = [xvar[u, i] for u in us]
-        vals = list(unit_load[us] / state.capacity[i])
-        # (3): Σ load·x − d + d_u ≤ mean   (all live nodes, incl. B)
-        b.add_row(cols + [vd, vdu], vals + [-1.0, 1.0], ub=float(mean))
-        # (4): Σ load·x + d − d_l ≥ mean   (only nodes not marked for removal)
-        if not state.kill[i]:
-            b.add_row(cols + [vd, vdl], vals + [1.0, -1.0], lb=float(mean))
+    # (3)/(4) load bounds per node, assembled node-major from the candidate
+    # mask transpose.  Heterogeneity: divide by capacity.  Nodes without any
+    # candidate binary (pruned) cannot receive anything and need no bound.
+    unit_load = (state.kg_load[members] * valid).sum(axis=1)
+    iT, uT = np.nonzero(cand.T)
+    colsT = xvar[uT, iT]
+    loadT = unit_load[uT] / state.capacity[iT]
+    nodes3 = np.unique(iT)
+    m3 = len(nodes3)
+    # (3): Σ load·x − d + d_u ≤ mean   (all live nodes, incl. B)
+    b.add_rows(
+        np.concatenate([np.searchsorted(nodes3, iT), np.arange(m3), np.arange(m3)]),
+        np.concatenate([colsT, np.full(m3, vd), np.full(m3, vdu)]),
+        np.concatenate([loadT, -np.ones(m3), np.ones(m3)]),
+        num_rows=m3,
+        ub=float(mean),
+    )
+    # (4): Σ load·x + d − d_l ≥ mean   (only nodes not marked for removal)
+    keep = ~state.kill[iT]
+    nodes4 = nodes3[~state.kill[nodes3]]
+    m4 = len(nodes4)
+    if m4:
+        b.add_rows(
+            np.concatenate(
+                [np.searchsorted(nodes4, iT[keep]), np.arange(m4), np.arange(m4)]
+            ),
+            np.concatenate([colsT[keep], np.full(m4, vd), np.full(m4, vdl)]),
+            np.concatenate([loadT[keep], np.ones(m4), -np.ones(m4)]),
+            num_rows=m4,
+            lb=float(mean),
+        )
 
     # Multi-dimensional load extension: cap each extra resource per node.
     for _name, (usage, caps) in (extra_resources or {}).items():
-        res_unit = np.array([usage[m].sum() for m in unit_list])
-        for i in live_nodes:
-            us = [u for u in range(nu) if xvar[u, i] >= 0]
-            if not us:
-                continue
-            cols = [xvar[u, i] for u in us]
-            b.add_row(cols, list(res_unit[us]), ub=float(caps[i]))
+        res_unit = (np.asarray(usage)[members] * valid).sum(axis=1)
+        b.add_rows(
+            np.searchsorted(nodes3, iT),
+            colsT,
+            res_unit[uT],
+            num_rows=m3,
+            ub=np.asarray(caps, dtype=np.float64)[nodes3],
+        )
 
     problem = b.build()
     # Warm start: keep every unit where its (first member) currently lives.
     warm = np.zeros(problem.num_vars)
     warm[0] = mean
-    for u, members in enumerate(unit_list):
-        home = int(state.alloc[members[0]])
-        if live[home] and xvar[u, home] >= 0:
-            warm[xvar[u, home]] = 1.0
+    homes = mem_alloc[:, 0]
+    home_x = xvar[np.arange(nu), homes]
+    keep_home = live[homes] & (home_x >= 0)
+    warm[home_x[keep_home]] = 1.0
     result = solve_milp(problem, time_limit=time_limit, warm_start=warm)
 
     if not result.ok:
@@ -244,9 +274,10 @@ def solve_allocation(
 
     x = result.x
     alloc = state.alloc.copy()
-    for u, members in enumerate(unit_list):
-        scores = np.array([x[xvar[u, i]] if xvar[u, i] >= 0 else -1.0 for i in range(n)])
-        alloc[members] = int(np.argmax(scores))
+    scores = np.full((nu, n), -1.0)
+    scores[u_idx, i_idx] = x[bin_ids]
+    best = np.argmax(scores, axis=1)
+    alloc[members[valid]] = np.repeat(best, sizes)
 
     moved = np.where(alloc != state.alloc)[0]
     migrations = [(int(k), int(state.alloc[k]), int(alloc[k])) for k in moved]

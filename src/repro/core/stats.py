@@ -197,6 +197,16 @@ class SPLWindow:
     def record_send(self, src_kg: int, dst_kg: int, tuples: float) -> None:
         self.out_counts[src_kg, dst_kg] += tuples
 
+    def record_processing_many(
+        self, resource: str, kgs: np.ndarray, usage: np.ndarray
+    ) -> None:
+        """Batched :meth:`record_processing` (kgs need not be unique)."""
+        np.add.at(self.kg_usage[resource], kgs, usage)
+
+    def record_send_pairs(self, src_kgs: np.ndarray, dst_kgs: np.ndarray) -> None:
+        """Batched :meth:`record_send`: one tuple per (src, dst) pair entry."""
+        np.add.at(self.out_counts, (src_kgs, dst_kgs), 1.0)
+
     def bottleneck_resource(self) -> str:
         totals = {r: float(u.sum()) for r, u in self.kg_usage.items()}
         return max(totals, key=totals.get)  # type: ignore[arg-type]

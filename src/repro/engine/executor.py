@@ -1,6 +1,26 @@
 """The engine: executes a topology over logical nodes, measuring everything
 the controller needs (paper §3 "Statistics", §5 metrics).
 
+The data plane is array-native end to end.  Tuples move through the system as
+:class:`~repro.engine.topology.Batch` triples (key/value/ts parallel arrays),
+never as per-tuple Python objects:
+
+* routing hashes whole key arrays at once (`Topology.keygroups_of`, the same
+  32-bit mix the Pallas ``keygroup_partition`` kernel runs on TPU) and splits
+  a batch into per-key-group slices with one stable argsort — O(B log B)
+  instead of the per-unique-group mask scan's O(groups × B);
+* operator outputs stay arrays: ``fn`` may return a Batch directly (the fast
+  protocol) or a list of (key, value, ts) tuples (converted once, not per
+  downstream edge);
+* a tick is a BSP superstep: outputs produced while draining are accumulated
+  per downstream operator and routed once, at the end of the tick, as one
+  coalesced batch carrying per-tuple source attribution — so each (operator,
+  key group) gets at most one enqueue per tick and the next tick drains few,
+  fat batches instead of thousands of fragments;
+* SPL statistics (``out(g_i, g_j)``, serialization CPU, network bytes) are
+  recorded with ``np.add.at`` scatters over those per-tuple source/destination
+  arrays instead of per-tuple Python calls — same numbers, no loop.
+
 Execution is tick-based.  Per tick every node drains up to
 ``service_rate × capacity`` cost-units from its FIFO work queue; operator
 outputs are routed by key to downstream key groups; cross-node sends charge
@@ -46,6 +66,36 @@ class EngineMetrics:
         return self.processed_tuples / max(self.ticks, 1)
 
 
+def _as_batch(outputs) -> Optional[Batch]:
+    """Normalize operator output to a Batch.
+
+    A 3-tuple whose first element is an ndarray is the array-native protocol
+    (keys array, values/ts arrays or sequences) — the ndarray requirement
+    keeps a classic-protocol output that happens to hold exactly three
+    (k, v, t) triples unambiguous.  Anything else iterable is the classic
+    per-tuple protocol, transposed once.
+    """
+    if outputs is None:
+        return None
+    if (
+        isinstance(outputs, tuple)
+        and len(outputs) == 3
+        and isinstance(outputs[0], np.ndarray)
+    ):
+        keys, values, ts = outputs
+        if isinstance(values, np.ndarray) and isinstance(ts, np.ndarray):
+            return outputs
+        return make_batch(keys, values, ts)
+    if not outputs:
+        return None
+    keys, values, ts = zip(*outputs)
+    return make_batch(keys, values, ts)
+
+
+# Coalescible node-queue entry: [op, kg, list[Batch], enqueue_tick, cost].
+_QE_OP, _QE_KG, _QE_BATCHES, _QE_TICK, _QE_COST = range(5)
+
+
 class Engine:
     """Single-process execution of a Topology over ``num_nodes`` logical nodes."""
 
@@ -76,10 +126,22 @@ class Engine:
         self.metrics = EngineMetrics()
         self.latency = LatencyTracker()
         self.backpressure = CreditController(num_nodes, high_wm=50 * service_rate)
-        # Per-node FIFO of (op, kg, batch, enqueue_tick); queue cost tracked.
+        # Per-node FIFO of coalescible entries, plus an index of the queued
+        # (op, kg) entries so same-destination enqueues merge; queue cost
+        # tracked per node.
         self._queues: list[deque] = [deque() for _ in range(num_nodes)]
+        self._pending: list[dict[tuple[int, int], list]] = [
+            {} for _ in range(num_nodes)
+        ]
+        # Outputs accumulated during the current tick's drain, flushed as one
+        # routed batch per downstream operator: op -> [(batch, src_kg, src_node)].
+        self._out_pending: dict[int, list[tuple[Batch, int, int]]] = {}
         self._queue_cost = np.zeros(num_nodes)
         self._kg_op = topology.kg_operator()
+        self._cost_per_tuple = [o.cost_per_tuple for o in topology.operators]
+        # SPLWindow's usage arrays are zeroed in place on reset, so the cpu
+        # row can be cached for the per-batch charge in _process.
+        self._cpu_usage = self.window.kg_usage["cpu"]
         self._downstream = topology.downstream()
         self._ticks_this_period = 0
         self.alive = np.ones(num_nodes, dtype=bool)
@@ -101,44 +163,103 @@ class Engine:
         if n == 0:
             return 0
         batch = make_batch(keys[:n], values[:n], ts[:n])
-        self._route_batch(oid, batch, src_kg=None, src_node=None)
+        self._route_batch(oid, batch, src_kgs=None, src_nodes=None)
         return n
 
     def _route_batch(
-        self, op: int, batch: Batch, *, src_kg: Optional[int], src_node: Optional[int]
+        self,
+        op: int,
+        batch: Batch,
+        *,
+        src_kgs: Optional[np.ndarray],
+        src_nodes: Optional[np.ndarray],
     ) -> None:
-        """Partition a batch by the operator's key groups and enqueue."""
+        """Partition a batch by the operator's key groups and enqueue.
+
+        One batched hash + one stable argsort; per-group work is a slice of
+        the permuted arrays.  ``src_kgs``/``src_nodes`` carry per-tuple source
+        attribution (None for source-feed batches) so send statistics and
+        serialization charges are exact yet fully scattered.
+        """
         keys, values, ts = batch
-        if len(keys) == 0:
+        n = len(keys)
+        if n == 0:
             return
-        kgs = np.fromiter(
-            (self.topology.keygroup_of(op, k, v) for k, v in zip(keys, values)),
-            dtype=np.int64,
-            count=len(keys),
+        kgs = self.topology.keygroups_of(op, keys, values)
+        if src_kgs is not None:
+            self.window.record_send_pairs(src_kgs, kgs)
+            dst_nodes = self.router.nodes_of(kgs)
+            cross = dst_nodes != src_nodes
+            n_cross = int(cross.sum())
+            if n_cross:
+                # Cross-node: serialization at src, deserialization at dst,
+                # plus network bytes on both (paper §4.3.2 rationale).
+                cs_src, cs_dst = src_kgs[cross], kgs[cross]
+                self.window.record_processing_many("cpu", cs_src, self.ser_cost)
+                self.window.record_processing_many("cpu", cs_dst, self.ser_cost)
+                self.window.record_processing_many("network", cs_src, 1.0)
+                self.window.record_processing_many("network", cs_dst, 1.0)
+            self.metrics.cross_node_tuples += n_cross
+            self.metrics.intra_node_tuples += n - n_cross
+        order = np.argsort(kgs, kind="stable")
+        sorted_kgs = kgs[order]
+        starts = np.flatnonzero(
+            np.concatenate(([True], sorted_kgs[1:] != sorted_kgs[:-1]))
         )
-        for kg in np.unique(kgs):
-            mask = kgs == kg
-            sub = (keys[mask], values[mask], ts[mask])
-            node, buffered = self.router.route(int(kg), sub)
-            n_tuples = int(mask.sum())
-            if src_kg is not None:
-                self.window.record_send(src_kg, int(kg), n_tuples)
-                if src_node is not None and src_node != node:
-                    # Cross-node: serialization at src, deserialization at dst,
-                    # plus network bytes on both (paper §4.3.2 rationale).
-                    self.window.record_processing("cpu", src_kg, self.ser_cost * n_tuples)
-                    self.window.record_processing("cpu", int(kg), self.ser_cost * n_tuples)
-                    self.window.record_processing("network", src_kg, n_tuples)
-                    self.window.record_processing("network", int(kg), n_tuples)
-                    self.metrics.cross_node_tuples += n_tuples
-                else:
-                    self.metrics.intra_node_tuples += n_tuples
-            if not buffered:
-                self._enqueue(node, op, int(kg), sub)
+        uniq = sorted_kgs[starts]
+        if len(uniq) == 1:  # common fast case: no permutation needed
+            skeys, svalues, sts = keys, values, ts
+        else:
+            skeys, svalues, sts = keys[order], values[order], ts[order]
+        ends = np.append(starts[1:], n)
+        nodes = self.router.nodes_of(uniq)
+        # Enqueue loop over unique groups: plain-int lists (one bulk tolist
+        # instead of per-element numpy scalar unboxing), hoisted lookups.
+        ul, nl = uniq.tolist(), nodes.tolist()
+        sl, el = starts.tolist(), ends.tolist()
+        cpt = self._cost_per_tuple[op]
+        queues, pending, qcost = self._queues, self._pending, self._queue_cost
+        check_inflight = self.router.has_in_flight()
+        tick_now = self.metrics.ticks
+        touched: dict[int, int] = {}  # node -> tuples admitted this call
+        for j in range(len(ul)):
+            kg, a, z = ul[j], sl[j], el[j]
+            sub = (skeys[a:z], svalues[a:z], sts[a:z])
+            if check_inflight and self.router.is_in_flight(kg):
+                self.router.buffer(kg, sub)
+                continue
+            node = nl[j]
+            cost = cpt * (z - a)
+            entry = pending[node].get((op, kg))
+            if entry is not None and entry[_QE_TICK] == tick_now:
+                # Coalesce only within the current tick: merging into an entry
+                # that survived a drain would let one pop blow through the
+                # service budget with a multi-tick backlog.
+                entry[_QE_BATCHES].append(sub)
+                entry[_QE_COST] += cost
+            else:
+                entry = [op, kg, [sub], tick_now, cost]
+                queues[node].append(entry)
+                pending[node][(op, kg)] = entry
+            qcost[node] += cost
+            touched[node] = touched.get(node, 0) + (z - a)
+        # Queueing-latency estimate at admission: work ahead / service speed,
+        # one sample per touched node.
+        for node, admitted in touched.items():
+            budget = self.service_rate * self.capacity[node]
+            self.latency.record(qcost[node] / max(budget, 1e-9), admitted)
 
     def _enqueue(self, node: int, op: int, kg: int, batch: Batch) -> None:
-        cost = self.topology.operators[op].cost_per_tuple * len(batch[0])
-        self._queues[node].append((op, kg, batch, self.metrics.ticks, cost))
+        cost = self._cost_per_tuple[op] * len(batch[0])
+        entry = self._pending[node].get((op, kg))
+        if entry is not None and entry[_QE_TICK] == self.metrics.ticks:
+            # Same-tick coalesce only (see _route_batch).
+            entry[_QE_BATCHES].append(batch)
+            entry[_QE_COST] += cost
+        else:
+            entry = [op, kg, [batch], self.metrics.ticks, cost]
+            self._queues[node].append(entry)
+            self._pending[node][(op, kg)] = entry
         self._queue_cost[node] += cost
         # Queueing-latency estimate at admission: work ahead / service speed.
         budget = self.service_rate * self.capacity[node]
@@ -146,6 +267,12 @@ class Engine:
 
     # ------------------------------------------------------------------ tick
     def tick(self) -> None:
+        """One BSP superstep: drain every node's queue, then deliver outputs.
+
+        Operator outputs accumulate in ``_out_pending`` during the drain and
+        are routed once per downstream operator at the end of the tick, so
+        each (op, key group) receives at most one coalesced enqueue per tick.
+        """
         self.metrics.ticks += 1
         self._ticks_this_period += 1
         for node in range(self.num_nodes):
@@ -153,37 +280,65 @@ class Engine:
                 continue
             budget = self.service_rate * self.capacity[node]
             q = self._queues[node]
+            pending = self._pending[node]
             while q and budget > 0:
-                op, kg, batch, _tick_in, cost = q.popleft()
+                entry = q.popleft()
+                op, kg, batches, _tick_in, cost = entry
+                # A newer same-(op, kg) entry may own the pending slot when
+                # this one survived an earlier drain — only clear our own.
+                if pending.get((op, kg)) is entry:
+                    del pending[(op, kg)]
                 self._queue_cost[node] -= cost
                 budget -= cost
+                batch = batches[0] if len(batches) == 1 else concat_batches(batches)
                 self._process(node, op, kg, batch)
+        self._flush_outputs()
 
     def _process(self, node: int, op: int, kg: int, batch: Batch) -> None:
         spec = self.topology.operators[op]
         keys, values, ts = batch
         n = len(keys)
         self.metrics.processed_tuples += n
-        self.window.record_processing("cpu", kg, spec.cost_per_tuple * n)
-        if spec.fn is None:  # source pass-through
-            outputs = list(zip(keys.tolist(), values.tolist(), ts.tolist()))
+        self._cpu_usage[kg] += spec.cost_per_tuple * n
+        if spec.fn is None:  # source pass-through: forward the batch as-is
+            out_batch: Optional[Batch] = batch
         else:
             state = self.store.get(kg)
             state, outputs = spec.fn(state, keys, values, ts)
             self.store.put(kg, state)
-        if not outputs:
+            out_batch = _as_batch(outputs)
+        if out_batch is None or len(out_batch[0]) == 0:
             return
-        self.metrics.emitted_tuples += len(outputs)
+        self.metrics.emitted_tuples += len(out_batch[0])
         if spec.is_sink or not self._downstream[op]:
-            self.metrics.sink_outputs.extend(outputs)
+            ok, ov, ot = out_batch
+            self.metrics.sink_outputs.extend(zip(ok.tolist(), ov.tolist(), ot.tolist()))
             return
-        out_keys = [o[0] for o in outputs]
-        out_vals = [o[1] for o in outputs]
-        out_ts = [o[2] for o in outputs]
         for dop in self._downstream[op]:
-            self._route_batch(
-                dop, make_batch(out_keys, out_vals, out_ts), src_kg=kg, src_node=node
-            )
+            self._out_pending.setdefault(dop, []).append((out_batch, kg, node))
+
+    def _flush_outputs(self) -> None:
+        """Route this tick's accumulated outputs, one batch per operator."""
+        if not self._out_pending:
+            return
+        pending, self._out_pending = self._out_pending, {}
+        for dop, items in pending.items():
+            if len(items) == 1:
+                batch, src_kg, src_node = items[0]
+                n = len(batch[0])
+                src_kgs = np.full(n, src_kg, dtype=np.int64)
+                src_nodes = np.full(n, src_node, dtype=np.int64)
+            else:
+                batch = concat_batches([b for b, _, _ in items])
+                m = len(items)
+                lens = np.fromiter((len(b[0]) for b, _, _ in items), np.int64, count=m)
+                src_kgs = np.repeat(
+                    np.fromiter((kg for _, kg, _ in items), np.int64, count=m), lens
+                )
+                src_nodes = np.repeat(
+                    np.fromiter((nd for _, _, nd in items), np.int64, count=m), lens
+                )
+            self._route_batch(dop, batch, src_kgs=src_kgs, src_nodes=src_nodes)
 
     # ------------------------------------------------------- SPL statistics
     def end_period(self) -> ClusterState:
@@ -217,8 +372,10 @@ class Engine:
     def install(self, keygroup: int, dst: int, blob: bytes) -> None:
         self.store.deserialize(keygroup, blob)
         op = int(self._kg_op[keygroup])
-        for batch in self.router.complete(keygroup):
-            self._enqueue(dst, op, keygroup, batch)  # replay buffered tuples
+        buffered = self.router.complete(keygroup)
+        if buffered:
+            # Replay everything buffered during the migration as one batch.
+            self._enqueue(dst, op, keygroup, concat_batches(buffered))
 
     # --------------------------------------------------------------- elastic
     def add_nodes(self, count: int, capacity: float = 1.0) -> None:
@@ -226,6 +383,7 @@ class Engine:
         self.capacity = np.concatenate([self.capacity, np.full(count, capacity)])
         self.alive = np.concatenate([self.alive, np.ones(count, dtype=bool)])
         self._queues.extend(deque() for _ in range(count))
+        self._pending.extend({} for _ in range(count))
         self._queue_cost = np.concatenate([self._queue_cost, np.zeros(count)])
         self.backpressure.num_nodes = self.num_nodes
 
@@ -237,5 +395,6 @@ class Engine:
         """
         self.alive[node] = False
         self._queues[node].clear()
+        self._pending[node].clear()
         self._queue_cost[node] = 0.0
         return self.router.keygroups_on(node)

@@ -28,13 +28,19 @@ class Router:
     def node_of(self, kg: int) -> int:
         return int(self.table[kg])
 
-    def route(self, kg: int, batch: Batch) -> tuple[int, bool]:
-        """Return (target node, buffered?).  Buffered while migration in flight."""
-        node = self.node_of(kg)
-        if kg in self._in_flight:
-            self._buffers.setdefault(kg, []).append(batch)
-            return node, True
-        return node, False
+    def nodes_of(self, kgs: np.ndarray) -> np.ndarray:
+        """Vectorized table lookup: target node per key group."""
+        return self.table[kgs]
+
+    def has_in_flight(self) -> bool:
+        return bool(self._in_flight)
+
+    def is_in_flight(self, kg: int) -> bool:
+        return kg in self._in_flight
+
+    def buffer(self, kg: int, batch: Batch) -> None:
+        """Hold a batch for a key group whose migration is in flight."""
+        self._buffers.setdefault(kg, []).append(batch)
 
     # -- migration protocol ----------------------------------------------------
     def redirect(self, kg: int, dst: int) -> None:

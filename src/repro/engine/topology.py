@@ -25,7 +25,10 @@ Batch = tuple[np.ndarray, np.ndarray, np.ndarray]
 def make_batch(keys: Sequence, values: Sequence, ts: Sequence) -> Batch:
     k = np.asarray(keys)
     v = np.empty(len(values), dtype=object)
-    v[:] = list(values)
+    if isinstance(values, np.ndarray):
+        v[:] = values  # elementwise copy, no Python-list round-trip
+    else:
+        v[:] = list(values)
     return k, v, np.asarray(ts, dtype=np.float64)
 
 
@@ -34,9 +37,61 @@ def empty_batch() -> Batch:
 
 
 # Operator state-transition function:
-#   fn(state: dict, keys, values, ts) -> (state', list[(out_key, out_value, out_ts)])
+#   fn(state: dict, keys, values, ts) -> (state', outputs)
+# where outputs is either a list of (out_key, out_value, out_ts) tuples or —
+# the fast, array-native protocol — a Batch of three parallel arrays.
 # It is called once per (key group, batch); `state` is that key group's σ_k.
 OperatorFn = Callable[[dict, np.ndarray, np.ndarray, np.ndarray], tuple[dict, list]]
+
+
+def _identity_key(k: object) -> object:
+    return k
+
+
+def _is_int_key(x: object) -> bool:
+    """Keys eligible for the vectorized integer mix (bool excluded: its hash
+    semantics follow Python's, and streams never key by bool)."""
+    return type(x) is int or isinstance(x, np.integer)
+
+
+# splitmix/murmur3-style 32-bit finisher over the 64→32 folded key.  Chosen
+# 32-bit so the same mix runs on the TPU path (Pallas int32 lanes, see
+# repro.kernels.keygroup_partition) and in numpy; the scalar and vectorized
+# forms below are bit-identical by construction.
+_MIX_C1 = 0x85EBCA6B
+_MIX_C2 = 0xC2B2AE35
+_MASK31 = 0x7FFFFFFF
+
+
+def mix32_scalar(x: int) -> int:
+    u = int(x) & 0xFFFFFFFFFFFFFFFF
+    h = (u ^ (u >> 32)) & 0xFFFFFFFF
+    h ^= h >> 16
+    h = (h * _MIX_C1) & 0xFFFFFFFF
+    h ^= h >> 13
+    h = (h * _MIX_C2) & 0xFFFFFFFF
+    h ^= h >> 16
+    return h
+
+
+def mix32(x: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`mix32_scalar` over an integer array → uint32."""
+    with np.errstate(over="ignore"):
+        u = x.astype(np.uint64)
+        h = ((u ^ (u >> np.uint64(32))) & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        h ^= h >> np.uint32(16)
+        h = h * np.uint32(_MIX_C1)
+        h ^= h >> np.uint32(13)
+        h = h * np.uint32(_MIX_C2)
+        h ^= h >> np.uint32(16)
+    return h
+
+
+def hash_key(x: object) -> int:
+    """31-bit partition hash of one key: integer mix for ints, `hash` else."""
+    if _is_int_key(x):
+        return mix32_scalar(x) & _MASK31
+    return hash(x) & _MASK31
 
 
 @dataclasses.dataclass
@@ -62,7 +117,7 @@ class OperatorSpec:
     fn: Optional[OperatorFn]
     num_keygroups: int = 8
     cost_per_tuple: float = 1.0
-    key_fn: Callable[[object], object] = staticmethod(lambda k: k)
+    key_fn: Callable[[object], object] = _identity_key
     key_by_value: Optional[Callable[[object], object]] = None
     is_source: bool = False
     is_sink: bool = False
@@ -80,6 +135,7 @@ class Topology:
         self.operators: list[OperatorSpec] = []
         self.edges: list[tuple[int, int]] = []
         self._name_to_id: dict[str, int] = {}
+        self._kg_base: Optional[np.ndarray] = None  # cached prefix sums
 
     # -- construction --------------------------------------------------------
     def add_operator(self, spec: OperatorSpec) -> int:
@@ -88,6 +144,7 @@ class Topology:
         oid = len(self.operators)
         self.operators.append(spec)
         self._name_to_id[spec.name] = oid
+        self._kg_base = None
         return oid
 
     def connect(self, src: str | int, dst: str | int) -> None:
@@ -107,8 +164,19 @@ class Topology:
     def num_keygroups(self) -> int:
         return sum(o.num_keygroups for o in self.operators)
 
+    def kg_base_table(self) -> np.ndarray:
+        """(num_operators + 1,) prefix sums: kg id space start per operator."""
+        if self._kg_base is None or len(self._kg_base) != self.num_operators + 1:
+            sizes = np.fromiter(
+                (o.num_keygroups for o in self.operators),
+                dtype=np.int64,
+                count=self.num_operators,
+            )
+            self._kg_base = np.concatenate([np.zeros(1, dtype=np.int64), np.cumsum(sizes)])
+        return self._kg_base
+
     def kg_base(self, op: int) -> int:
-        return sum(o.num_keygroups for o in self.operators[:op])
+        return int(self.kg_base_table()[op])
 
     def kg_operator(self) -> np.ndarray:
         return np.concatenate(
@@ -152,8 +220,37 @@ class Topology:
             if (spec.key_by_value is not None and value is not None)
             else spec.key_fn(key)
         )
-        h = hash(part_key) & 0x7FFFFFFF
-        return self.kg_base(op) + (h % spec.num_keygroups)
+        return self.kg_base(op) + (hash_key(part_key) % spec.num_keygroups)
+
+    def keygroups_of(self, op: int, keys: np.ndarray, values: np.ndarray) -> np.ndarray:
+        """Batched :meth:`keygroup_of`: key-group id per tuple, as int64.
+
+        Integer partition keys take a fully vectorized path (the same 32-bit
+        mix the TPU kernel uses); object keys (strings, tuples) fall back to
+        per-object :func:`hash_key`.  Bit-identical to the scalar method.
+        """
+        spec = self.operators[op]
+        n = len(keys)
+        base = self.kg_base(op)
+        if spec.key_by_value is not None:
+            # Match the scalar path: a None value falls back to key_fn(key).
+            kbv, kfn = spec.key_by_value, spec.key_fn
+            part = [kbv(v) if v is not None else kfn(k) for k, v in zip(keys, values)]
+        elif spec.key_fn is not _identity_key:
+            kfn = spec.key_fn
+            part = [kfn(k) for k in keys]
+        else:
+            part = keys
+        if isinstance(part, np.ndarray) and np.issubdtype(part.dtype, np.integer):
+            h = (mix32(part).astype(np.int64)) & _MASK31
+        elif isinstance(part, list) and all(_is_int_key(x) for x in part):
+            folded = np.fromiter(
+                ((int(x) & 0xFFFFFFFFFFFFFFFF) for x in part), dtype=np.uint64, count=n
+            )
+            h = (mix32(folded).astype(np.int64)) & _MASK31
+        else:
+            h = np.fromiter((hash_key(x) for x in part), dtype=np.int64, count=n)
+        return base + h % spec.num_keygroups
 
     def validate(self) -> None:
         self.topo_order()  # raises on cycles

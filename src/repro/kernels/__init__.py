@@ -12,4 +12,10 @@ The paper itself contributes scheduling, not kernels; these cover the LM
 workloads' hot spots (DESIGN.md §2): flash_attention (causal/windowed GQA),
 decode_attention (single-token flash-decode), rglru_scan (blocked linear
 recurrence), moe_gemm (grouped expert matmul).
+
+keygroup_partition is the one kernel the paper's own hot path contributes:
+the engine's hash-partition/histogram routing step (key → key group, plus
+the per-group tuple counts the SPL statistics consume), running the same
+32-bit mix as `repro.engine.topology.mix32` so CPU and TPU routing agree
+bit-for-bit.
 """

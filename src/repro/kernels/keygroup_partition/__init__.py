@@ -1,0 +1,3 @@
+from repro.kernels.keygroup_partition.ops import fold_keys64, keygroup_partition
+
+__all__ = ["fold_keys64", "keygroup_partition"]

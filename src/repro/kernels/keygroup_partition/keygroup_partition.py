@@ -1,0 +1,107 @@
+"""Hash-partition + histogram: folded int32 keys → key-group ids (Pallas TPU).
+
+The engine's routing step (paper §3: hash-partitioning input keys into key
+groups) as a kernel: for each key compute the 32-bit mix the CPU data plane
+uses (``repro.engine.topology.mix32``) and its key-group id
+``(mix & 0x7FFFFFFF) % num_keygroups``, and accumulate the per-key-group
+tuple histogram the SPL statistics feed on (gLoad counting).
+
+Layout: keys are reshaped to (rows, block) int32; grid is (rows,).  Each step
+mixes one block on the VPU (uint32 multiply/xor/shift lanes) and scatters its
+one-hot histogram contribution into an f32-free int32 VMEM scratch
+accumulator, written out on the last step — the same accumulate-then-finalize
+pattern as moe_gemm's MXU tiles.  The histogram one-hot compare costs
+``block × num_keygroups`` int lanes, so ``block`` defaults small enough to
+keep the tile well under VMEM at the paper's key-group counts (≤ a few
+thousand).
+
+The 64→32 fold of raw keys happens in the wrapper (ops.py): TPU lanes are
+32-bit, and a 32-bit mix keeps the CPU and TPU paths bit-identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_MIX_C1 = 0x85EBCA6B
+_MIX_C2 = 0xC2B2AE35
+_MASK31 = 0x7FFFFFFF
+
+
+def _mix32_u32(h: jax.Array) -> jax.Array:
+    """murmur3-style finisher on uint32 lanes (== topology.mix32)."""
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_MIX_C1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_MIX_C2)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _kernel(keys_ref, valid_ref, kg_ref, hist_ref, hist_scr, *, nkg: int, nblocks: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_scr[...] = jnp.zeros_like(hist_scr)
+
+    k = keys_ref[...]  # (1, block) int32
+    h = _mix32_u32(jax.lax.bitcast_convert_type(k, jnp.uint32))
+    kg = (h & jnp.uint32(_MASK31)).astype(jnp.int32) % nkg
+    kg_ref[...] = kg
+
+    block = kg.shape[-1]
+    onehot = kg.reshape(block, 1) == jax.lax.broadcasted_iota(
+        jnp.int32, (block, nkg), 1
+    )
+    contrib = onehot.astype(jnp.int32) * valid_ref[...].reshape(block, 1)
+    hist_scr[...] += contrib.sum(axis=0, keepdims=True)
+
+    @pl.when(i == nblocks - 1)
+    def _finalize():
+        hist_ref[...] = hist_scr[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_keygroups", "block", "interpret")
+)
+def keygroup_partition_pallas(
+    keys32: jax.Array,  # (n,) int32 — already 64→32 folded
+    valid: jax.Array,  # (n,) int32 — 1 for real keys, 0 for padding
+    *,
+    num_keygroups: int,
+    block: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Return (key-group id per key (n,), histogram (num_keygroups,))."""
+    n = keys32.shape[0]
+    pad = (-n) % block
+    if pad:
+        keys32 = jnp.concatenate([keys32, jnp.zeros(pad, jnp.int32)])
+        valid = jnp.concatenate([valid, jnp.zeros(pad, jnp.int32)])
+    rows = (n + pad) // block
+    kernel = functools.partial(_kernel, nkg=num_keygroups, nblocks=rows)
+    kg, hist = pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_keygroups), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, block), jnp.int32),
+            jax.ShapeDtypeStruct((1, num_keygroups), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, num_keygroups), jnp.int32)],
+        interpret=interpret,
+    )(keys32.reshape(rows, block), valid.reshape(rows, block))
+    return kg.reshape(-1)[:n], hist[0]

@@ -1,0 +1,50 @@
+"""Dispatching wrapper for the hash-partition/histogram kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.keygroup_partition.keygroup_partition import (
+    keygroup_partition_pallas,
+)
+from repro.kernels.keygroup_partition.ref import keygroup_partition_ref
+
+
+def fold_keys64(keys: np.ndarray) -> np.ndarray:
+    """Fold raw 64-bit integer keys to the int32 lanes the TPU mix runs on.
+
+    Identical to the first step of `repro.engine.topology.mix32`, so
+    kernel(fold(keys)) == the engine's numpy key-group assignment.
+    """
+    u = np.asarray(keys).astype(np.uint64)
+    folded = ((u ^ (u >> np.uint64(32))) & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return folded.view(np.int32)
+
+
+def keygroup_partition(
+    keys: np.ndarray,
+    num_keygroups: int,
+    *,
+    base: int = 0,
+    force_pallas: bool = False,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Key-group id per key plus the per-key-group tuple histogram.
+
+    ``keys`` are raw integer keys (any 64-bit range); ``base`` offsets the
+    returned ids into the job's global key-group space, matching
+    ``Topology.keygroups_of``.
+    """
+    if len(np.asarray(keys)) == 0:
+        return np.empty(0, dtype=np.int64), np.zeros(num_keygroups, dtype=np.int64)
+    folded = jnp.asarray(fold_keys64(keys))
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        valid = jnp.ones(folded.shape[0], jnp.int32)
+        kg, hist = keygroup_partition_pallas(
+            folded, valid, num_keygroups=num_keygroups, interpret=not on_tpu
+        )
+    else:
+        kg, hist = keygroup_partition_ref(folded, num_keygroups)
+    return np.asarray(kg, dtype=np.int64) + base, np.asarray(hist, dtype=np.int64)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the hash-partition/histogram kernel.
+
+The ultimate reference is the engine's numpy group-by
+(`repro.engine.topology.Topology.keygroups_of`); this oracle restates it in
+jnp so the Pallas kernel can be asserted against it in tests at any shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_MIX_C1 = 0x85EBCA6B
+_MIX_C2 = 0xC2B2AE35
+_MASK31 = 0x7FFFFFFF
+
+
+def keygroup_partition_ref(
+    keys32: jax.Array, num_keygroups: int
+) -> tuple[jax.Array, jax.Array]:
+    """(n,) folded int32 keys → (key-group ids (n,), histogram (nkg,))."""
+    h = jax.lax.bitcast_convert_type(keys32, jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_MIX_C1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_MIX_C2)
+    h = h ^ (h >> 16)
+    kg = (h & jnp.uint32(_MASK31)).astype(jnp.int32) % num_keygroups
+    hist = jnp.zeros(num_keygroups, jnp.int32).at[kg].add(1)
+    return kg, hist

@@ -178,14 +178,24 @@ def _moe_expert_parallel(cfg: ModelConfig, p: dict, x: jax.Array, rules: dict) -
         return jax.lax.psum(out, "model")
 
     weights = (w_gate, p["w_up"], p["w_down"]) if has_gate else (p["w_up"], p["w_down"])
-    return jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(batch_axes, None, None), P(), *([w_spec] * len(weights))),
-        out_specs=P(batch_axes, None, None),
-        axis_names=set(mesh.axis_names),
-        check_vma=False,
-    )(x, p["router"], *weights)
+    in_specs = (P(batch_axes, None, None), P(), *([w_spec] * len(weights)))
+    out_specs = P(batch_axes, None, None)
+    if hasattr(jax, "shard_map"):
+        mapped = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            axis_names=set(mesh.axis_names),
+            check_vma=False,
+        )
+    else:  # jax < 0.6: shard_map lives in experimental, check flag named check_rep
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        mapped = _shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+        )
+    return mapped(x, p["router"], *weights)
 
 
 def moe_forward(

@@ -162,18 +162,27 @@ def dense_rows(problem: MilpProblem) -> np.ndarray:
 
 
 class MilpBuilder:
-    """Incremental sparse builder for :class:`MilpProblem`."""
+    """Incremental sparse builder for :class:`MilpProblem`.
+
+    Constraint triplets and variable attributes are stored as *chunks* (lists
+    of numpy arrays concatenated once in :meth:`build`), so the bulk paths —
+    :meth:`add_binaries` and :meth:`add_rows` — append whole constraint blocks
+    without any per-element Python list traffic.
+    """
 
     def __init__(self) -> None:
-        self._obj: list[float] = []
-        self._lb: list[float] = []
-        self._ub: list[float] = []
-        self._int: list[int] = []
-        self._rows: list[int] = []
-        self._cols: list[int] = []
-        self._vals: list[float] = []
-        self._row_lb: list[float] = []
-        self._row_ub: list[float] = []
+        self._num_vars = 0
+        self._obj: list[np.ndarray] = []
+        self._lb: list[np.ndarray] = []
+        self._ub: list[np.ndarray] = []
+        self._int: list[np.ndarray] = []
+        self._rows: list[np.ndarray] = []
+        self._cols: list[np.ndarray] = []
+        self._vals: list[np.ndarray] = []
+        self._num_rows = 0
+        self._row_lb: list[np.ndarray] = []
+        self._row_ub: list[np.ndarray] = []
+        self._bound_overrides: dict[int, tuple[float, float]] = {}
         self.names: dict[str, int] = {}
 
     # -- variables ---------------------------------------------------------
@@ -186,17 +195,36 @@ class MilpBuilder:
         ub: float = np.inf,
         integer: bool = False,
     ) -> int:
-        idx = len(self._obj)
-        self._obj.append(obj)
-        self._lb.append(lb)
-        self._ub.append(ub)
-        self._int.append(1 if integer else 0)
+        idx = self._num_vars
+        self._num_vars += 1
+        self._obj.append(np.array([obj], dtype=np.float64))
+        self._lb.append(np.array([lb], dtype=np.float64))
+        self._ub.append(np.array([ub], dtype=np.float64))
+        self._int.append(np.array([1 if integer else 0], dtype=np.int64))
         if name:
             self.names[name] = idx
         return idx
 
     def add_binary(self, name: str, *, obj: float = 0.0) -> int:
         return self.add_var(name, obj=obj, lb=0.0, ub=1.0, integer=True)
+
+    def add_binaries(self, count: int) -> int:
+        """Bulk-append ``count`` anonymous binaries; returns the first index.
+
+        Indices are contiguous — caller code typically scatters
+        ``start + np.arange(count)`` into its own variable map.
+        """
+        start = self._num_vars
+        self._num_vars += count
+        self._obj.append(np.zeros(count))
+        self._lb.append(np.zeros(count))
+        self._ub.append(np.ones(count))
+        self._int.append(np.ones(count, dtype=np.int64))
+        return start
+
+    def set_var_bounds(self, idx: int, lb: float, ub: float) -> None:
+        """Override one variable's bounds (e.g. fix a pinned binary)."""
+        self._bound_overrides[idx] = (float(lb), float(ub))
 
     # -- constraints --------------------------------------------------------
     def add_row(
@@ -207,27 +235,70 @@ class MilpBuilder:
         lb: float = -np.inf,
         ub: float = np.inf,
     ) -> int:
-        row = len(self._row_lb)
+        row = self._num_rows
         cols = np.asarray(cols, dtype=np.int64)
         vals = np.asarray(vals, dtype=np.float64)
         if cols.shape != vals.shape:
             raise ValueError(f"cols/vals mismatch {cols.shape} vs {vals.shape}")
-        self._rows.extend([row] * len(cols))
-        self._cols.extend(cols.tolist())
-        self._vals.extend(vals.tolist())
-        self._row_lb.append(lb)
-        self._row_ub.append(ub)
+        self._rows.append(np.full(len(cols), row, dtype=np.int64))
+        self._cols.append(cols)
+        self._vals.append(vals)
+        self._num_rows += 1
+        self._row_lb.append(np.array([lb]))
+        self._row_ub.append(np.array([ub]))
         return row
 
+    def add_rows(
+        self,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        *,
+        num_rows: int,
+        lb: float | np.ndarray = -np.inf,
+        ub: float | np.ndarray = np.inf,
+    ) -> int:
+        """Bulk-append a block of ``num_rows`` rows from COO triplets.
+
+        ``rows`` holds block-relative indices in ``[0, num_rows)``; ``lb``/
+        ``ub`` are scalars or (num_rows,) arrays.  Returns the block's first
+        global row index.
+        """
+        base = self._num_rows
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        vals = np.asarray(vals, dtype=np.float64)
+        if not (rows.shape == cols.shape == vals.shape):
+            raise ValueError(
+                f"rows/cols/vals mismatch {rows.shape}/{cols.shape}/{vals.shape}"
+            )
+        self._rows.append(rows + base)
+        self._cols.append(cols)
+        self._vals.append(vals)
+        self._row_lb.append(np.broadcast_to(np.asarray(lb, dtype=np.float64), (num_rows,)))
+        self._row_ub.append(np.broadcast_to(np.asarray(ub, dtype=np.float64), (num_rows,)))
+        self._num_rows += num_rows
+        return base
+
     def build(self) -> MilpProblem:
+        def cat(chunks: list[np.ndarray], dtype) -> np.ndarray:
+            if not chunks:
+                return np.empty(0, dtype=dtype)
+            return np.concatenate(chunks).astype(dtype, copy=False)
+
+        var_lb = cat(self._lb, np.float64)
+        var_ub = cat(self._ub, np.float64)
+        for idx, (lo, hi) in self._bound_overrides.items():
+            var_lb[idx] = lo
+            var_ub[idx] = hi
         return MilpProblem(
-            c=np.asarray(self._obj, dtype=np.float64),
-            a_rows=np.asarray(self._rows, dtype=np.int64),
-            a_cols=np.asarray(self._cols, dtype=np.int64),
-            a_vals=np.asarray(self._vals, dtype=np.float64),
-            row_lb=np.asarray(self._row_lb, dtype=np.float64),
-            row_ub=np.asarray(self._row_ub, dtype=np.float64),
-            var_lb=np.asarray(self._lb, dtype=np.float64),
-            var_ub=np.asarray(self._ub, dtype=np.float64),
-            integrality=np.asarray(self._int, dtype=np.int64),
+            c=cat(self._obj, np.float64),
+            a_rows=cat(self._rows, np.int64),
+            a_cols=cat(self._cols, np.int64),
+            a_vals=cat(self._vals, np.float64),
+            row_lb=cat(self._row_lb, np.float64),
+            row_ub=cat(self._row_ub, np.float64),
+            var_lb=var_lb,
+            var_ub=var_ub,
+            integrality=cat(self._int, np.int64),
         )

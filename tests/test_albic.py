@@ -1,6 +1,9 @@
 """ALBIC (§4.3.2, Algorithm 2) behaviour."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import AlbicParams, albic, solve_allocation

@@ -1,0 +1,30 @@
+"""The §5.1 synthetic cluster generator: the ±varies node-load spread."""
+
+import numpy as np
+import pytest
+
+from benchmarks.common import synthetic_cluster
+
+
+@pytest.mark.parametrize("varies", [10.0, 20.0])
+def test_synthetic_cluster_spread(varies):
+    """20% of nodes sit ±varies/2 percent off the pack, the rest tight."""
+    state = synthetic_cluster(20, 400, 10, varies=varies, seed=3)
+    loads = state.node_loads()
+    med = float(np.median(loads))
+    half = varies / 2.0 / 100.0
+    # The adjusted nodes bracket the distribution at ±varies/2 of the median
+    # (key-group-level ±5% jitter averages out over 20 key groups per node).
+    assert abs(loads.max() / med - (1.0 + half)) < 0.03
+    assert abs(loads.min() / med - (1.0 - half)) < 0.03
+    # Exactly ~60% mean utilization as specified in §5.1.
+    assert abs(med - 60.0) / 60.0 < 0.05
+
+
+def test_synthetic_cluster_shapes():
+    state = synthetic_cluster(8, 160, 4, one_to_one_pct=50.0, seed=0)
+    assert state.num_nodes == 8
+    assert state.num_keygroups == 160
+    assert state.out_rates.shape == (160, 160)
+    # Even allocation round-robins key groups over nodes.
+    assert np.bincount(state.alloc, minlength=8).std() == 0

@@ -1,6 +1,9 @@
 """Balanced graph partitioning (METIS stand-in) quality and invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.solver.graphpart import (

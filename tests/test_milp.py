@@ -2,6 +2,8 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ClusterState, solve_allocation

@@ -5,6 +5,9 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
