@@ -1,0 +1,115 @@
+"""Perf-regression gate: compare a benchmark JSON against the baseline.
+
+CI runs ``python -m benchmarks.run --quick --json BENCH_<sha>.json`` and then
+``python -m benchmarks.compare benchmarks/baseline.json BENCH_<sha>.json``;
+the job fails when any gated row regressed by more than ``--threshold``
+(default 20%).  Gated rows are the ones whose module prefix is in
+``--modules`` (default: the two perf-critical suites, engine_throughput and
+solver_perf) and whose baseline time clears ``--min-us`` — sub-50µs rows are
+noise, not signal.
+
+To update the committed baseline after an intentional perf change::
+
+    PYTHONPATH=src python -m benchmarks.run --quick \
+        --only solver_perf,engine_throughput --json benchmarks/baseline.json
+
+The baseline is machine-dependent: refresh it from the same class of runner
+the gate executes on (for GitHub Actions, a ubuntu-latest runner).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+DEFAULT_MODULES = ("engine_throughput", "solver_perf")
+DEFAULT_THRESHOLD = 1.20  # fail if new time > 1.2 × baseline time
+DEFAULT_MIN_US = 50.0
+
+
+@dataclasses.dataclass
+class Comparison:
+    name: str
+    base_us: float
+    new_us: float
+
+    @property
+    def ratio(self) -> float:
+        return self.new_us / self.base_us if self.base_us > 0 else float("inf")
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
+
+
+def compare(
+    baseline: dict[str, float],
+    new: dict[str, float],
+    *,
+    modules: tuple[str, ...] = DEFAULT_MODULES,
+    threshold: float = DEFAULT_THRESHOLD,
+    min_us: float = DEFAULT_MIN_US,
+) -> tuple[list[Comparison], list[Comparison]]:
+    """Return (all gated comparisons, regressions beyond the threshold)."""
+    gated: list[Comparison] = []
+    regressions: list[Comparison] = []
+    for name, base_us in sorted(baseline.items()):
+        module = name.split("/", 1)[0]
+        if module not in modules:
+            continue
+        if name not in new:
+            continue  # renamed/removed rows don't fail the gate
+        c = Comparison(name, base_us, new[name])
+        gated.append(c)
+        if base_us >= min_us and c.ratio > threshold:
+            regressions.append(c)
+    return gated, regressions
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("new", help="freshly measured JSON")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    ap.add_argument("--min-us", type=float, default=DEFAULT_MIN_US)
+    ap.add_argument(
+        "--modules",
+        default=",".join(DEFAULT_MODULES),
+        help="comma-separated module prefixes to gate",
+    )
+    args = ap.parse_args(argv)
+
+    baseline = load_rows(args.baseline)
+    new = load_rows(args.new)
+    modules = tuple(m for m in args.modules.split(",") if m)
+    gated, regressions = compare(
+        baseline, new, modules=modules, threshold=args.threshold, min_us=args.min_us
+    )
+
+    if not gated:
+        print("perf gate: no comparable rows — check module names", file=sys.stderr)
+        return 2
+    width = max(len(c.name) for c in gated)
+    print(f"{'row'.ljust(width)}  baseline_us   new_us     ratio")
+    for c in gated:
+        flag = "  << REGRESSION" if c in regressions else ""
+        print(
+            f"{c.name.ljust(width)}  {c.base_us:11.1f}  {c.new_us:9.1f}  {c.ratio:7.2f}{flag}"
+        )
+    if regressions:
+        print(
+            f"\nperf gate FAILED: {len(regressions)} row(s) regressed "
+            f"more than {(args.threshold - 1) * 100:.0f}% vs baseline",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"\nperf gate OK ({len(gated)} rows within {(args.threshold-1)*100:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

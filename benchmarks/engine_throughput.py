@@ -24,21 +24,37 @@ from repro.engine.topology import OperatorSpec, Topology
 def _rekey_stage(shift: int):
     """Near-zero-cost operator: re-key every tuple by an integer shift.
 
-    Uses the engine's array-native output protocol (a Batch instead of a list
-    of tuples).  The pre-PR baseline was measured with the equivalent
-    list-of-tuples body — the only protocol that engine supported.
+    Implements both operator protocols: the per-run ``fn`` (the engine's
+    fallback for non-contiguous segments, and the oracle the equivalence
+    tests pin ``fn_seg`` against) and the segment-vectorized ``fn_seg`` that
+    updates every key group's state and re-keys the whole contiguous segment
+    in one call.  Protocol lineage: the pre-PR-1 baseline used the
+    list-of-tuples body, PR 1 the array-native ``fn``, PR 2 adds ``fn_seg``.
     """
 
     def fn(state, keys, values, ts):
         state["n"] = state.get("n", 0) + len(keys)
         return state, (keys + shift, values, ts)
 
-    return fn
+    def fn_seg(store, kgs, starts, ends, keys, values, ts):
+        for kg, a, z in zip(kgs, starts, ends):
+            st = store[kg]
+            st["n"] = st.get("n", 0) + (z - a)
+        return (keys + shift, values, ts), None  # output lengths == inputs
+
+    return fn, fn_seg
 
 
 def _counting_sink(state, keys, values, ts):
     state["n"] = state.get("n", 0) + len(keys)
     return state, []
+
+
+def _counting_sink_seg(store, kgs, starts, ends, keys, values, ts):
+    for kg, a, z in zip(kgs, starts, ends):
+        st = store[kg]
+        st["n"] = st.get("n", 0) + (z - a)
+    return None, None
 
 
 def make_pipeline_job(*, num_keygroups: int = 64, depth: int = 3) -> Topology:
@@ -50,13 +66,20 @@ def make_pipeline_job(*, num_keygroups: int = 64, depth: int = 3) -> Topology:
     prev = "src"
     for i in range(depth - 1):
         name = f"stage{i}"
+        fn, fn_seg = _rekey_stage(17 * (i + 1))
         t.add_operator(
-            OperatorSpec(name, _rekey_stage(17 * (i + 1)), num_keygroups=num_keygroups)
+            OperatorSpec(name, fn, num_keygroups=num_keygroups, fn_seg=fn_seg)
         )
         t.connect(prev, name)
         prev = name
     t.add_operator(
-        OperatorSpec("sink", _counting_sink, num_keygroups=num_keygroups, is_sink=True)
+        OperatorSpec(
+            "sink",
+            _counting_sink,
+            num_keygroups=num_keygroups,
+            is_sink=True,
+            fn_seg=_counting_sink_seg,
+        )
     )
     t.connect(prev, "sink")
     return t
@@ -82,7 +105,8 @@ def measure_pipeline(
     best = 0.0
     for _ in range(max(repeats, 1)):
         topo = make_pipeline_job(num_keygroups=num_keygroups, depth=depth)
-        eng = Engine(topo, num_nodes=8, service_rate=1e12, seed=0)
+        # collect_sinks=False: measure the data plane, not sink-list appends.
+        eng = Engine(topo, num_nodes=8, service_rate=1e12, seed=0, collect_sinks=False)
         # Warm up one tick (store/window allocation) outside the timed region.
         eng.push_source("src", keys, values, ts)
         eng.tick()

@@ -24,7 +24,9 @@ def build(kgs: int, nodes: int, seed: int) -> tuple[Engine, callable]:
     # O(10s) of percent, not O(1) — at trivial utilization the ceil bias
     # dominates the load distance.
     topo = real_job_1(keygroups_per_op=kgs)
-    eng = Engine(topo, nodes, ser_cost=0.3, service_rate=nodes * 90.0, seed=seed)
+    eng = Engine(
+        topo, nodes, ser_cost=0.3, service_rate=nodes * 90.0, seed=seed, collect_sinks=False
+    )
     stream = wiki_edit_stream(StreamSpec(rate=350.0, fluctuation=0.4, seed=seed))
 
     def feeder(engine, tick):

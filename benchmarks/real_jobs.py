@@ -32,7 +32,15 @@ def build(job_key: str, kgs: int, nodes: int, seed: int):
         base = topo.kg_base(op)
         n_op = topo.operators[op].num_keygroups
         alloc[base : base + n_op] = (np.arange(n_op) + op * (nodes // 2 + 1)) % nodes
-    eng = Engine(topo, nodes, initial_alloc=alloc, ser_cost=0.6, service_rate=3000.0, seed=seed)
+    eng = Engine(
+        topo,
+        nodes,
+        initial_alloc=alloc,
+        ser_cost=0.6,
+        service_rate=3000.0,
+        seed=seed,
+        collect_sinks=False,  # long runs: don't accumulate sink tuples
+    )
     air = airline_stream(StreamSpec(rate=220.0, seed=seed))
     wx = weather_stream(StreamSpec(rate=80.0, seed=seed))
 

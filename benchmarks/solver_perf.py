@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
+
 
 from benchmarks.common import csv_row, synthetic_cluster
 from repro.core import solve_allocation

@@ -27,7 +27,7 @@ from repro.core.scaling import (
     UtilizationScaler,
     apply_scaling,
 )
-from repro.core.stats import ClusterState, SPLWindow
+from repro.core.stats import ClusterState, PairRates, SPLWindow
 
 __all__ = [
     "AdaptationFramework",
@@ -41,6 +41,7 @@ __all__ = [
     "Migration",
     "MigrationPlan",
     "NullScaler",
+    "PairRates",
     "ScalingDecision",
     "SPLWindow",
     "UtilizationScaler",

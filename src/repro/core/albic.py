@@ -57,32 +57,45 @@ class AlbicResult:
 def _score_pairs(
     state: ClusterState, score_factor: float
 ) -> tuple[list[tuple[int, int]], list[tuple[int, int, float]]]:
-    """Algorithm 2 lines 2–12: (colGrps, toBeColGrps-with-rates)."""
+    """Algorithm 2 lines 2–12: (colGrps, toBeColGrps-with-rates).
+
+    Walks the sparse pair triples (CSR rows) instead of dense (G, G) rows:
+    a key group's candidate downstream partners are exactly its nonzero
+    pairs, and the per-source average still divides by the *full* downstream
+    key-group count (zero-rate partners dilute the average but can never be
+    hot themselves).
+    """
     col: list[tuple[int, int]] = []
     tobe: list[tuple[int, int, float]] = []
-    out = state.out_rates
+    indptr, dsts, rates = state.out_pairs.rows_csr()
+    kg_op = state.kg_operator
+    op_sizes = np.bincount(kg_op, minlength=int(kg_op.max()) + 1 if len(kg_op) else 0)
     for op, downs in state.downstream.items():
         if not downs:
             continue
-        op_kgs = np.where(state.kg_operator == op)[0]
-        down_kgs = np.concatenate(
-            [np.where(state.kg_operator == d)[0] for d in downs]
-        )
-        if len(down_kgs) == 0:
+        op_kgs = np.where(kg_op == op)[0]
+        n_down = int(op_sizes[downs].sum())
+        if n_down == 0:
             continue
+        downs_arr = np.asarray(downs)
         for gk in op_kgs:
-            rates = out[gk, down_kgs]
-            total = float(rates.sum())
+            row = slice(indptr[gk], indptr[gk + 1])
+            d, r = dsts[row], rates[row]
+            m = np.isin(kg_op[d], downs_arr)
+            rm = r[m]
+            total = float(rm.sum())
             if total <= 0:
                 continue
-            avg = total / len(down_kgs)
-            hot = down_kgs[rates > avg * score_factor]
-            for gj in hot:
+            avg = total / n_down
+            sel = rm > avg * score_factor
+            hot = d[m][sel]
+            hot_rates = rm[sel]
+            for gj, rate in zip(hot, hot_rates):
                 pair = (int(gk), int(gj))
                 if state.alloc[gk] == state.alloc[gj]:
                     col.append(pair)
                 else:
-                    tobe.append((*pair, float(out[gk, gj])))
+                    tobe.append((*pair, float(rate)))
     return col, tobe
 
 
@@ -138,15 +151,14 @@ def _split_set(
         vweights = mc[members] if rng.random() < 0.5 else state.kg_load[members]
 
     idx = {g: i for i, g in enumerate(members)}
-    sub = state.out_rates[np.ix_(members, members)]
-    sub = sub + sub.T
-    iu, iv = np.triu_indices(len(members), k=1)
-    mask = sub[iu, iv] > 0
+    index_map = np.full(state.num_keygroups, -1, dtype=np.int64)
+    index_map[members] = np.arange(len(members))
+    eu, ev, ew = state.out_pairs.symmetric_edges(index_map)
     graph = Graph(
         num_vertices=len(members),
-        edge_u=iu[mask],
-        edge_v=iv[mask],
-        edge_w=sub[iu, iv][mask],
+        edge_u=eu,
+        edge_v=ev,
+        edge_w=ew,
         vertex_w=np.maximum(vweights, 1e-9),
     )
     labels = partition_graph(graph, nparts, seed=int(rng.integers(2**31)))

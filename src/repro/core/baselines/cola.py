@@ -32,14 +32,12 @@ def cola_allocate(
     nparts = len(live)
     g = state.num_keygroups
 
-    sym = state.out_rates + state.out_rates.T
-    iu, iv = np.triu_indices(g, k=1)
-    mask = sym[iu, iv] > 0
+    eu, ev, ew = state.out_pairs.symmetric_edges()
     graph = Graph(
         num_vertices=g,
-        edge_u=iu[mask],
-        edge_v=iv[mask],
-        edge_w=sym[iu, iv][mask],
+        edge_u=eu,
+        edge_v=ev,
+        edge_w=ew,
         vertex_w=np.maximum(state.kg_load, 1e-9),
     )
     labels = partition_graph(graph, nparts, balance_tol=balance_tol, seed=seed)

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Protocol
+from typing import Protocol
 
 import numpy as np
 

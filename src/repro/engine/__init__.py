@@ -12,14 +12,17 @@ from repro.engine.state import KeyedStore
 from repro.engine.router import Router
 from repro.engine.executor import Engine, EngineMetrics
 from repro.engine.controller import Controller, ControllerConfig
+from repro.engine.workqueue import DequeWorkQueue, SoAWorkQueue
 
 __all__ = [
     "Controller",
     "ControllerConfig",
+    "DequeWorkQueue",
     "Engine",
     "EngineMetrics",
     "KeyedStore",
     "OperatorSpec",
     "Router",
+    "SoAWorkQueue",
     "Topology",
 ]

@@ -7,19 +7,37 @@ never as per-tuple Python objects:
 
 * routing hashes whole key arrays at once (`Topology.keygroups_of`, the same
   32-bit mix the Pallas ``keygroup_partition`` kernel runs on TPU) and splits
-  a batch into per-key-group slices with one stable argsort — O(B log B)
-  instead of the per-unique-group mask scan's O(groups × B);
-* operator outputs stay arrays: ``fn`` may return a Batch directly (the fast
-  protocol) or a list of (key, value, ts) tuples (converted once, not per
-  downstream edge);
+  a batch into per-key-group runs with one stable argsort — on TPU (or with
+  ``kernel_stats=True``) the kernel computes the key-group ids *and* the
+  per-key-group tuple histogram in one pass, and that histogram feeds SPL
+  statistics directly; the numpy path (``np.bincount``) is the bit-identical
+  CPU fallback;
+* work queues are structure-of-arrays (:mod:`repro.engine.workqueue`): a
+  routed batch is sorted once by the (destination node, key group)
+  composite and pushed as one *segment* per node — a contiguous slice of
+  the shared key/value/ts arrays plus parallel ``(kg, start, end, cost)``
+  run-index lists — and ``tick()`` drains a node by walking those lists and
+  slicing fat arrays instead of popping thousands of per-(op, key group)
+  queue entries; CPU charges for the drained runs land in one vectorized
+  scatter;
+* operators may implement the segment-vectorized protocol
+  (``OperatorSpec.fn_seg``): one call covers every key group a node drains
+  for that operator in a tick, with the per-run ``fn`` as the required
+  fallback for non-contiguous segments (in-flight migrations, partial
+  budgets) and as the semantic oracle the equivalence tests pin against;
 * a tick is a BSP superstep: outputs produced while draining are accumulated
   per downstream operator and routed once, at the end of the tick, as one
   coalesced batch carrying per-tuple source attribution — so each (operator,
-  key group) gets at most one enqueue per tick and the next tick drains few,
-  fat batches instead of thousands of fragments;
-* SPL statistics (``out(g_i, g_j)``, serialization CPU, network bytes) are
-  recorded with ``np.add.at`` scatters over those per-tuple source/destination
-  arrays instead of per-tuple Python calls — same numbers, no loop.
+  key group) gets at most one segment push per tick and the next tick drains
+  few, fat runs instead of thousands of fragments;
+* SPL statistics — ``out(g_i, g_j)`` pair counts, per-key-group arrival
+  histograms, serialization CPU, network bytes — are recorded as arrays
+  (sparse pair codes, histograms, ``np.add.at`` scatters), never per-tuple
+  Python calls;
+* direct state migration moves a key group's *queued* work along with its
+  state: ``redirect`` masks the key group's runs out of the source node's
+  queue (``extract_keygroup``) into the router's in-flight buffer, and
+  ``install`` replays buffer + backlog at the destination in FIFO order.
 
 Execution is tick-based.  Per tick every node drains up to
 ``service_rate × capacity`` cost-units from its FIFO work queue; operator
@@ -30,17 +48,16 @@ depth beyond the service budget becomes queueing latency and, via
 credit-based backpressure, throttles the sources — reproducing the dynamics
 that make long-term balance matter.
 
-On TPU deployments the logical nodes map 1:1 onto mesh devices and operator
-``fn``s are jitted shard_map shards; on CPU (tests, paper benchmarks) the
-nodes timeshare the host.  The engine semantics are identical — that is the
-point of keeping reconfiguration decisions as *data* (routing table) rather
-than recompiles.
+``queue_impl="deque"`` selects the legacy per-entry queue, kept as the
+equivalence oracle: tests/test_routing_equivalence.py runs both
+implementations on identical inputs and requires bit-identical tuple flow
+and SPL statistics.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import sys
 from typing import Optional
 
 import numpy as np
@@ -49,7 +66,8 @@ from repro.core.stats import ClusterState, SPLWindow
 from repro.engine.backpressure import CreditController, LatencyTracker
 from repro.engine.router import Router, concat_batches
 from repro.engine.state import KeyedStore
-from repro.engine.topology import Batch, Topology, make_batch
+from repro.engine.topology import Batch, Topology, _identity_key, make_batch
+from repro.engine.workqueue import _S_CUR, QUEUE_IMPLS, SoAWorkQueue
 
 
 @dataclasses.dataclass
@@ -60,6 +78,10 @@ class EngineMetrics:
     cross_node_tuples: int = 0
     intra_node_tuples: int = 0
     dropped_credits: int = 0
+    sink_tuples: int = 0
+    # Materialized sink tuples; only populated when the engine was built with
+    # ``collect_sinks=True`` (unbounded growth otherwise — benchmarks disable
+    # it so they measure the data plane, not list appends).
     sink_outputs: list = dataclasses.field(default_factory=list)
 
     def throughput(self) -> float:
@@ -92,8 +114,19 @@ def _as_batch(outputs) -> Optional[Batch]:
     return make_batch(keys, values, ts)
 
 
-# Coalescible node-queue entry: [op, kg, list[Batch], enqueue_tick, cost].
-_QE_OP, _QE_KG, _QE_BATCHES, _QE_TICK, _QE_COST = range(5)
+def _auto_kernel_stats() -> bool:
+    """Use the Pallas partition kernel only when jax is already up on TPU.
+
+    Checked without importing jax: an engine on a CPU host must not pay jax
+    initialization for a path it will never take.
+    """
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return False
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
 
 
 class Engine:
@@ -109,6 +142,9 @@ class Engine:
         service_rate: float = 1_000.0,  # cost-units a reference node serves per tick
         ser_cost: float = 0.25,  # cost-units per cross-node tuple (each side)
         seed: int = 0,
+        queue_impl: str = "soa",
+        collect_sinks: bool = True,
+        kernel_stats: Optional[bool] = None,
     ) -> None:
         topology.validate()
         self.topology = topology
@@ -126,29 +162,42 @@ class Engine:
         self.metrics = EngineMetrics()
         self.latency = LatencyTracker()
         self.backpressure = CreditController(num_nodes, high_wm=50 * service_rate)
-        # Per-node FIFO of coalescible entries, plus an index of the queued
-        # (op, kg) entries so same-destination enqueues merge; queue cost
-        # tracked per node.
-        self._queues: list[deque] = [deque() for _ in range(num_nodes)]
-        self._pending: list[dict[tuple[int, int], list]] = [
-            {} for _ in range(num_nodes)
-        ]
+        self.collect_sinks = collect_sinks
+        self.kernel_stats = (
+            _auto_kernel_stats() if kernel_stats is None else bool(kernel_stats)
+        )
+        self._partition_kernel = None  # lazily imported when kernel_stats is on
+        if queue_impl not in QUEUE_IMPLS:
+            raise ValueError(f"unknown queue_impl {queue_impl!r}")
+        self.queue_impl = queue_impl
+        queue_cls = QUEUE_IMPLS[queue_impl]
+        self._queues = [queue_cls() for _ in range(num_nodes)]
         # Outputs accumulated during the current tick's drain, flushed as one
         # routed batch per downstream operator: op -> [(batch, src_kg, src_node)].
         self._out_pending: dict[int, list[tuple[Batch, int, int]]] = {}
-        self._queue_cost = np.zeros(num_nodes)
         self._kg_op = topology.kg_operator()
         self._cost_per_tuple = [o.cost_per_tuple for o in topology.operators]
-        # SPLWindow's usage arrays are zeroed in place on reset, so the cpu
-        # row can be cached for the per-batch charge in _process.
+        self._op_fn = [o.fn for o in topology.operators]
+        self._op_fn_seg = [o.fn_seg for o in topology.operators]
+        self._op_nkg = [o.num_keygroups for o in topology.operators]
+        self._op_base = [topology.kg_base(i) for i in range(topology.num_operators)]
+        self._op_terminal = [
+            o.is_sink or not topology.downstream()[i]
+            for i, o in enumerate(topology.operators)
+        ]
+        # SPLWindow's usage arrays are zeroed in place on reset, so these rows
+        # can be cached for the per-tick charges.
         self._cpu_usage = self.window.kg_usage["cpu"]
+        self._arrivals = self.window.kg_arrivals
         self._downstream = topology.downstream()
+        self._capacity_list = self.capacity.tolist()
         self._ticks_this_period = 0
         self.alive = np.ones(num_nodes, dtype=bool)
 
     # ------------------------------------------------------------------ feed
     def source_credits(self) -> int:
-        return self.backpressure.credits(self._queue_cost)
+        worst = max(q.cost for q in self._queues) if self._queues else 0.0
+        return self.backpressure.credits_from_worst(worst)
 
     def push_source(self, op: str | int, keys, values, ts) -> int:
         """Feed tuples into a source operator; returns tuples accepted."""
@@ -166,6 +215,27 @@ class Engine:
         self._route_batch(oid, batch, src_kgs=None, src_nodes=None)
         return n
 
+    # --------------------------------------------------------------- routing
+    def _partition(self, op: int, keys, values) -> tuple[np.ndarray, Optional[np.ndarray]]:
+        """Key-group id per tuple, plus the arrival histogram when the kernel
+        path computed it for free (None → caller falls back to np.bincount)."""
+        if self.kernel_stats:
+            spec = self.topology.operators[op]
+            if (
+                spec.key_by_value is None
+                and spec.key_fn is _identity_key
+                and isinstance(keys, np.ndarray)
+                and np.issubdtype(keys.dtype, np.integer)
+            ):
+                if self._partition_kernel is None:
+                    from repro.kernels.keygroup_partition import keygroup_partition
+
+                    self._partition_kernel = keygroup_partition
+                return self._partition_kernel(
+                    keys, spec.num_keygroups, base=self.topology.kg_base(op)
+                )
+        return self.topology.keygroups_of(op, keys, values), None
+
     def _route_batch(
         self,
         op: int,
@@ -176,94 +246,142 @@ class Engine:
     ) -> None:
         """Partition a batch by the operator's key groups and enqueue.
 
-        One batched hash + one stable argsort; per-group work is a slice of
-        the permuted arrays.  ``src_kgs``/``src_nodes`` carry per-tuple source
-        attribution (None for source-feed batches) so send statistics and
-        serialization charges are exact yet fully scattered.
+        One batched hash + one stable argsort; the sorted arrays are shared by
+        every destination node's segment (runs are views, nothing is copied).
+        ``src_kgs``/``src_nodes`` carry per-tuple source attribution (None for
+        source-feed batches) so send statistics and serialization charges are
+        exact yet fully scattered.
         """
         keys, values, ts = batch
         n = len(keys)
         if n == 0:
             return
-        kgs = self.topology.keygroups_of(op, keys, values)
+        kgs, hist = self._partition(op, keys, values)
+        window = self.window
+        nkg = self._op_nkg[op]
+        base = self._op_base[op]
+        local = kgs - base
+        tup_nodes = self.router.nodes_of(kgs)
         if src_kgs is not None:
-            self.window.record_send_pairs(src_kgs, kgs)
-            dst_nodes = self.router.nodes_of(kgs)
-            cross = dst_nodes != src_nodes
-            n_cross = int(cross.sum())
+            window.record_send_pairs(src_kgs, kgs)
+            cross = tup_nodes != src_nodes
+            cs_src = src_kgs[cross]
+            n_cross = len(cs_src)
             if n_cross:
                 # Cross-node: serialization at src, deserialization at dst,
-                # plus network bytes on both (paper §4.3.2 rationale).
-                cs_src, cs_dst = src_kgs[cross], kgs[cross]
-                self.window.record_processing_many("cpu", cs_src, self.ser_cost)
-                self.window.record_processing_many("cpu", cs_dst, self.ser_cost)
-                self.window.record_processing_many("network", cs_src, 1.0)
-                self.window.record_processing_many("network", cs_dst, 1.0)
+                # plus network bytes on both (paper §4.3.2 rationale) — one
+                # histogram per side, then vector adds on the usage rows.
+                g = len(self._arrivals)
+                both = np.bincount(cs_src, minlength=g)
+                both += np.bincount(kgs[cross], minlength=g)
+                self._cpu_usage += both * self.ser_cost
+                window.kg_usage["network"] += both
             self.metrics.cross_node_tuples += n_cross
             self.metrics.intra_node_tuples += n - n_cross
-        order = np.argsort(kgs, kind="stable")
-        sorted_kgs = kgs[order]
-        starts = np.flatnonzero(
-            np.concatenate(([True], sorted_kgs[1:] != sorted_kgs[:-1]))
-        )
-        uniq = sorted_kgs[starts]
+        # Sort tuples by the (destination node, key group) composite so each
+        # node's work is ONE contiguous slice of the sorted arrays and runs
+        # are adjacent within it — segments can then be drained with whole-
+        # slice operations.  The composite fits int16 at benchmark scales,
+        # where numpy's stable sort is radix (~4× the int64 comparison sort).
+        comp = tup_nodes * nkg + local
+        chist = np.bincount(comp)
+        nz = np.flatnonzero(chist)  # one entry per (node, kg) == per kg
+        counts = chist[nz]
+        ends = np.cumsum(counts)
+        starts = ends - counts
+        run_nodes = nz // nkg
+        uniq = nz % nkg + base
+        if hist is None:
+            np.add.at(self._arrivals, uniq, counts)
+        else:
+            window.kg_arrivals[base : base + nkg] += hist
         if len(uniq) == 1:  # common fast case: no permutation needed
             skeys, svalues, sts = keys, values, ts
         else:
-            skeys, svalues, sts = keys[order], values[order], ts[order]
-        ends = np.append(starts[1:], n)
-        nodes = self.router.nodes_of(uniq)
-        # Enqueue loop over unique groups: plain-int lists (one bulk tolist
-        # instead of per-element numpy scalar unboxing), hoisted lookups.
-        ul, nl = uniq.tolist(), nodes.tolist()
-        sl, el = starts.tolist(), ends.tolist()
-        cpt = self._cost_per_tuple[op]
-        queues, pending, qcost = self._queues, self._pending, self._queue_cost
-        check_inflight = self.router.has_in_flight()
-        tick_now = self.metrics.ticks
-        touched: dict[int, int] = {}  # node -> tuples admitted this call
-        for j in range(len(ul)):
-            kg, a, z = ul[j], sl[j], el[j]
-            sub = (skeys[a:z], svalues[a:z], sts[a:z])
-            if check_inflight and self.router.is_in_flight(kg):
-                self.router.buffer(kg, sub)
-                continue
-            node = nl[j]
-            cost = cpt * (z - a)
-            entry = pending[node].get((op, kg))
-            if entry is not None and entry[_QE_TICK] == tick_now:
-                # Coalesce only within the current tick: merging into an entry
-                # that survived a drain would let one pop blow through the
-                # service budget with a multi-tick backlog.
-                entry[_QE_BATCHES].append(sub)
-                entry[_QE_COST] += cost
+            if self.num_nodes * nkg <= 32767:
+                order = np.argsort(comp.astype(np.int16), kind="stable")
             else:
-                entry = [op, kg, [sub], tick_now, cost]
-                queues[node].append(entry)
-                pending[node][(op, kg)] = entry
-            qcost[node] += cost
-            touched[node] = touched.get(node, 0) + (z - a)
-        # Queueing-latency estimate at admission: work ahead / service speed,
-        # one sample per touched node.
-        for node, admitted in touched.items():
-            budget = self.service_rate * self.capacity[node]
-            self.latency.record(qcost[node] / max(budget, 1e-9), admitted)
+                order = np.argsort(comp, kind="stable")
+            skeys, svalues, sts = keys[order], values[order], ts[order]
+        costs = counts * self._cost_per_tuple[op]
+        # Runs for key groups whose migration is in flight divert to the
+        # router's buffer; the rest flow to their nodes.  Removal can break
+        # run adjacency, so those pushes are marked non-contiguous.
+        contig = True
+        if self.router.has_in_flight():
+            infl = self.router.in_flight_mask(uniq)
+            if infl.any():
+                sl, el = starts.tolist(), ends.tolist()
+                for j in np.flatnonzero(infl).tolist():
+                    a, z = sl[j], el[j]
+                    self.router.buffer(int(uniq[j]), (skeys[a:z], svalues[a:z], sts[a:z]))
+                keep = ~infl
+                uniq, starts, ends = uniq[keep], starts[keep], ends[keep]
+                counts, costs = counts[keep], costs[keep]
+                run_nodes = run_nodes[keep]
+                contig = False
+                if len(uniq) == 0:
+                    return
+        queues = self._queues
+        service_rate = self.service_rate
+        caps = self._capacity_list
+        lat_append = self.latency.samples.append
+        if len(uniq) == 1:  # single-run fast path
+            node = int(run_nodes[0])
+            q = queues[node]
+            q.push_runs(
+                op,
+                skeys,
+                svalues,
+                sts,
+                uniq.tolist(),
+                starts.tolist(),
+                ends.tolist(),
+                costs.tolist(),
+                contig=True,
+            )
+            self._record_admission(node, int(counts[0]))
+            return
+        # Runs arrive sorted by node: node groups are contiguous slices of
+        # the run arrays (and of the tuple arrays — that is the point).
+        gstarts = np.flatnonzero(
+            np.concatenate(([True], run_nodes[1:] != run_nodes[:-1]))
+        )
+        unodes = run_nodes[gstarts].tolist()
+        gends = np.append(gstarts[1:], len(run_nodes))
+        kg_l = uniq.tolist()
+        st_l = starts.tolist()
+        en_l = ends.tolist()
+        co_l = costs.tolist()
+        node_counts = np.add.reduceat(counts, gstarts).tolist()
+        gsl, gel = gstarts.tolist(), gends.tolist()
+        for j in range(len(unodes)):
+            a, z = gsl[j], gel[j]
+            node = unodes[j]
+            q = queues[node]
+            q.push_runs(
+                op,
+                skeys,
+                svalues,
+                sts,
+                kg_l[a:z],
+                st_l[a:z],
+                en_l[a:z],
+                co_l[a:z],
+                contig=contig,
+            )
+            admitted = node_counts[j]
+            lat_append(
+                (
+                    q.cost / max(service_rate * caps[node], 1e-9),
+                    admitted if admitted < 16 else 16,
+                )
+            )
 
-    def _enqueue(self, node: int, op: int, kg: int, batch: Batch) -> None:
-        cost = self._cost_per_tuple[op] * len(batch[0])
-        entry = self._pending[node].get((op, kg))
-        if entry is not None and entry[_QE_TICK] == self.metrics.ticks:
-            # Same-tick coalesce only (see _route_batch).
-            entry[_QE_BATCHES].append(batch)
-            entry[_QE_COST] += cost
-        else:
-            entry = [op, kg, [batch], self.metrics.ticks, cost]
-            self._queues[node].append(entry)
-            self._pending[node][(op, kg)] = entry
-        self._queue_cost[node] += cost
-        # Queueing-latency estimate at admission: work ahead / service speed.
-        budget = self.service_rate * self.capacity[node]
-        self.latency.record(self._queue_cost[node] / max(budget, 1e-9), len(batch[0]))
+    def _record_admission(self, node: int, admitted: int) -> None:
+        """Queueing-latency estimate at admission: work ahead / service speed."""
+        budget = self.service_rate * self._capacity_list[node]
+        self.latency.record(self._queues[node].cost / max(budget, 1e-9), admitted)
 
     # ------------------------------------------------------------------ tick
     def tick(self) -> None:
@@ -271,73 +389,308 @@ class Engine:
 
         Operator outputs accumulate in ``_out_pending`` during the drain and
         are routed once per downstream operator at the end of the tick, so
-        each (op, key group) receives at most one coalesced enqueue per tick.
+        each (op, key group) receives at most one segment push per tick.  CPU
+        charges for the drained runs are scattered once, at the end.
         """
         self.metrics.ticks += 1
         self._ticks_this_period += 1
-        for node in range(self.num_nodes):
-            if not self.alive[node]:
+        drained_kgs: list[int] = []
+        drained_costs: list[float] = []
+        service_rate = self.service_rate
+        caps = self._capacity_list
+        alive = self.alive.tolist()
+        for node, q in enumerate(self._queues):
+            if not q or not alive[node]:
                 continue
-            budget = self.service_rate * self.capacity[node]
-            q = self._queues[node]
-            pending = self._pending[node]
-            while q and budget > 0:
-                entry = q.popleft()
-                op, kg, batches, _tick_in, cost = entry
-                # A newer same-(op, kg) entry may own the pending slot when
-                # this one survived an earlier drain — only clear our own.
-                if pending.get((op, kg)) is entry:
-                    del pending[(op, kg)]
-                self._queue_cost[node] -= cost
-                budget -= cost
-                batch = batches[0] if len(batches) == 1 else concat_batches(batches)
-                self._process(node, op, kg, batch)
+            budget = service_rate * caps[node]
+            if q.__class__ is SoAWorkQueue:
+                self._drain_soa(node, q, budget, drained_kgs, drained_costs)
+            else:
+                q.drain(budget, self._process, node, drained_kgs, drained_costs)
+        if drained_kgs:
+            np.add.at(self._cpu_usage, drained_kgs, drained_costs)
         self._flush_outputs()
 
-    def _process(self, node: int, op: int, kg: int, batch: Batch) -> None:
-        spec = self.topology.operators[op]
-        keys, values, ts = batch
-        n = len(keys)
-        self.metrics.processed_tuples += n
-        self._cpu_usage[kg] += spec.cost_per_tuple * n
-        if spec.fn is None:  # source pass-through: forward the batch as-is
-            out_batch: Optional[Batch] = batch
+    def _drain_soa(
+        self, node: int, q, budget: float, out_kgs: list, out_costs: list
+    ) -> None:
+        """SoA drain with the per-run processing fused into the walk.
+
+        Semantically identical to ``q.drain(budget, self._process, ...)`` —
+        the fusion exists to hoist every per-run attribute lookup out of the
+        loop (at ~32-tuple runs the data plane is bounded by per-run Python
+        overhead, not array math).
+        """
+        segs = q._segs
+        qcost = q.cost
+        op_fn = self._op_fn
+        terminal = self._op_terminal
+        downstream = self._downstream
+        store = self.store.raw()
+        pending = self._out_pending
+        collect = self.collect_sinks
+        metrics = self.metrics
+        sink_outputs = metrics.sink_outputs
+        processed = emitted = sink_n = 0
+        kg_append, cost_append = out_kgs.append, out_costs.append
+        op_fn_seg = self._op_fn_seg
+        while segs and budget > 0:
+            seg = segs[0]
+            keys, values, ts, op, kgs, starts, ends, costs, cur, contig = seg
+            fn = op_fn[op]
+            term = terminal[op]
+            downs = downstream[op]
+            nruns = len(kgs)
+            rem_cost = sum(costs[cur:])
+            if budget >= rem_cost:
+                # Whole segment fits the budget (the common case): consume
+                # its accounting in bulk, then run the per-key-group state
+                # transitions without per-run budget bookkeeping.  Budget and
+                # queue cost are still subtracted run by run so the float
+                # trajectory is bit-identical to the per-run (deque-oracle)
+                # path even for non-dyadic operator costs.
+                out_kgs.extend(kgs[cur:])
+                out_costs.extend(costs[cur:])
+                for c in costs[cur:]:
+                    budget -= c
+                    qcost -= c
+                fseg = op_fn_seg[op]
+                if contig and (fn is None or fseg is not None):
+                    # Contiguous segment: the runs tile one slice [A:Z) of
+                    # the shared arrays, so the whole segment moves with a
+                    # handful of array ops — pass-through forwards the slice
+                    # as-is; fn_seg ops transform it in one vectorized call.
+                    rk, rs, re_ = kgs[cur:], starts[cur:], ends[cur:]
+                    a0, zn = rs[0], re_[-1]
+                    n_seg = zn - a0
+                    processed += n_seg
+                    if fn is None:
+                        outputs = (keys[a0:zn], values[a0:zn], ts[a0:zn])
+                        out_lens = None
+                    else:
+                        rel_s = [a - a0 for a in rs] if a0 else rs
+                        rel_e = [z - a0 for z in re_] if a0 else re_
+                        outputs, out_lens = fseg(
+                            store, rk, rel_s, rel_e,
+                            keys[a0:zn], values[a0:zn], ts[a0:zn],
+                        )
+                    if outputs is not None:
+                        n_out = len(outputs[0])
+                        if n_out:
+                            emitted += n_out
+                            if term:
+                                sink_n += n_out
+                                if collect:
+                                    sink_outputs.extend(
+                                        zip(
+                                            outputs[0].tolist(),
+                                            outputs[1].tolist(),
+                                            outputs[2].tolist(),
+                                        )
+                                    )
+                            else:
+                                if out_lens is None:
+                                    lens = np.subtract(re_, rs)
+                                else:
+                                    lens = np.asarray(out_lens, dtype=np.int64)
+                                    if len(lens) != len(rk) or lens.sum() != n_out:
+                                        raise ValueError(
+                                            f"fn_seg of operator {op} returned "
+                                            f"out_counts {out_lens!r} inconsistent "
+                                            f"with its {n_out}-tuple output over "
+                                            f"{len(rk)} runs"
+                                        )
+                                kg_arr = np.repeat(
+                                    np.asarray(rk, dtype=np.int64), lens
+                                )
+                                item = (outputs, kg_arr, node)
+                                for dop in downs:
+                                    try:
+                                        pending[dop].append(item)
+                                    except KeyError:
+                                        pending[dop] = [item]
+                    segs.popleft()
+                    if budget <= 0:
+                        break
+                    continue
+                # Single-downstream fast path: bind the output list once.
+                if not term and len(downs) == 1:
+                    plist = pending.get(downs[0])
+                    if plist is None:
+                        plist = pending[downs[0]] = []
+                    emit = plist.append
+                else:
+                    emit = None
+                for kg, a, z in zip(kgs[cur:], starts[cur:], ends[cur:]):
+                    k, v, t = keys[a:z], values[a:z], ts[a:z]
+                    processed += z - a
+                    if fn is None:
+                        out = (k, v, t)
+                    else:
+                        state = store[kg]
+                        state, outputs = fn(state, k, v, t)
+                        store[kg] = state
+                        if (
+                            type(outputs) is tuple
+                            and len(outputs) == 3
+                            and isinstance(outputs[0], np.ndarray)
+                            and isinstance(outputs[1], np.ndarray)
+                            and isinstance(outputs[2], np.ndarray)
+                        ):
+                            out = outputs  # array-native fast protocol
+                        else:
+                            out = _as_batch(outputs)
+                            if out is None:
+                                continue
+                    ok = out[0]
+                    n_out = len(ok)
+                    if n_out:
+                        emitted += n_out
+                        if emit is not None:
+                            emit((out, kg, node))
+                        elif term:
+                            sink_n += n_out
+                            if collect:
+                                sink_outputs.extend(
+                                    zip(ok.tolist(), out[1].tolist(), out[2].tolist())
+                                )
+                        else:
+                            item = (out, kg, node)
+                            for dop in downs:
+                                try:
+                                    pending[dop].append(item)
+                                except KeyError:
+                                    pending[dop] = [item]
+                segs.popleft()
+                if budget <= 0:
+                    break
+                continue
+            for kg, a, z, c in zip(kgs[cur:], starts[cur:], ends[cur:], costs[cur:]):
+                cur += 1
+                budget -= c
+                qcost -= c
+                kg_append(kg)
+                cost_append(c)
+                k, v, t = keys[a:z], values[a:z], ts[a:z]
+                processed += z - a
+                if fn is None:  # source pass-through: forward the batch as-is
+                    out = (k, v, t)
+                else:
+                    state = store[kg]
+                    state, outputs = fn(state, k, v, t)
+                    store[kg] = state
+                    if (
+                        type(outputs) is tuple
+                        and len(outputs) == 3
+                        and isinstance(outputs[0], np.ndarray)
+                        and isinstance(outputs[1], np.ndarray)
+                        and isinstance(outputs[2], np.ndarray)
+                    ):
+                        out = outputs  # array-native fast protocol
+                    else:
+                        out = _as_batch(outputs)
+                        if out is None:
+                            if budget <= 0:
+                                break
+                            continue
+                ok = out[0]
+                n_out = len(ok)
+                if n_out:
+                    emitted += n_out
+                    if term:
+                        sink_n += n_out
+                        if collect:
+                            sink_outputs.extend(
+                                zip(ok.tolist(), out[1].tolist(), out[2].tolist())
+                            )
+                    else:
+                        item = (out, kg, node)
+                        for dop in downs:
+                            try:
+                                pending[dop].append(item)
+                            except KeyError:
+                                pending[dop] = [item]
+                if budget <= 0:
+                    break
+            if cur < nruns:
+                seg[_S_CUR] = cur
+                break
+            segs.popleft()
+        q.cost = qcost
+        metrics.processed_tuples += processed
+        metrics.emitted_tuples += emitted
+        metrics.sink_tuples += sink_n
+
+    def _process(self, node: int, op: int, kg: int, keys, values, ts) -> None:
+        metrics = self.metrics
+        metrics.processed_tuples += len(keys)
+        fn = self._op_fn[op]
+        if fn is None:  # source pass-through: forward the batch as-is
+            out_batch: Optional[Batch] = (keys, values, ts)
         else:
             state = self.store.get(kg)
-            state, outputs = spec.fn(state, keys, values, ts)
+            state, outputs = fn(state, keys, values, ts)
             self.store.put(kg, state)
             out_batch = _as_batch(outputs)
-        if out_batch is None or len(out_batch[0]) == 0:
+        if out_batch is None:
             return
-        self.metrics.emitted_tuples += len(out_batch[0])
-        if spec.is_sink or not self._downstream[op]:
-            ok, ov, ot = out_batch
-            self.metrics.sink_outputs.extend(zip(ok.tolist(), ov.tolist(), ot.tolist()))
+        ok = out_batch[0]
+        n_out = len(ok)
+        if n_out == 0:
             return
+        metrics.emitted_tuples += n_out
+        if self._op_terminal[op]:
+            metrics.sink_tuples += n_out
+            if self.collect_sinks:
+                metrics.sink_outputs.extend(
+                    zip(ok.tolist(), out_batch[1].tolist(), out_batch[2].tolist())
+                )
+            return
+        item = (out_batch, kg, node)
+        pending = self._out_pending
         for dop in self._downstream[op]:
-            self._out_pending.setdefault(dop, []).append((out_batch, kg, node))
+            try:
+                pending[dop].append(item)
+            except KeyError:
+                pending[dop] = [item]
 
     def _flush_outputs(self) -> None:
-        """Route this tick's accumulated outputs, one batch per operator."""
+        """Route this tick's accumulated outputs, one batch per operator.
+
+        An item's source-kg attribution is a scalar (one run) or an array
+        (a contiguous segment spanning several key groups).
+        """
         if not self._out_pending:
             return
         pending, self._out_pending = self._out_pending, {}
         for dop, items in pending.items():
+            if not items:  # list pre-bound by the drain fast path, unused
+                continue
             if len(items) == 1:
                 batch, src_kg, src_node = items[0]
                 n = len(batch[0])
-                src_kgs = np.full(n, src_kg, dtype=np.int64)
+                if type(src_kg) is np.ndarray:
+                    src_kgs = src_kg
+                else:
+                    src_kgs = np.full(n, src_kg, dtype=np.int64)
                 src_nodes = np.full(n, src_node, dtype=np.int64)
             else:
-                batch = concat_batches([b for b, _, _ in items])
+                batches, kg_t, nd_t = zip(*items)
+                batch = concat_batches(list(batches))
                 m = len(items)
-                lens = np.fromiter((len(b[0]) for b, _, _ in items), np.int64, count=m)
-                src_kgs = np.repeat(
-                    np.fromiter((kg for _, kg, _ in items), np.int64, count=m), lens
-                )
-                src_nodes = np.repeat(
-                    np.fromiter((nd for _, _, nd in items), np.int64, count=m), lens
-                )
+                lens = np.fromiter((len(b[0]) for b in batches), np.int64, count=m)
+                if any(type(k) is np.ndarray for k in kg_t):
+                    src_kgs = np.concatenate(
+                        [
+                            k
+                            if type(k) is np.ndarray
+                            else np.full(int(ln), k, dtype=np.int64)
+                            for k, ln in zip(kg_t, lens)
+                        ]
+                    )
+                else:
+                    src_kgs = np.repeat(np.fromiter(kg_t, np.int64, count=m), lens)
+                src_nodes = np.repeat(np.fromiter(nd_t, np.int64, count=m), lens)
             self._route_batch(dop, batch, src_kgs=src_kgs, src_nodes=src_nodes)
 
     # ------------------------------------------------------- SPL statistics
@@ -345,16 +698,17 @@ class Engine:
         """Fold the SPL window into a ClusterState snapshot and reset it."""
         ticks = max(self._ticks_this_period, 1)
         scale = 100.0 / (ticks * self.service_rate)  # → % of a reference node
-        kg_load, out_rates, _resource = self.window.fold(scale_to_percent=scale)
+        kg_load, out_pairs, _resource = self.window.fold(scale_to_percent=scale)
         state = ClusterState.create(
             self.num_nodes,
             self._kg_op,
             kg_load,
             self.router.table.copy(),
             kg_state_bytes=self.store.state_bytes(refresh=True),
-            out_rates=out_rates,
+            out_rates=out_pairs,
             downstream=self._downstream,
             capacity=self.capacity.copy(),
+            kg_tuple_rate=self.window.kg_arrivals / ticks,
         )
         state.alive = self.alive.copy()
         self.window.reset()
@@ -364,7 +718,18 @@ class Engine:
     # ------------------------------------------------- direct state migration
     # StateMover protocol (repro.core.migration).
     def redirect(self, keygroup: int, dst: int) -> None:
+        """Flip routing for the key group and pull its queued work along.
+
+        The key group's pending runs are masked out of its current node's
+        queue and parked in the router's in-flight buffer (ahead of anything
+        that arrives during the migration), so ``install`` replays *all* of
+        the key group's outstanding tuples at the destination in FIFO order.
+        """
+        src = self.router.node_of(keygroup)
         self.router.redirect(keygroup, dst)
+        batches, _removed = self._queues[src].extract_keygroup(keygroup)
+        for b in batches:
+            self.router.buffer(keygroup, b)
 
     def serialize(self, keygroup: int) -> bytes:
         return self.store.serialize(keygroup)
@@ -375,16 +740,19 @@ class Engine:
         buffered = self.router.complete(keygroup)
         if buffered:
             # Replay everything buffered during the migration as one batch.
-            self._enqueue(dst, op, keygroup, concat_batches(buffered))
+            batch = concat_batches(buffered)
+            cost = self._cost_per_tuple[op] * len(batch[0])
+            self._queues[dst].push_batch(op, keygroup, batch, cost)
+            self._record_admission(dst, len(batch[0]))
 
     # --------------------------------------------------------------- elastic
     def add_nodes(self, count: int, capacity: float = 1.0) -> None:
         self.num_nodes += count
         self.capacity = np.concatenate([self.capacity, np.full(count, capacity)])
         self.alive = np.concatenate([self.alive, np.ones(count, dtype=bool)])
-        self._queues.extend(deque() for _ in range(count))
-        self._pending.extend({} for _ in range(count))
-        self._queue_cost = np.concatenate([self._queue_cost, np.zeros(count)])
+        queue_cls = QUEUE_IMPLS[self.queue_impl]
+        self._queues.extend(queue_cls() for _ in range(count))
+        self._capacity_list = self.capacity.tolist()
         self.backpressure.num_nodes = self.num_nodes
 
     def fail_node(self, node: int) -> np.ndarray:
@@ -395,6 +763,4 @@ class Engine:
         """
         self.alive[node] = False
         self._queues[node].clear()
-        self._pending[node].clear()
-        self._queue_cost[node] = 0.0
         return self.router.keygroups_on(node)

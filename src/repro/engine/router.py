@@ -23,6 +23,7 @@ class Router:
         self.table = np.asarray(initial_alloc, dtype=np.int64).copy()
         self._buffers: dict[int, list[Batch]] = {}
         self._in_flight: set[int] = set()
+        self._in_flight_arr = np.empty(0, dtype=np.int64)  # sorted cache
 
     # -- routing -------------------------------------------------------------
     def node_of(self, kg: int) -> int:
@@ -38,6 +39,10 @@ class Router:
     def is_in_flight(self, kg: int) -> bool:
         return kg in self._in_flight
 
+    def in_flight_mask(self, kgs: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`is_in_flight` over an array of key-group ids."""
+        return np.isin(kgs, self._in_flight_arr)
+
     def buffer(self, kg: int, batch: Batch) -> None:
         """Hold a batch for a key group whose migration is in flight."""
         self._buffers.setdefault(kg, []).append(batch)
@@ -46,11 +51,13 @@ class Router:
     def redirect(self, kg: int, dst: int) -> None:
         self.table[kg] = dst
         self._in_flight.add(kg)
+        self._in_flight_arr = np.fromiter(self._in_flight, dtype=np.int64)
         self._buffers.setdefault(kg, [])
 
     def complete(self, kg: int) -> list[Batch]:
         """State installed at dst: stop buffering, return tuples to replay."""
         self._in_flight.discard(kg)
+        self._in_flight_arr = np.fromiter(self._in_flight, dtype=np.int64)
         return self._buffers.pop(kg, [])
 
     @property

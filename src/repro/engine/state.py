@@ -26,6 +26,10 @@ class KeyedStore:
     def put(self, kg: int, state: dict) -> None:
         self._state[kg] = state
 
+    def raw(self) -> list[dict]:
+        """The underlying per-key-group state list (hot-path access)."""
+        return self._state
+
     def serialize(self, kg: int) -> bytes:
         blob = pickle.dumps(self._state[kg], protocol=pickle.HIGHEST_PROTOCOL)
         self._sizes[kg] = len(blob)

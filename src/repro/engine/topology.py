@@ -24,10 +24,14 @@ Batch = tuple[np.ndarray, np.ndarray, np.ndarray]
 
 def make_batch(keys: Sequence, values: Sequence, ts: Sequence) -> Batch:
     k = np.asarray(keys)
-    v = np.empty(len(values), dtype=object)
     if isinstance(values, np.ndarray):
-        v[:] = values  # elementwise copy, no Python-list round-trip
+        # Preserve the native dtype: a numeric values array flows through
+        # slicing/gather/concat unboxed (object arrays pay per-element
+        # refcounting on every gather).  Copied, not aliased — queued
+        # batches must survive a caller refilling its buffer.
+        v = values.copy()
     else:
+        v = np.empty(len(values), dtype=object)
         v[:] = list(values)
     return k, v, np.asarray(ts, dtype=np.float64)
 
@@ -42,6 +46,22 @@ def empty_batch() -> Batch:
 # the fast, array-native protocol — a Batch of three parallel arrays.
 # It is called once per (key group, batch); `state` is that key group's σ_k.
 OperatorFn = Callable[[dict, np.ndarray, np.ndarray, np.ndarray], tuple[dict, list]]
+
+# Segment-level state transition (optional, the vectorized protocol):
+#   fn_seg(store, kgs, starts, ends, keys, values, ts) -> (outputs, out_counts)
+# One call covers every key group a node drains for this operator in a tick:
+# `store` is the engine's state list (index by global key-group id), `kgs` the
+# run key groups, and `starts`/`ends` slice bounds into the contiguous
+# key/value/ts arrays.  `outputs` is a Batch (or None) concatenated over the
+# runs in run order; `out_counts` gives per-run output lengths (None means
+# each run emitted exactly its input length).  Must be semantically identical
+# to calling `fn` run by run — the engine falls back to `fn` whenever the
+# segment is not contiguous (in-flight migrations, partial budgets), and the
+# routing-equivalence tests pin the two protocols against each other.
+SegmentFn = Callable[
+    [list, list, list, list, np.ndarray, np.ndarray, np.ndarray],
+    tuple[Optional[Batch], Optional[list]],
+]
 
 
 def _identity_key(k: object) -> object:
@@ -74,12 +94,27 @@ def mix32_scalar(x: int) -> int:
     return h
 
 
+import sys as _sys
+
+_LITTLE_ENDIAN = _sys.byteorder == "little"
+
+
 def mix32(x: np.ndarray) -> np.ndarray:
     """Vectorized :func:`mix32_scalar` over an integer array → uint32."""
     with np.errstate(over="ignore"):
-        u = x.astype(np.uint64)
-        h = ((u ^ (u >> np.uint64(32))) & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-        h ^= h >> np.uint32(16)
+        if (
+            _LITTLE_ENDIAN
+            and x.dtype in (np.dtype(np.int64), np.dtype(np.uint64))
+            and x.flags.c_contiguous
+        ):
+            # (u ^ (u >> 32)) & 0xFFFFFFFF == lo ^ hi on uint32 lanes —
+            # stays on 32-bit ops instead of widening to uint64.
+            pair = x.view(np.uint32).reshape(-1, 2)
+            h = pair[:, 0] ^ pair[:, 1]
+        else:
+            u = x.astype(np.uint64)
+            h = ((u ^ (u >> np.uint64(32))) & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        h = h ^ (h >> np.uint32(16))
         h = h * np.uint32(_MIX_C1)
         h ^= h >> np.uint32(13)
         h = h * np.uint32(_MIX_C2)
@@ -92,6 +127,21 @@ def hash_key(x: object) -> int:
     if _is_int_key(x):
         return mix32_scalar(x) & _MASK31
     return hash(x) & _MASK31
+
+
+def _mixed_keygroups(h: np.ndarray, base: int, nkg: int) -> np.ndarray:
+    """(mix32 output → global key-group ids), staying on uint32 lanes.
+
+    Bit-identical to ``base + ((h & MASK31) % nkg)`` on int64: the masked
+    value is non-negative, so the uint32 modulo (and the bitwise-and
+    shortcut when nkg is a power of two) gives the same residues.
+    """
+    h = h & np.uint32(_MASK31)
+    if nkg & (nkg - 1) == 0:  # power of two: mod is a mask
+        loc = h & np.uint32(nkg - 1)
+    else:
+        loc = h % np.uint32(nkg)
+    return loc.astype(np.int64) + base
 
 
 @dataclasses.dataclass
@@ -121,6 +171,7 @@ class OperatorSpec:
     key_by_value: Optional[Callable[[object], object]] = None
     is_source: bool = False
     is_sink: bool = False
+    fn_seg: Optional[SegmentFn] = None  # vectorized protocol (see SegmentFn)
 
 
 class Topology:
@@ -241,16 +292,16 @@ class Topology:
             part = [kfn(k) for k in keys]
         else:
             part = keys
-        if isinstance(part, np.ndarray) and np.issubdtype(part.dtype, np.integer):
-            h = (mix32(part).astype(np.int64)) & _MASK31
-        elif isinstance(part, list) and all(_is_int_key(x) for x in part):
+        nkg = spec.num_keygroups
+        if isinstance(part, np.ndarray) and part.dtype.kind in "iu":
+            return _mixed_keygroups(mix32(part), base, nkg)
+        if isinstance(part, list) and all(_is_int_key(x) for x in part):
             folded = np.fromiter(
                 ((int(x) & 0xFFFFFFFFFFFFFFFF) for x in part), dtype=np.uint64, count=n
             )
-            h = (mix32(folded).astype(np.int64)) & _MASK31
-        else:
-            h = np.fromiter((hash_key(x) for x in part), dtype=np.int64, count=n)
-        return base + h % spec.num_keygroups
+            return _mixed_keygroups(mix32(folded), base, nkg)
+        h = np.fromiter((hash_key(x) for x in part), dtype=np.int64, count=n)
+        return base + h % nkg
 
     def validate(self) -> None:
         self.topo_order()  # raises on cycles
@@ -259,4 +310,11 @@ class Topology:
             if o.is_sink and downs[i]:
                 raise ValueError(f"sink {o.name!r} has downstream edges")
             if not o.is_source and o.fn is None:
+                # This also guarantees every fn_seg operator has the per-run
+                # fn the engine falls back to on non-contiguous segments.
                 raise ValueError(f"non-source {o.name!r} lacks fn")
+            if o.fn_seg is not None and o.is_source:
+                raise ValueError(
+                    f"source {o.name!r} cannot have fn_seg — sources are "
+                    "pass-through; the engine forwards their batches directly"
+                )

@@ -21,7 +21,7 @@ import time
 import traceback
 
 import jax
-from jax import ShapeDtypeStruct
+
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

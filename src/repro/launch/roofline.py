@@ -41,7 +41,7 @@ import dataclasses
 import re
 from typing import Optional
 
-import numpy as np
+
 
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip

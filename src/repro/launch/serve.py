@@ -37,7 +37,7 @@ from repro.core import (
     ClusterState,
     UtilizationScaler,
 )
-from repro.models import Model, init_params, make_serve_step
+from repro.models import init_params, make_serve_step
 from repro.models.kvcache import init_cache
 
 

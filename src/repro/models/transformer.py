@@ -16,7 +16,7 @@ Three public step builders:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+
 from typing import Any, Callable, Optional
 
 import jax

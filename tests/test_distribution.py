@@ -1,6 +1,5 @@
 """Sharding rules, roofline parsing, and a reduced-mesh dry-run subprocess."""
 
-import json
 import os
 import subprocess
 import sys

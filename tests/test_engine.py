@@ -2,7 +2,6 @@
 failure recovery — the live substrate Algorithm 1 reconfigures."""
 
 import numpy as np
-import pytest
 
 from repro.core import AdaptationFramework, AlbicParams, UtilizationScaler
 from repro.data import airline_stream, real_job_1, real_job_2

@@ -1,12 +1,39 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode,
+plus the engine wiring of the keygroup_partition histogram into SPL stats."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # property tests skip cleanly without it
-from hypothesis import given, settings, strategies as st
+try:  # property tests skip cleanly without hypothesis; the rest still run
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def _noop_decorator(*args, **kwargs):
+        def wrap(fn):
+            return fn
+
+        return wrap
+
+    given = settings = _noop_decorator
+
+    class st:  # minimal strategy stand-ins so decorator args still evaluate
+        @staticmethod
+        def sampled_from(values):
+            return None
+
+        @staticmethod
+        def integers(*args, **kwargs):
+            return None
+
+
+requires_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed"
+)
 
 from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
 from repro.kernels.decode_attention.ref import decode_attention_ref
@@ -51,6 +78,7 @@ def test_flash_attention_matches_ref(b, s, h, kv, hd, causal, window, dtype):
     )
 
 
+@requires_hypothesis
 @settings(max_examples=6, deadline=None)
 @given(
     s=st.sampled_from([128, 256]),
@@ -117,6 +145,7 @@ def test_rglru_scan_matches_ref(b, s, w, bs, bw):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
 
 
+@requires_hypothesis
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 1000))
 def test_property_rglru_scan_stability(seed):
@@ -152,3 +181,90 @@ def test_moe_gemm_matches_ref(e, c, d, f, dtype):
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
     )
+
+
+# ---------------------------------------------------------------------------
+# keygroup_partition histogram wiring into SPL statistics
+# ---------------------------------------------------------------------------
+
+
+def _mk_pipeline(kgs=32):
+    from repro.engine.topology import OperatorSpec, Topology
+
+    def fwd(state, keys, values, ts):
+        state["n"] = state.get("n", 0) + len(keys)
+        return state, (keys + 5, values, ts)
+
+    def sink(state, keys, values, ts):
+        state["n"] = state.get("n", 0) + len(keys)
+        return state, []
+
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, num_keygroups=kgs, is_source=True))
+    t.add_operator(OperatorSpec("mid", fwd, num_keygroups=kgs))
+    t.add_operator(OperatorSpec("snk", sink, num_keygroups=kgs, is_sink=True))
+    t.connect("src", "mid")
+    t.connect("mid", "snk")
+    return t
+
+
+def test_kernel_histogram_wiring_matches_numpy_engine():
+    """kernel_stats=True feeds the kernel's histogram into SPLWindow —
+    routing, arrivals, and folded SPL statistics stay bit-identical to the
+    numpy (np.bincount) engine."""
+    from repro.engine import Engine
+
+    kern = Engine(_mk_pipeline(), 4, service_rate=1e9, seed=0, kernel_stats=True)
+    ref = Engine(_mk_pipeline(), 4, service_rate=1e9, seed=0, kernel_stats=False)
+    rng = np.random.default_rng(5)
+    for t in range(4):
+        keys = rng.integers(-(2**62), 2**62, size=257, dtype=np.int64)
+        vals = rng.random(257)
+        for eng in (kern, ref):
+            eng.push_source("src", keys, vals, np.full(257, float(t)))
+            eng.tick()
+    for _ in range(3):
+        kern.tick()
+        ref.tick()
+    assert np.array_equal(kern.window.kg_arrivals, ref.window.kg_arrivals)
+    assert kern.window.kg_arrivals.sum() > 0
+    assert kern.metrics.processed_tuples == ref.metrics.processed_tuples
+    s1, s2 = kern.end_period(), ref.end_period()
+    assert np.array_equal(s1.kg_load, s2.kg_load)
+    assert np.array_equal(s1.kg_tuple_rate, s2.kg_tuple_rate)
+    assert np.array_equal(s1.out_rates, s2.out_rates)
+
+
+def test_kernel_histogram_wiring_nonint_keys_fall_back():
+    """String keys can't ride the int-mix kernel: the engine silently uses
+    the numpy path and the statistics remain correct."""
+    from repro.engine import Engine
+    from repro.engine.topology import OperatorSpec, Topology
+
+    def sink(state, keys, values, ts):
+        return state, []
+
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, num_keygroups=8, is_source=True))
+    t.add_operator(OperatorSpec("snk", sink, num_keygroups=8, is_sink=True))
+    t.connect("src", "snk")
+    eng = Engine(t, 2, service_rate=1e9, seed=0, kernel_stats=True)
+    keys = np.array([f"user-{i % 13}" for i in range(99)])
+    eng.push_source("src", keys, np.ones(99), np.zeros(99))
+    eng.tick()
+    eng.tick()
+    assert eng.metrics.processed_tuples == 2 * 99
+    assert eng.window.kg_arrivals.sum() == 2 * 99
+
+
+def test_window_record_arrivals_accumulates_histogram():
+    """SPLWindow.record_arrivals adds a kernel histogram at the op's base."""
+    from repro.core.stats import SPLWindow
+
+    w = SPLWindow(16)
+    w.record_arrivals(4, np.array([1, 2, 3]))
+    w.record_arrivals(4, np.array([1, 0, 1]))
+    assert w.kg_arrivals[4:7].tolist() == [2.0, 2.0, 4.0]
+    assert w.kg_arrivals.sum() == 8.0
+    w.reset()
+    assert w.kg_arrivals.sum() == 0.0

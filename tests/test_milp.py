@@ -6,7 +6,7 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
-from repro.core import ClusterState, solve_allocation
+from repro.core import solve_allocation
 from repro.core.scaling import ScalingDecision, apply_scaling
 
 from conftest import make_cluster

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, input_specs, shape_applicable
-from repro.models import Model, init_params, make_prefill_step, make_serve_step
+from repro.models import Model, init_params, make_serve_step
 from repro.models.kvcache import init_cache
 from repro.optim import AdamW
 from repro.models.transformer import make_train_step

@@ -4,12 +4,26 @@ The batched `Topology.keygroups_of` (and the Pallas keygroup_partition kernel
 in interpret mode) must produce exactly the key-group assignment of the
 scalar `keygroup_of` across every key flavor the jobs use: int keys, string
 keys, `key_fn` remapping, and `key_by_value` partitioning.
+
+The second half pins the structure-of-arrays work queue against the deque
+oracle (`queue_impl="deque"`): identical tuple flow, identical SPL
+statistics, and identical migration round-trips with in-flight queued
+tuples.
 """
 
 import numpy as np
 import pytest
 
-from repro.engine.topology import OperatorSpec, Topology, hash_key, mix32, mix32_scalar
+from repro.engine import Engine
+from repro.engine.topology import (
+    OperatorSpec,
+    Topology,
+    hash_key,
+    make_batch,
+    mix32,
+    mix32_scalar,
+)
+from repro.engine.workqueue import DequeWorkQueue, SoAWorkQueue
 
 
 def _noop(state, keys, values, ts):
@@ -122,3 +136,386 @@ def test_pallas_kernel_matches_engine(topo):
         assert np.array_equal(kg, expected)
         assert np.array_equal(hist, np.bincount(expected - base, minlength=32))
         assert hist.sum() == len(keys)
+
+
+# ---------------------------------------------------------------------------
+# SoA work queue vs the deque oracle
+# ---------------------------------------------------------------------------
+
+
+def _sum_op(shift):
+    def fn(state, keys, values, ts):
+        state["n"] = state.get("n", 0) + len(keys)
+        return state, (keys + shift, values, ts)
+
+    return fn
+
+
+def _recording_sink(state, keys, values, ts):
+    state.setdefault("seen", []).extend(keys.tolist())
+    return state, list(zip((keys * 2).tolist(), values.tolist(), ts.tolist()))
+
+
+def _pipeline_topo(kgs=16):
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, num_keygroups=kgs, is_source=True))
+    t.add_operator(OperatorSpec("mid", _sum_op(17), num_keygroups=kgs))
+    t.add_operator(
+        OperatorSpec("sink", _recording_sink, num_keygroups=kgs, is_sink=True)
+    )
+    t.connect("src", "mid")
+    t.connect("mid", "sink")
+    return t
+
+
+def _make_engines(service_rate=1e9, num_nodes=4, seed=0, kgs=16):
+    """One SoA engine and one deque engine, identically configured."""
+    return tuple(
+        Engine(
+            _pipeline_topo(kgs),
+            num_nodes,
+            service_rate=service_rate,
+            seed=seed,
+            queue_impl=impl,
+        )
+        for impl in ("soa", "deque")
+    )
+
+
+def _drive(eng, ticks=12, batch=300, seed=3):
+    rng = np.random.default_rng(seed)
+    pushed = 0
+    for t in range(ticks):
+        keys = rng.integers(0, 10_000, size=batch).astype(np.int64)
+        pushed += eng.push_source("src", keys, rng.random(batch), np.full(batch, float(t)))
+        eng.tick()
+    for _ in range(4):  # drain stragglers
+        eng.tick()
+    return pushed
+
+
+def test_soa_matches_deque_tuple_flow():
+    """Identical inputs → bit-identical tuple flow through both queues."""
+    soa, dq = _make_engines()
+    assert _drive(soa) == _drive(dq)
+    for m in ("processed_tuples", "emitted_tuples", "cross_node_tuples",
+              "intra_node_tuples", "sink_tuples", "dropped_credits"):
+        assert getattr(soa.metrics, m) == getattr(dq.metrics, m), m
+    # Sink outputs: exactly the same tuples in exactly the same order.
+    assert soa.metrics.sink_outputs == dq.metrics.sink_outputs
+    assert len(soa.metrics.sink_outputs) > 0
+
+
+def test_soa_matches_deque_spl_statistics():
+    """Folded SPL statistics are bit-identical across queue implementations."""
+    soa, dq = _make_engines()
+    _drive(soa)
+    _drive(dq)
+    s1, s2 = soa.end_period(), dq.end_period()
+    assert np.array_equal(s1.kg_load, s2.kg_load)
+    assert np.array_equal(s1.kg_tuple_rate, s2.kg_tuple_rate)
+    assert np.array_equal(s1.out_pairs.src, s2.out_pairs.src)
+    assert np.array_equal(s1.out_pairs.dst, s2.out_pairs.dst)
+    assert np.array_equal(s1.out_pairs.rate, s2.out_pairs.rate)
+    assert np.array_equal(s1.out_rates, s2.out_rates)  # dense property view
+    assert s1.out_rates.sum() > 0
+
+
+def test_soa_matches_deque_under_backpressure():
+    """Tight service budgets exercise partial drains / cursor resumption."""
+    soa, dq = _make_engines(service_rate=60.0)
+    assert _drive(soa, ticks=30) == _drive(dq, ticks=30)
+    assert soa.metrics.processed_tuples == dq.metrics.processed_tuples
+    assert soa.metrics.sink_outputs == dq.metrics.sink_outputs
+    # The budget was actually binding: a backlog survived the run, and the
+    # credit controller throttled the sources identically on both engines.
+    assert soa.metrics.dropped_credits == dq.metrics.dropped_credits
+    assert soa.metrics.dropped_credits > 0
+    assert [q.cost for q in soa._queues] == [q.cost for q in dq._queues]
+
+
+def test_migration_roundtrip_preserves_inflight_tuples():
+    """redirect → serialize → install with queued tuples, both queue impls.
+
+    Tuples queued for the migrating key group at redirect time must follow
+    σ_k to the destination and replay there, preserving exactly the tuples
+    and ordering the deque implementation delivers.
+    """
+    results = []
+    for impl in ("soa", "deque"):
+        eng = Engine(_pipeline_topo(), 4, service_rate=1e9, seed=0, queue_impl=impl)
+        rng = np.random.default_rng(7)
+        keys = rng.integers(0, 10_000, size=400).astype(np.int64)
+        vals = rng.random(400)
+        # Push twice without ticking: work is queued at the current owners.
+        eng.push_source("src", keys, vals, np.zeros(400))
+        eng.tick()  # src → mid queued
+        # mid's key groups now hold queued state; migrate one mid-flight.
+        kg = int(eng.topology.kg_base(1)) + 3
+        src_node = eng.router.node_of(kg)
+        dst = (src_node + 1) % eng.num_nodes
+        eng.redirect(kg, dst)
+        # More traffic while in flight buffers behind the migration.
+        eng.push_source("src", keys + 1, vals, np.ones(400))
+        eng.tick()
+        blob = eng.serialize(kg)
+        eng.install(kg, dst, blob)
+        for _ in range(5):
+            eng.tick()
+        assert not eng.router.in_flight
+        assert eng.router.node_of(kg) == dst
+        mid_states = [s.get("n", 0) for _, s in eng.store.items()]
+        results.append(
+            (
+                eng.metrics.processed_tuples,
+                eng.metrics.emitted_tuples,
+                eng.metrics.sink_outputs,
+                mid_states,
+            )
+        )
+    assert results[0][0] == results[1][0]
+    assert results[0][1] == results[1][1]
+    assert results[0][2] == results[1][2]  # same tuples, same order
+    assert results[0][3] == results[1][3]  # per-kg state counts identical
+    assert len(results[0][2]) > 0
+
+
+@pytest.mark.parametrize("queue_cls", [SoAWorkQueue, DequeWorkQueue])
+def test_extract_keygroup_masks_out_queued_runs(queue_cls):
+    """extract_keygroup removes exactly one key group's batches, in order."""
+    q = queue_cls()
+    k1 = make_batch([1, 2, 3], [0.1, 0.2, 0.3], [0.0, 0.0, 0.0])
+    keys = np.array([10, 10, 20, 20, 30])
+    vals = np.empty(5, dtype=object)
+    vals[:] = list(range(5))
+    ts = np.zeros(5)
+    q.push_runs(1, keys, vals, ts, [5, 6, 7], [0, 2, 4], [2, 4, 5], [2.0, 2.0, 1.0])
+    q.push_batch(1, 6, k1, 3.0)
+    assert q.cost == 8.0
+    batches, removed = q.extract_keygroup(6)
+    assert removed == 5.0
+    assert q.cost == 3.0
+    # FIFO: first the queued run (keys 20,20), then the later batch (1,2,3).
+    assert [b[0].tolist() for b in batches] == [[20, 20], [1, 2, 3]]
+    # Remaining runs are untouched and drain normally.
+    drained = []
+    q.drain(1e9, lambda node, op, kg, k, v, t: drained.append((kg, k.tolist())), 0, [], [])
+    assert drained == [(5, [10, 10]), (7, [30])]
+    assert q.cost == 0.0
+
+
+def test_engine_arrival_histograms_match_scalar_routing():
+    """window.kg_arrivals == per-kg tuple counts of the scalar assignment."""
+    eng = Engine(_pipeline_topo(), 3, service_rate=1e9, seed=1)
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 5_000, size=500).astype(np.int64)
+    eng.push_source("src", keys, rng.random(500), np.zeros(500))
+    eng.tick()
+    expected = np.zeros(eng.topology.num_keygroups)
+    values = np.empty(len(keys), dtype=object)
+    src_kgs = eng.topology.keygroups_of(0, keys, values)
+    np.add.at(expected, src_kgs, 1.0)
+    mid_kgs = eng.topology.keygroups_of(1, keys, values)  # pass-through keys
+    np.add.at(expected, mid_kgs, 1.0)
+    assert np.array_equal(eng.window.kg_arrivals, expected)
+
+
+# ---------------------------------------------------------------------------
+# segment-vectorized operator protocol (fn_seg) vs the per-run fn
+# ---------------------------------------------------------------------------
+
+
+def _pipeline_topo_seg(kgs=16):
+    """Same pipeline as _pipeline_topo but with fn_seg implementations."""
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, num_keygroups=kgs, is_source=True))
+
+    def mid_seg(store, run_kgs, starts, ends, keys, values, ts):
+        for kg, a, z in zip(run_kgs, starts, ends):
+            st = store[kg]
+            st["n"] = st.get("n", 0) + (z - a)
+        return (keys + 17, values, ts), None
+
+    t.add_operator(
+        OperatorSpec("mid", _sum_op(17), num_keygroups=kgs, fn_seg=mid_seg)
+    )
+
+    def sink_seg(store, run_kgs, starts, ends, keys, values, ts):
+        ok, ov, ot = [], [], []
+        for kg, a, z in zip(run_kgs, starts, ends):
+            st = store[kg]
+            st.setdefault("seen", []).extend(keys[a:z].tolist())
+            ok.append(keys[a:z] * 2)
+            ov.append(values[a:z])
+            ot.append(ts[a:z])
+        out = (np.concatenate(ok), np.concatenate(ov), np.concatenate(ot))
+        return out, None
+
+    t.add_operator(
+        OperatorSpec(
+            "sink", _recording_sink, num_keygroups=kgs, is_sink=True, fn_seg=sink_seg
+        )
+    )
+    t.connect("src", "mid")
+    t.connect("mid", "sink")
+    return t
+
+
+def test_fn_seg_matches_per_run_fn():
+    """The segment-vectorized protocol delivers bit-identical tuple flow,
+    state, and SPL statistics to the per-run fn (which the deque oracle
+    always uses) — the contract the throughput benchmark relies on."""
+    seg_eng = Engine(_pipeline_topo_seg(), 4, service_rate=1e9, seed=0)
+    run_eng = Engine(_pipeline_topo(), 4, service_rate=1e9, seed=0)
+    oracle = Engine(_pipeline_topo_seg(), 4, service_rate=1e9, seed=0, queue_impl="deque")
+    for eng in (seg_eng, run_eng, oracle):
+        _drive(eng)
+    assert seg_eng.metrics.processed_tuples == run_eng.metrics.processed_tuples
+    assert seg_eng.metrics.emitted_tuples == run_eng.metrics.emitted_tuples
+    assert seg_eng.metrics.sink_outputs == run_eng.metrics.sink_outputs
+    assert seg_eng.metrics.sink_outputs == oracle.metrics.sink_outputs
+    # Per-key-group operator state is identical under both protocols.
+    for kg in range(seg_eng.topology.num_keygroups):
+        assert seg_eng.store.get(kg).get("n") == run_eng.store.get(kg).get("n")
+        assert seg_eng.store.get(kg).get("seen") == run_eng.store.get(kg).get("seen")
+    s1, s2 = seg_eng.end_period(), run_eng.end_period()
+    assert np.array_equal(s1.kg_load, s2.kg_load)
+    assert np.array_equal(s1.out_rates, s2.out_rates)
+    assert np.array_equal(s1.kg_tuple_rate, s2.kg_tuple_rate)
+
+
+def test_fn_seg_falls_back_to_fn_after_migration():
+    """Non-contiguous segments (in-flight migrations, extraction rebuilds)
+    take the per-run fn path — results stay identical to the fn-only job."""
+    engines = []
+    for topo_fn in (_pipeline_topo_seg, _pipeline_topo):
+        eng = Engine(topo_fn(), 4, service_rate=1e9, seed=0)
+        rng = np.random.default_rng(9)
+        keys = rng.integers(0, 10_000, size=350).astype(np.int64)
+        eng.push_source("src", keys, rng.random(350), np.zeros(350))
+        eng.tick()
+        kg = int(eng.topology.kg_base(1)) + 5
+        dst = (eng.router.node_of(kg) + 1) % eng.num_nodes
+        eng.redirect(kg, dst)
+        eng.push_source("src", keys + 3, rng.random(350), np.ones(350))
+        eng.tick()
+        eng.install(kg, dst, eng.serialize(kg))
+        for _ in range(5):
+            eng.tick()
+        engines.append(eng)
+    a, b = engines
+    assert a.metrics.processed_tuples == b.metrics.processed_tuples
+    assert a.metrics.sink_outputs == b.metrics.sink_outputs
+
+
+def test_soa_matches_deque_multiple_pushes_per_tick():
+    """Several pushes to the same op between ticks, under a binding budget —
+    both queues must drain the identical run sequence (regression: the old
+    deque oracle coalesced same-tick (op, kg) entries and diverged here)."""
+    soa, dq = _make_engines(service_rate=50.0, num_nodes=1)
+    rng1, rng2 = np.random.default_rng(13), np.random.default_rng(13)
+    per_tick = ([], [])
+    for t in range(15):
+        for _ in range(3):  # multiple same-op pushes within one tick gap
+            k1 = rng1.integers(0, 1000, size=40).astype(np.int64)
+            k2 = rng2.integers(0, 1000, size=40).astype(np.int64)
+            soa.push_source("src", k1, rng1.random(40), np.full(40, float(t)))
+            dq.push_source("src", k2, rng2.random(40), np.full(40, float(t)))
+        soa.tick()
+        dq.tick()
+        per_tick[0].append(soa.metrics.processed_tuples)
+        per_tick[1].append(dq.metrics.processed_tuples)
+    assert per_tick[0] == per_tick[1]
+    assert soa.metrics.sink_outputs == dq.metrics.sink_outputs
+    assert [q.cost for q in soa._queues] == [q.cost for q in dq._queues]
+
+
+def test_mix32_rejects_bit_reinterpretation():
+    """The uint32-lane fast path only fires for native 64-bit ints — other
+    dtypes take the value-converting path and match the scalar mix."""
+    vals = [1, 2, 2**40, -7]
+    for arr in (
+        np.array(vals, dtype=np.float64),          # 8-byte but not integer
+        np.array(vals, dtype=np.int64)[::2],       # non-contiguous view
+        np.array([1, 2, 7, -7], dtype=np.int32),   # narrow lanes
+        np.array(vals, dtype=np.int64).astype(">i8"),  # non-native order
+    ):
+        expected = [mix32_scalar(int(v)) for v in arr.tolist()]
+        assert [int(h) for h in mix32(arr)] == expected, arr.dtype
+
+
+def test_soa_matches_deque_nondyadic_costs():
+    """Non-power-of-two operator costs under a binding budget: float
+    accounting must follow the identical trajectory on both queues
+    (regression: bulk budget subtraction used a different summation order)."""
+    def topo_nd(kgs=16):
+        t = Topology()
+        t.add_operator(OperatorSpec("src", None, num_keygroups=kgs, is_source=True))
+        t.add_operator(
+            OperatorSpec("mid", _sum_op(17), num_keygroups=kgs, cost_per_tuple=1.2)
+        )
+        t.add_operator(
+            OperatorSpec(
+                "sink",
+                _recording_sink,
+                num_keygroups=kgs,
+                is_sink=True,
+                cost_per_tuple=0.3,
+            )
+        )
+        t.connect("src", "mid")
+        t.connect("mid", "sink")
+        return t
+
+    for seed in (0, 1, 2):
+        soa = Engine(topo_nd(), 3, service_rate=70.0, seed=seed, queue_impl="soa")
+        dq = Engine(topo_nd(), 3, service_rate=70.0, seed=seed, queue_impl="deque")
+        assert _drive(soa, ticks=25, seed=seed) == _drive(dq, ticks=25, seed=seed)
+        assert soa.metrics.processed_tuples == dq.metrics.processed_tuples, seed
+        assert soa.metrics.sink_outputs == dq.metrics.sink_outputs
+        assert [q.cost for q in soa._queues] == [q.cost for q in dq._queues]
+
+
+def test_fn_seg_filter_with_out_counts():
+    """A filtering fn_seg returns out_counts; attribution must line up with
+    the per-run fn oracle, and inconsistent counts raise immediately."""
+    def topo_filter(fn_seg_impl):
+        def fn(state, keys, values, ts):
+            keep = keys % 2 == 0
+            return state, (keys[keep], values[keep], ts[keep])
+
+        t = Topology()
+        t.add_operator(OperatorSpec("src", None, num_keygroups=8, is_source=True))
+        t.add_operator(
+            OperatorSpec("mid", fn, num_keygroups=8, fn_seg=fn_seg_impl)
+        )
+        t.add_operator(
+            OperatorSpec("sink", _recording_sink, num_keygroups=8, is_sink=True)
+        )
+        t.connect("src", "mid")
+        t.connect("mid", "sink")
+        return t
+
+    def good_seg(store, kgs, starts, ends, keys, values, ts):
+        keep = keys % 2 == 0
+        lens = [int(keep[a:z].sum()) for a, z in zip(starts, ends)]
+        return (keys[keep], values[keep], ts[keep]), lens
+
+    seg_eng = Engine(topo_filter(good_seg), 2, service_rate=1e9, seed=0)
+    ref_eng = Engine(topo_filter(None), 2, service_rate=1e9, seed=0)
+    for eng in (seg_eng, ref_eng):
+        _drive(eng, ticks=6)
+    assert seg_eng.metrics.sink_outputs == ref_eng.metrics.sink_outputs
+    assert len(seg_eng.metrics.sink_outputs) > 0
+    s1, s2 = seg_eng.end_period(), ref_eng.end_period()
+    assert np.array_equal(s1.out_rates, s2.out_rates)
+
+    def bad_seg(store, kgs, starts, ends, keys, values, ts):
+        keep = keys % 2 == 0
+        return (keys[keep], values[keep], ts[keep]), [0] * len(kgs)  # wrong sums
+
+    bad_eng = Engine(topo_filter(bad_seg), 2, service_rate=1e9, seed=0)
+    bad_eng.push_source("src", np.arange(64), np.ones(64), np.zeros(64))
+    bad_eng.tick()
+    with pytest.raises(ValueError, match="out_counts"):
+        bad_eng.tick()  # mid drains on the second tick
