@@ -57,7 +57,11 @@ def run(quick: bool = False) -> list[str]:
                 )
             )
     # Fig 11: three cluster configurations at 50% collocation.
-    configs = [(20, 400, 10)] if quick else [(20, 400, 10), (40, 800, 20), (60, 1200, 30)]
+    configs = [(20, 400, 10)] if quick else [
+        (20, 400, 10),
+        (40, 800, 20),
+        (60, 1200, 30),
+    ]
     for n, g, o in configs:
         for method in ("albic", "cola"):
             state = synthetic_cluster(n, g, o, one_to_one_pct=50, seed=5)

@@ -58,7 +58,11 @@ def synthetic_cluster(
 
 def drift_loads(state: ClusterState, pct: float, rng: np.random.Generator) -> None:
     """§5.3: adjust the load of 20% of nodes by ±pct% between solves."""
-    nodes = rng.choice(state.num_nodes, size=max(state.num_nodes // 5, 1), replace=False)
+    nodes = rng.choice(
+        state.num_nodes,
+        size=max(state.num_nodes // 5, 1),
+        replace=False,
+    )
     for node in nodes:
         kgs = np.where(state.alloc == node)[0]
         state.kg_load[kgs] *= 1.0 + rng.uniform(-pct, pct) / 100.0

@@ -25,7 +25,12 @@ def build(kgs: int, nodes: int, seed: int) -> tuple[Engine, callable]:
     # dominates the load distance.
     topo = real_job_1(keygroups_per_op=kgs)
     eng = Engine(
-        topo, nodes, ser_cost=0.3, service_rate=nodes * 90.0, seed=seed, collect_sinks=False
+        topo,
+        nodes,
+        ser_cost=0.3,
+        service_rate=nodes * 90.0,
+        seed=seed,
+        collect_sinks=False,
     )
     stream = wiki_edit_stream(StreamSpec(rate=350.0, fluctuation=0.4, seed=seed))
 

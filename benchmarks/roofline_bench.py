@@ -14,7 +14,9 @@ RESULTS = os.environ.get("DRYRUN_RESULTS", "experiments/dryrun_results.json")
 
 def run(quick: bool = False) -> list[str]:  # noqa: ARG001 - table read, no quick mode
     if not os.path.exists(RESULTS):
-        return [csv_row("roofline/missing", 0.0, f"no {RESULTS}; run repro.launch.dryrun")]
+        return [
+            csv_row("roofline/missing", 0.0, f"no {RESULTS}; run repro.launch.dryrun"),
+        ]
     with open(RESULTS) as f:
         rows_in = json.load(f)
     rows = []

@@ -123,17 +123,25 @@ class CheckpointManager:
     # -- writing --------------------------------------------------------------
     def save(self, step: int, tree: Any, *, metadata: Optional[dict] = None) -> None:
         self.wait()
-        save_pytree(self._step_dir(step), tree, metadata={"step": step, **(metadata or {})})
+        save_pytree(
+            self._step_dir(step),
+            tree,
+            metadata={"step": step, **(metadata or {})},
+        )
         self._prune()
 
-    def save_async(self, step: int, tree: Any, *, metadata: Optional[dict] = None) -> None:
+    def save_async(
+        self, step: int, tree: Any, *, metadata: Optional[dict] = None
+    ) -> None:
         """Snapshot now (host copy), write in the background."""
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
 
         def work() -> None:
             save_pytree(
-                self._step_dir(step), host_tree, metadata={"step": step, **(metadata or {})}
+                self._step_dir(step),
+                host_tree,
+                metadata={"step": step, **(metadata or {})},
             )
             self._prune()
 

@@ -109,7 +109,9 @@ class ModelConfig:
                 total += 4 * d * d + 4 * d + 2 * d
         total += self.vocab_size * d * (1 if self.tie_embeddings else 2)
         if self.is_encdec:
-            total += self.encoder_layers * (qo + kv + n_mlp_mats * d * self.d_ff + 2 * d)
+            total += self.encoder_layers * (
+                qo + kv + n_mlp_mats * d * self.d_ff + 2 * d
+            )
             # decoder cross-attention
             total += self.num_layers * (qo + kv)
         return total
@@ -121,9 +123,15 @@ class ModelConfig:
         full = self.param_count()
         n_mlp_mats = 3 if self.mlp_kind in ("swiglu", "geglu") else 2
         expert_mats = (
-            self.num_layers * self.moe.num_experts * n_mlp_mats * self.d_model * self.d_ff
+            self.num_layers
+            * self.moe.num_experts
+            * n_mlp_mats
+            * self.d_model
+            * self.d_ff
         )
-        active_mats = self.num_layers * self.moe.top_k * n_mlp_mats * self.d_model * self.d_ff
+        active_mats = (
+            self.num_layers * self.moe.top_k * n_mlp_mats * self.d_model * self.d_ff
+        )
         return full - expert_mats + active_mats
 
 
@@ -188,7 +196,9 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, ShapeDtypeStruc
                 "tokens": ShapeDtypeStruct((b, min(s, 448)), i32),
             }
         if cfg.decoder_only_inputs_embeds:
-            return {"inputs_embeds": ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+            return {
+                "inputs_embeds": ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+            }
         return {"tokens": ShapeDtypeStruct((b, s), i32)}
     # decode: one new token against a seq_len-deep cache (built by the caller
     # via kvcache.cache_specs); here only the step inputs.

@@ -51,7 +51,8 @@ def cola_allocate(
             overlap[labels[k], node_pos[cur]] += state.kg_load[k]
     part_to_node = -np.ones(nparts, dtype=np.int64)
     taken = np.zeros(nparts, dtype=bool)
-    order = np.dstack(np.unravel_index(np.argsort(-overlap, axis=None), overlap.shape))[0]
+    flat_order = np.argsort(-overlap, axis=None)
+    order = np.dstack(np.unravel_index(flat_order, overlap.shape))[0]
     for p, j in order:
         if part_to_node[p] < 0 and not taken[j]:
             part_to_node[p] = live[j]

@@ -207,7 +207,10 @@ class ClusterState:
         return ClusterState(
             num_nodes=num_nodes,
             capacity=(
-                np.ones(num_nodes) if capacity is None else np.asarray(capacity, dtype=np.float64)
+                np.ones(num_nodes) if capacity is None else np.asarray(
+                    capacity,
+                    dtype=np.float64,
+                )
             ),
             kill=np.zeros(num_nodes, dtype=bool),
             alive=np.ones(num_nodes, dtype=bool),
@@ -283,7 +286,9 @@ class ClusterState:
         alloc = self.alloc if alloc is None else alloc
         return self.out_pairs.total() - self.out_pairs.intra_rate(alloc)
 
-    def system_load(self, alloc: np.ndarray | None = None, ser_cost: float = 0.0) -> float:
+    def system_load(
+        self, alloc: np.ndarray | None = None, ser_cost: float = 0.0
+    ) -> float:
         """Average node load including serialization cost of cross-node sends.
 
         ``ser_cost`` is load points charged per unit of cross-node rate (it
@@ -424,7 +429,11 @@ class SPLWindow:
         totals = {r: float(u.sum()) for r, u in self.kg_usage.items()}
         return max(totals, key=totals.get)  # type: ignore[arg-type]
 
-    def fold(self, scale_to_percent: float = 1.0) -> tuple[np.ndarray, "PairRates", str]:
+    def fold(self, scale_to_percent: float = 1.0) -> tuple[
+        np.ndarray,
+        "PairRates",
+        str,
+    ]:
         """Return (gLoad vector on bottleneck resource, pair rates, resource)."""
         r = self.bottleneck_resource()
         return self.kg_usage[r] * scale_to_percent, self.pair_counts(), r

@@ -62,11 +62,18 @@ def wiki_edit_stream(
 _NUM_AIRPLANES = 4_000
 _NUM_AIRPORTS = 300
 
+# Airline record layout: tuples, not dicts — a typed ingestion schema whose
+# columns segment-vectorized operators extract with one ``zip(*values)``.
+A_PLANE, A_ORIGIN, A_DEST, A_DEP_DELAY, A_ARR_DELAY, A_YEAR = range(6)
+
 
 def airline_stream(
     spec: StreamSpec | None = None,
 ) -> Iterator[tuple[np.ndarray, list, np.ndarray]]:
-    """Airline-On-Time-shaped stream keyed by airplane id (jobs 2–4)."""
+    """Airline-On-Time-shaped stream keyed by airplane id (jobs 2–4).
+
+    Values are record tuples in the ``A_*`` layout above.
+    """
     spec = spec or StreamSpec()
     rng = np.random.default_rng(spec.seed + 1)
     tick = 0
@@ -74,16 +81,18 @@ def airline_stream(
         n = _rate_at(spec, tick, rng)
         planes = np.minimum(rng.zipf(1.2, size=n) - 1, _NUM_AIRPLANES - 1)
         origins = rng.integers(0, _NUM_AIRPORTS, size=n)
-        dests = (origins + 1 + rng.integers(0, _NUM_AIRPORTS - 1, size=n)) % _NUM_AIRPORTS
+        jump = 1 + rng.integers(0, _NUM_AIRPORTS - 1, size=n)
+        dests = (origins + jump) % _NUM_AIRPORTS
+        year = int(2004 + (tick // 500) % 10)
         values = [
-            {
-                "airplane": int(p),
-                "origin": int(o),
-                "dest": int(d),
-                "dep_delay": float(max(rng.normal(8.0, 20.0), -10.0)),
-                "arr_delay": float(max(rng.normal(6.0, 25.0), -20.0)),
-                "year": int(2004 + (tick // 500) % 10),
-            }
+            (
+                int(p),
+                int(o),
+                int(d),
+                float(max(rng.normal(8.0, 20.0), -10.0)),
+                float(max(rng.normal(6.0, 25.0), -20.0)),
+                year,
+            )
             for p, o, d in zip(planes, origins, dests)
         ]
         ts = np.full(n, float(tick))

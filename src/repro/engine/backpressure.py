@@ -53,8 +53,16 @@ class LatencyTracker:
     def summary(self) -> dict[str, float]:
         if not self.samples:
             return {"avg": 0.0, "p50": 0.0, "p99": 0.0, "max": 0.0}
-        vals = np.fromiter((v for v, _ in self.samples), np.float64, count=len(self.samples))
-        wts = np.fromiter((w for _, w in self.samples), np.int64, count=len(self.samples))
+        vals = np.fromiter(
+            (v for v, _ in self.samples),
+            np.float64,
+            count=len(self.samples),
+        )
+        wts = np.fromiter(
+            (w for _, w in self.samples),
+            np.int64,
+            count=len(self.samples),
+        )
         arr = np.repeat(vals, wts)
         return {
             "avg": float(arr.mean()),

@@ -94,7 +94,8 @@ class Controller:
         # Measured kg_load already embeds serialization CPU (the engine charges
         # it per cross-node tuple), so no analytic ser term is added here.
         sys_load = snapshot.system_load(alloc, ser_cost=0.0)
-        if self._baseline_system_load is None and self._period >= self.config.warmup_periods:
+        warmed = self._period >= self.config.warmup_periods
+        if self._baseline_system_load is None and warmed:
             self._baseline_system_load = max(sys_load, 1e-9)
         load_index = (
             100.0 * sys_load / self._baseline_system_load
@@ -123,7 +124,9 @@ class Controller:
         return metrics
 
     # -- fault tolerance ------------------------------------------------------
-    def handle_node_failure(self, node: int, snapshot: ClusterState) -> AdaptationResult:
+    def handle_node_failure(
+        self, node: int, snapshot: ClusterState
+    ) -> AdaptationResult:
         """Crash path: orphan the node's key groups and re-plan immediately.
 
         `snapshot` is the last folded statistics (or checkpointed) state; the
@@ -137,7 +140,8 @@ class Controller:
         snap.kg_state_bytes = snap.kg_state_bytes.copy()
         snap.kg_state_bytes[orphans] = 0.0  # recovery is not a migration cost
         # Reallocate: a plan must exist, so lift the budget for the emergency.
-        saved_cost, saved_migr = self.framework.max_migr_cost, self.framework.max_migrations
+        saved_cost = self.framework.max_migr_cost
+        saved_migr = self.framework.max_migrations
         self.framework.max_migr_cost, self.framework.max_migrations = None, None
         try:
             result = self.framework.adapt(snap)
@@ -152,7 +156,10 @@ class Controller:
             self.engine.router.redirect(int(kg), dst)
             self.engine.install(int(kg), dst, self.engine.store.serialize(int(kg)))
         # Remaining moves use the normal mover path.
-        rest = [m for m in result.migration_plan.moves if m.keygroup not in set(orphans)]
+        orphan_set = set(orphans)
+        rest = [
+            m for m in result.migration_plan.moves if m.keygroup not in orphan_set
+        ]
         for m in rest:
             self.engine.redirect(m.keygroup, m.dst)
             self.engine.install(m.keygroup, m.dst, self.engine.serialize(m.keygroup))

@@ -52,6 +52,37 @@ that make long-term balance matter.
 equivalence oracle: tests/test_routing_equivalence.py runs both
 implementations on identical inputs and requires bit-identical tuple flow
 and SPL statistics.
+
+Authoring operators
+-------------------
+
+Every non-source operator provides the per-run ``fn`` (the semantic oracle);
+hot operators additionally implement ``fn_seg``, the segment-vectorized
+protocol (see :data:`repro.engine.topology.SegmentFn`).  The contract:
+
+* ``fn_seg(store, kgs, starts, ends, keys, values, ts)`` covers every key
+  group a node drains for the operator in one tick.  ``store`` is the raw
+  per-key-group state list (index with the *global* key-group ids in
+  ``kgs``); ``starts``/``ends`` are slice bounds into the contiguous
+  key/value/ts arrays, one run per key group, tiling ``[0, len(keys))``.
+* It returns ``(outputs, out_counts)``: a Batch concatenated over the runs
+  *in run order* (or None), and per-run output lengths (None when every run
+  emits exactly its input length).
+* It must be *bit-identical* to calling ``fn`` run by run: same emitted
+  tuples in the same order, same per-key-group state (including dict
+  insertion order — it decides tie-breaks and pickle bytes), same float
+  trajectories (running sums must accumulate left to right, e.g. via
+  ``np.cumsum`` over ``[base, d0, d1, ...]``).
+* The engine falls back to ``fn`` for non-contiguous segments (in-flight
+  migrations, extraction rebuilds) and partial-budget drains, so both paths
+  interleave freely within one run of the job.
+
+``Engine(..., use_fn_seg=False)`` disables the segment protocol wholesale
+(the benchmark baseline); ``EngineMetrics.seg_calls``/``seg_tuples`` count
+how often the vectorized path actually fired.  New operators (and new
+``fn_seg`` ports) must be pinned by the differential conformance harness in
+``tests/conformance.py`` — see ``tests/test_real_jobs_conformance.py`` and
+``docs/operator_authoring.md``.
 """
 
 from __future__ import annotations
@@ -79,6 +110,10 @@ class EngineMetrics:
     intra_node_tuples: int = 0
     dropped_credits: int = 0
     sink_tuples: int = 0
+    # Segment-vectorized protocol usage: calls to an operator's fn_seg and
+    # tuples processed through it (0 on the deque oracle / use_fn_seg=False).
+    seg_calls: int = 0
+    seg_tuples: int = 0
     # Materialized sink tuples; only populated when the engine was built with
     # ``collect_sinks=True`` (unbounded growth otherwise — benchmarks disable
     # it so they measure the data plane, not list appends).
@@ -145,6 +180,7 @@ class Engine:
         queue_impl: str = "soa",
         collect_sinks: bool = True,
         kernel_stats: Optional[bool] = None,
+        use_fn_seg: bool = True,
     ) -> None:
         topology.validate()
         self.topology = topology
@@ -178,7 +214,11 @@ class Engine:
         self._kg_op = topology.kg_operator()
         self._cost_per_tuple = [o.cost_per_tuple for o in topology.operators]
         self._op_fn = [o.fn for o in topology.operators]
-        self._op_fn_seg = [o.fn_seg for o in topology.operators]
+        # use_fn_seg=False strips the segment protocol: every run takes the
+        # per-run fn, giving the oracle data path on the SoA queue (the
+        # conformance harness and benchmark baselines rely on this switch).
+        self.use_fn_seg = use_fn_seg
+        self._op_fn_seg = [o.fn_seg if use_fn_seg else None for o in topology.operators]
         self._op_nkg = [o.num_keygroups for o in topology.operators]
         self._op_base = [topology.kg_base(i) for i in range(topology.num_operators)]
         self._op_terminal = [
@@ -216,7 +256,10 @@ class Engine:
         return n
 
     # --------------------------------------------------------------- routing
-    def _partition(self, op: int, keys, values) -> tuple[np.ndarray, Optional[np.ndarray]]:
+    def _partition(self, op: int, keys, values) -> tuple[
+        np.ndarray,
+        Optional[np.ndarray],
+    ]:
         """Key-group id per tuple, plus the arrival histogram when the kernel
         path computed it for free (None → caller falls back to np.bincount)."""
         if self.kernel_stats:
@@ -314,7 +357,10 @@ class Engine:
                 sl, el = starts.tolist(), ends.tolist()
                 for j in np.flatnonzero(infl).tolist():
                     a, z = sl[j], el[j]
-                    self.router.buffer(int(uniq[j]), (skeys[a:z], svalues[a:z], sts[a:z]))
+                    self.router.buffer(
+                        int(uniq[j]),
+                        (skeys[a:z], svalues[a:z], sts[a:z]),
+                    )
                 keep = ~infl
                 uniq, starts, ends = uniq[keep], starts[keep], ends[keep]
                 counts, costs = counts[keep], costs[keep]
@@ -432,6 +478,7 @@ class Engine:
         metrics = self.metrics
         sink_outputs = metrics.sink_outputs
         processed = emitted = sink_n = 0
+        seg_calls = seg_tuples = 0
         kg_append, cost_append = out_kgs.append, out_costs.append
         op_fn_seg = self._op_fn_seg
         while segs and budget > 0:
@@ -474,6 +521,8 @@ class Engine:
                             store, rk, rel_s, rel_e,
                             keys[a0:zn], values[a0:zn], ts[a0:zn],
                         )
+                        seg_calls += 1
+                        seg_tuples += n_seg
                     if outputs is not None:
                         n_out = len(outputs[0])
                         if n_out:
@@ -620,6 +669,8 @@ class Engine:
         metrics.processed_tuples += processed
         metrics.emitted_tuples += emitted
         metrics.sink_tuples += sink_n
+        metrics.seg_calls += seg_calls
+        metrics.seg_tuples += seg_tuples
 
     def _process(self, node: int, op: int, kg: int, keys, values, ts) -> None:
         metrics = self.metrics

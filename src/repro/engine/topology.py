@@ -32,7 +32,7 @@ def make_batch(keys: Sequence, values: Sequence, ts: Sequence) -> Batch:
         v = values.copy()
     else:
         v = np.empty(len(values), dtype=object)
-        v[:] = list(values)
+        v[:] = values if isinstance(values, list) else list(values)
     return k, v, np.asarray(ts, dtype=np.float64)
 
 
@@ -223,7 +223,9 @@ class Topology:
                 dtype=np.int64,
                 count=self.num_operators,
             )
-            self._kg_base = np.concatenate([np.zeros(1, dtype=np.int64), np.cumsum(sizes)])
+            self._kg_base = np.concatenate(
+                [np.zeros(1, dtype=np.int64), np.cumsum(sizes)]
+            )
         return self._kg_base
 
     def kg_base(self, op: int) -> int:
@@ -231,7 +233,10 @@ class Topology:
 
     def kg_operator(self) -> np.ndarray:
         return np.concatenate(
-            [np.full(o.num_keygroups, i, dtype=np.int64) for i, o in enumerate(self.operators)]
+            [
+                np.full(o.num_keygroups, i, dtype=np.int64)
+                for i, o in enumerate(self.operators)
+            ]
         )
 
     def downstream(self) -> dict[int, list[int]]:
@@ -279,14 +284,23 @@ class Topology:
         Integer partition keys take a fully vectorized path (the same 32-bit
         mix the TPU kernel uses); object keys (strings, tuples) fall back to
         per-object :func:`hash_key`.  Bit-identical to the scalar method.
+
+        Integer-ness of extracted partition keys is probed with one C-level
+        ``np.asarray`` instead of a per-element python scan: a list that
+        coerces to an integer dtype is all-int (an all-bool list coerces to
+        bool and falls through to the hash path, matching the scalar method;
+        partition keys must not *mix* bools with ints — no job does, bools
+        are not keys).
         """
         spec = self.operators[op]
         n = len(keys)
         base = self.kg_base(op)
         if spec.key_by_value is not None:
             # Match the scalar path: a None value falls back to key_fn(key).
+            # Object arrays iterate faster as lists (no per-element boxing).
             kbv, kfn = spec.key_by_value, spec.key_fn
-            part = [kbv(v) if v is not None else kfn(k) for k, v in zip(keys, values)]
+            vlist = values.tolist() if isinstance(values, np.ndarray) else values
+            part = [kbv(v) if v is not None else kfn(k) for k, v in zip(keys, vlist)]
         elif spec.key_fn is not _identity_key:
             kfn = spec.key_fn
             part = [kfn(k) for k in keys]
@@ -295,11 +309,16 @@ class Topology:
         nkg = spec.num_keygroups
         if isinstance(part, np.ndarray) and part.dtype.kind in "iu":
             return _mixed_keygroups(mix32(part), base, nkg)
-        if isinstance(part, list) and all(_is_int_key(x) for x in part):
-            folded = np.fromiter(
-                ((int(x) & 0xFFFFFFFFFFFFFFFF) for x in part), dtype=np.uint64, count=n
-            )
-            return _mixed_keygroups(mix32(folded), base, nkg)
+        if isinstance(part, list):
+            try:
+                arr = np.asarray(part)
+            except (OverflowError, ValueError, TypeError):
+                arr = None  # out-of-int64 or ragged entries → hash path
+            # ndim check: tuple keys coerce to a 2-D array — those hash.
+            if arr is not None and arr.ndim == 1 and arr.dtype.kind in "iu":
+                # mix32 folds int64 two's complement exactly like the scalar
+                # ``int(x) & 0xFFFFFFFFFFFFFFFF``.
+                return _mixed_keygroups(mix32(arr), base, nkg)
         h = np.fromiter((hash_key(x) for x in part), dtype=np.int64, count=n)
         return base + h % nkg
 

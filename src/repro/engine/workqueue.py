@@ -96,7 +96,9 @@ class SoAWorkQueue:
         self._segs.append([k, v, t, op, [kg], [0], [len(k)], [cost], 0, True])
         self.cost += cost
 
-    def drain(self, budget: float, process, node: int, out_kgs: list, out_costs: list) -> None:
+    def drain(
+        self, budget: float, process, node: int, out_kgs: list, out_costs: list
+    ) -> None:
         """Consume runs in FIFO order until the budget is exhausted.
 
         ``process(node, op, kg, keys, values, ts)`` is called per run; the

@@ -107,7 +107,11 @@ def decode_attention_pallas(
         kernel,
         grid=(b, kvh, nkv),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM, block_shape=(1,), index_map=lambda b_, h_, j: (b_,)),
+            pl.BlockSpec(
+                memory_space=pltpu.SMEM,
+                block_shape=(1,),
+                index_map=lambda b_, h_, j: (b_,),
+            ),
             pl.BlockSpec((1, 1, 1, g, hd), lambda b_, h_, j: (b_, 0, h_, 0, 0)),
             pl.BlockSpec((1, bk, 1, hd), lambda b_, h_, j: (b_, j, h_, 0)),
             pl.BlockSpec((1, bk, 1, hd), lambda b_, h_, j: (b_, j, h_, 0)),

@@ -101,7 +101,9 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str, *, remat=None):
 
 def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *, remat=None) -> dict:
     t0 = time.perf_counter()
-    cfg, shape, lowered, chips = lower_cell(arch, shape_name, mesh, mesh_name, remat=remat)
+    cfg, shape, lowered, chips = lower_cell(
+        arch, shape_name, mesh, mesh_name, remat=remat
+    )
     t_lower = time.perf_counter() - t0
     t0 = time.perf_counter()
     compiled = lowered.compile()
@@ -168,7 +170,9 @@ def main() -> None:
     if os.path.exists(args.out):
         with open(args.out) as f:
             results = json.load(f)
-    done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r.get("status") == "ok"}
+    done = {
+        (r["arch"], r["shape"], r["mesh"]) for r in results if r.get("status") == "ok"
+    }
 
     failures = 0
     for arch in archs:
@@ -178,15 +182,27 @@ def main() -> None:
             if not ok:
                 print(f"[dryrun] {arch} × {shape_name}: SKIP ({reason})", flush=True)
                 results = [
-                    r for r in results if not (r["arch"] == arch and r["shape"] == shape_name)
-                ] + [{"arch": arch, "shape": shape_name, "mesh": "-", "status": "skip", "reason": reason}]
+                    r
+                    for r in results
+                    if not (r["arch"] == arch and r["shape"] == shape_name)
+                ] + [
+                    {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": "-",
+                        "status": "skip",
+                        "reason": reason,
+                    }
+                ]
                 continue
             for mesh_name, mesh in meshes:
                 if (arch, shape_name, mesh_name) in done:
                     continue
                 try:
                     with mesh:
-                        row = run_cell(arch, shape_name, mesh, mesh_name, remat=args.remat)
+                        row = run_cell(
+                            arch, shape_name, mesh, mesh_name, remat=args.remat
+                        )
                     results.append(row)
                 except Exception as e:  # a failure here is a bug in our sharding
                     failures += 1

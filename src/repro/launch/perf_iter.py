@@ -62,7 +62,10 @@ def main() -> None:
     import repro.configs.base as cfgbase
 
     orig_get = cfgbase.get_config
-    cfgbase.get_config = lambda a, smoke=False: cfg if canon(a) == arch else orig_get(a, smoke=smoke)
+    cfgbase.get_config = lambda a, smoke=False: cfg if canon(a) == arch else orig_get(
+        a,
+        smoke=smoke,
+    )
     dryrun.get_config = cfgbase.get_config
     if "seq_parallel" in args.variant:
         # Megatron-SP: hidden stream sequence-sharded over the model axis —

@@ -103,10 +103,16 @@ class CollectiveStats:
         return sum(self.wire_bytes.values())
 
 
-_WHILE_RE = re.compile(r"\bwhile\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
-_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*(?:/\*.*\*/)?$")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"
+)
+_COMP_START_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*(?:/\*.*\*/)?$"
+)
 _CONST_RE = re.compile(r"constant\((\d+)\)")
-_CALLS_RE = re.compile(r"(?:calls|to_apply|condition|body|true_computation|false_computation)=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|true_computation|false_computation)=%?([\w\.\-]+)"
+)
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
 _OPNAME_RE = re.compile(r"\s([a-z][a-z0-9\-_\.]*)\(")
 _LEAF_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")

@@ -79,7 +79,8 @@ def rules_for(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict[str, Any]:
             rules["cache_heads"], rules["cache_seq"] = None, None
         if cfg.local_window and min(cfg.local_window, shape.seq_len) % model != 0:
             # Ring-buffer caches with non-dividing windows stay replicated.
-            rules["cache_seq"] = None if rules["cache_heads"] is None else rules["cache_seq"]
+            if rules["cache_heads"] is None:
+                rules["cache_seq"] = None
     return rules
 
 

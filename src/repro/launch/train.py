@@ -79,9 +79,24 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--num-shards", type=int, default=16)
     ap.add_argument("--num-workers", type=int, default=4)
-    ap.add_argument("--spl-steps", type=int, default=10, help="steps per adaptation period")
-    ap.add_argument("--hetero", type=float, default=0.5, help="capacity spread (0=homog)")
-    ap.add_argument("--fail-worker", type=int, default=-1, help="worker to kill mid-run")
+    ap.add_argument(
+        "--spl-steps",
+        type=int,
+        default=10,
+        help="steps per adaptation period",
+    )
+    ap.add_argument(
+        "--hetero",
+        type=float,
+        default=0.5,
+        help="capacity spread (0=homog)",
+    )
+    ap.add_argument(
+        "--fail-worker",
+        type=int,
+        default=-1,
+        help="worker to kill mid-run",
+    )
     ap.add_argument("--fail-at", type=int, default=-1, help="step to kill it at")
     ap.add_argument("--ckpt-dir", default="checkpoints/train")
     ap.add_argument("--ckpt-every", type=int, default=50)

@@ -45,7 +45,9 @@ DEFAULT_RULES: dict[str, Any] = {
 SP_RULES = dict(DEFAULT_RULES, seq="model", cache_seq="model", cache_heads=None)
 
 
-def logical_spec(axes: tuple[Optional[str], ...], rules: dict[str, Any] | None = None) -> P:
+def logical_spec(
+    axes: tuple[Optional[str], ...], rules: dict[str, Any] | None = None
+) -> P:
     rules = rules or DEFAULT_RULES
     resolved = []
     for ax in axes:
@@ -150,7 +152,9 @@ def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
     return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
 
 
-def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)

@@ -16,7 +16,15 @@ import jax
 import jax.numpy as jnp
 from jax import ShapeDtypeStruct
 
-from repro.configs.base import ATTN, ATTN_MOE, LOCAL_ATTN, MLSTM, RGLRU, SLSTM, ModelConfig
+from repro.configs.base import (
+    ATTN,
+    ATTN_MOE,
+    LOCAL_ATTN,
+    MLSTM,
+    RGLRU,
+    SLSTM,
+    ModelConfig,
+)
 
 
 def _block_cache_shapes(

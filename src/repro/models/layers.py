@@ -70,7 +70,11 @@ def mlp_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
 # ---------------------------------------------------------------------------
 
 
-def qkv_project(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+def qkv_project(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[
+    jax.Array,
+    jax.Array,
+    jax.Array,
+]:
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])

@@ -135,7 +135,9 @@ def _moe_local(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
     return jax.vmap(row)(x)
 
 
-def _moe_expert_parallel(cfg: ModelConfig, p: dict, x: jax.Array, rules: dict) -> jax.Array:
+def _moe_expert_parallel(
+    cfg: ModelConfig, p: dict, x: jax.Array, rules: dict
+) -> jax.Array:
     """Expert parallelism: fully-manual shard_map over the whole mesh.
 
     Layout (no GSPMD freedom — a pure-GSPMD and a partial-manual variant were
@@ -231,7 +233,9 @@ def moe_forward(
     return out
 
 
-def load_balancing_loss(router_logits: jax.Array, chosen: jax.Array, e: int) -> jax.Array:
+def load_balancing_loss(
+    router_logits: jax.Array, chosen: jax.Array, e: int
+) -> jax.Array:
     """Switch-style auxiliary loss (density × mean gate probability)."""
     probs = jax.nn.softmax(router_logits, axis=-1)  # (T, E)
     density = jnp.mean(jax.nn.one_hot(chosen[..., 0], e, dtype=probs.dtype), axis=0)

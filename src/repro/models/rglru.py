@@ -112,7 +112,11 @@ def rglru_block(
     """
     from repro.models.common import apply_norm
 
-    normed = apply_norm(cfg.norm_kind, {k[5:]: v for k, v in p.items() if k.startswith("norm_")}, x)
+    normed = apply_norm(
+        cfg.norm_kind,
+        {k[5:]: v for k, v in p.items() if k.startswith("norm_")},
+        x,
+    )
     gate = jax.nn.gelu(normed @ p["w_gate_branch"], approximate=True)
     xb = normed @ p["w_x_branch"]
 

@@ -137,21 +137,29 @@ def mlstm_chunk_parallel(
         w_intra = jnp.exp(a - m_t[:, :, None, :])  # (B,t,u,H)
         w_inter = jnp.exp(log_w_inter - m_t)  # (B,t,H)
         # Intra-chunk attention-like term.
-        scores = jnp.einsum("bthk,buhk->btuh", qj.astype(jnp.float32), kj.astype(jnp.float32))
+        scores = jnp.einsum(
+            "bthk,buhk->btuh", qj.astype(jnp.float32), kj.astype(jnp.float32)
+        )
         scores = scores * w_intra
         num_intra = jnp.einsum("btuh,buhk->bthk", scores, vj.astype(jnp.float32))
         # Normalizer n_t·q_t = Σ_u w_ut (k_u·q_t) — sum the weighted scores.
-        den_intra = jnp.einsum("btuh,buh->bth", scores, jnp.ones(kj.shape[:3], jnp.float32))
+        den_intra = jnp.einsum(
+            "btuh,buh->bth", scores, jnp.ones(kj.shape[:3], jnp.float32)
+        )
         # Inter-chunk carry term.
         num_inter = jnp.einsum(
             "bthk,bhkl->bthl", qj.astype(jnp.float32), c_prev
         ) * w_inter[..., None]
-        den_inter = jnp.einsum("bthk,bhk->bth", qj.astype(jnp.float32), n_prev) * w_inter
+        den_inter = (
+            jnp.einsum("bthk,bhk->bth", qj.astype(jnp.float32), n_prev) * w_inter
+        )
         num = num_intra + num_inter
         den = jnp.abs(den_intra + den_inter)
         h_chunk = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
         # Update carry to end of chunk.
-        m_new = jnp.maximum(m_prev + total_f, jnp.max(ij + (total_f[:, None, :] - csum_f), axis=1))
+        m_new = jnp.maximum(
+            m_prev + total_f, jnp.max(ij + (total_f[:, None, :] - csum_f), axis=1)
+        )
         w_c = jnp.exp(m_prev + total_f - m_new)  # carry decay
         w_u = jnp.exp(
             ij + (total_f[:, None, :] - csum_f) - m_new[:, None, :]

@@ -49,7 +49,10 @@ class AdamW:
         sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads)
         return jnp.sqrt(sum(jax.tree.leaves(sq)))
 
-    def update(self, grads: Any, state: AdamWState, params: Any) -> tuple[Any, AdamWState]:
+    def update(self, grads: Any, state: AdamWState, params: Any) -> tuple[
+        Any,
+        AdamWState,
+    ]:
         step = state.step + 1
         lr = self._lr(step)
         gnorm = self.global_norm(grads)

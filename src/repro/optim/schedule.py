@@ -12,11 +12,20 @@ def linear_warmup(peak: float, warmup_steps: int):
     return fn
 
 
-def cosine_schedule(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.1):
+def cosine_schedule(
+    peak: float,
+    warmup_steps: int,
+    total_steps: int,
+    floor: float = 0.1,
+):
     def fn(step):
         s = step.astype(jnp.float32)
         warm = peak * jnp.minimum(s / max(warmup_steps, 1), 1.0)
-        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        frac = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1),
+            0.0,
+            1.0,
+        )
         cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
         return jnp.where(s < warmup_steps, warm, peak * cos)
 

@@ -41,7 +41,10 @@ class Graph:
         self.edge_v = np.asarray(self.edge_v, dtype=np.int64)
         self.edge_w = np.asarray(self.edge_w, dtype=np.float64)
         self.vertex_w = np.asarray(self.vertex_w, dtype=np.float64)
-        if self.edge_u.shape != self.edge_v.shape or self.edge_u.shape != self.edge_w.shape:
+        if (
+            self.edge_u.shape != self.edge_v.shape
+            or self.edge_u.shape != self.edge_w.shape
+        ):
             raise ValueError("edge arrays must share a shape")
         if self.vertex_w.shape != (self.num_vertices,):
             raise ValueError("vertex_w must have shape (num_vertices,)")
@@ -233,7 +236,9 @@ def _fm_refine(
     return labels
 
 
-def _rebalance(graph: Graph, labels: np.ndarray, nparts: int, balance_tol: float) -> np.ndarray:
+def _rebalance(
+    graph: Graph, labels: np.ndarray, nparts: int, balance_tol: float
+) -> np.ndarray:
     """Force part weights under the cap by evicting smallest-loss vertices."""
     labels = labels.copy()
     total = graph.vertex_w.sum()

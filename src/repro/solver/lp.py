@@ -89,7 +89,9 @@ def solve_milp(
     return _greedy_repair(problem, warm_start=warm_start)
 
 
-def _solve_scipy(problem: MilpProblem, *, time_limit: float, mip_rel_gap: float) -> MilpResult:
+def _solve_scipy(
+    problem: MilpProblem, *, time_limit: float, mip_rel_gap: float
+) -> MilpResult:
     n = problem.num_vars
     a = _ssp.csc_matrix(
         (problem.a_vals, (problem.a_rows, problem.a_cols)),
@@ -128,7 +130,9 @@ def _solve_scipy(problem: MilpProblem, *, time_limit: float, mip_rel_gap: float)
     )
 
 
-def _greedy_repair(problem: MilpProblem, warm_start: Optional[np.ndarray]) -> MilpResult:
+def _greedy_repair(
+    problem: MilpProblem, warm_start: Optional[np.ndarray]
+) -> MilpResult:
     """Scipy-less fallback: start from bounds/warm start, greedily repair rows.
 
     This is NOT a general MILP solver; it exists so that `repro.core` degrades
@@ -275,8 +279,12 @@ class MilpBuilder:
         self._rows.append(rows + base)
         self._cols.append(cols)
         self._vals.append(vals)
-        self._row_lb.append(np.broadcast_to(np.asarray(lb, dtype=np.float64), (num_rows,)))
-        self._row_ub.append(np.broadcast_to(np.asarray(ub, dtype=np.float64), (num_rows,)))
+        self._row_lb.append(
+            np.broadcast_to(np.asarray(lb, dtype=np.float64), (num_rows,)),
+        )
+        self._row_ub.append(
+            np.broadcast_to(np.asarray(ub, dtype=np.float64), (num_rows,)),
+        )
         self._num_rows += num_rows
         return base
 

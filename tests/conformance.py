@@ -1,0 +1,254 @@
+"""Differential conformance harness for engine data-plane equivalence.
+
+One scenario — a topology, randomized sources, optional migrations and
+backpressure — is driven through every execution configuration:
+
+* ``soa+seg``   — SoA work queues with the segment-vectorized ``fn_seg``
+  protocol enabled (the production path);
+* ``soa+fn``    — SoA queues with ``fn_seg`` stripped (every run takes the
+  per-run ``fn``);
+* ``deque+fn``  — the legacy per-entry deque queue (always per-run ``fn``),
+  the original oracle.
+
+The run results must be *bit-identical*: every tuple-flow metric, the sink
+outputs (values and order), every key group's operator state (including dict
+insertion order — it decides TopK tie-breaks and pickle bytes), the folded
+SPL statistics (loads, arrival rates, sparse pair rates, state sizes), the
+routing table and the per-node queue costs.
+
+This is the required check for new operators and new ``fn_seg`` ports: add a
+topology + feeder entry to ``JOBS`` (or call :func:`run_configs` directly)
+and assert with :func:`assert_equivalent`.  See
+``tests/test_real_jobs_conformance.py`` for the real-job instantiation and
+``docs/operator_authoring.md`` for the authoring contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.jobs import make_real_job_1, real_job_2, real_job_3, real_job_4
+from repro.data.synthetic import (
+    StreamSpec,
+    airline_stream,
+    weather_stream,
+    wiki_edit_stream,
+)
+from repro.engine import Engine
+from repro.engine.topology import OperatorSpec, Topology
+
+CONFIGS = (("soa", True), ("soa", False), ("deque", False))
+
+METRIC_FIELDS = (
+    "processed_tuples",
+    "emitted_tuples",
+    "sink_tuples",
+    "cross_node_tuples",
+    "intra_node_tuples",
+    "dropped_credits",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One randomized drive of a topology, identical across configurations."""
+
+    name: str
+    ticks: int = 14
+    drain_ticks: int = 8
+    service_rate: float = 1e9
+    num_nodes: int = 4
+    seed: int = 0
+    # Ticks at which a random key group is redirected; its state is installed
+    # at the destination one tick later (traffic in between exercises the
+    # router's in-flight buffering and the non-contiguous fn fallback).
+    migrate_at: tuple[int, ...] = ()
+
+
+def normalize(obj):
+    """Recursively convert to comparable plain structures.
+
+    Dicts become ordered item lists — insertion order is part of the
+    conformance contract (it decides stable-sort tie-breaks and pickle
+    bytes, hence migration blobs and ``kg_state_bytes``).
+    """
+    if isinstance(obj, dict):
+        return ("dict", [(normalize(k), normalize(v)) for k, v in obj.items()])
+    if isinstance(obj, (list, tuple)):
+        return ("seq", [normalize(x) for x in obj])
+    if isinstance(obj, np.ndarray):
+        return ("array", obj.tolist())
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
+
+
+def run_scenario(topo_factory, feeder_factory, scenario, *, queue_impl, use_fn_seg):
+    """Drive one engine configuration through the scenario; return a result
+    dict of everything the equivalence contract pins."""
+    topo = topo_factory()
+    eng = Engine(
+        topo,
+        scenario.num_nodes,
+        service_rate=scenario.service_rate,
+        seed=scenario.seed,
+        queue_impl=queue_impl,
+        use_fn_seg=use_fn_seg,
+    )
+    feeds = feeder_factory()
+    rng = np.random.default_rng(scenario.seed + 1)
+    in_flight: list[tuple[int, int, int]] = []
+    for t in range(scenario.ticks):
+        if t in scenario.migrate_at:
+            # Drawn unconditionally so the rng stream (and therefore every
+            # subsequent choice) is identical across configurations.
+            kg = int(rng.integers(0, topo.num_keygroups))
+            dst = int(rng.integers(0, eng.num_nodes))
+            if not eng.router.is_in_flight(kg):
+                eng.redirect(kg, dst)
+                in_flight.append((t, kg, dst))
+        for op, it in feeds.items():
+            keys, values, ts = next(it)
+            eng.push_source(op, keys, values, ts)
+        eng.tick()
+        for item in list(in_flight):
+            t0, kg, dst = item
+            if t >= t0 + 1:
+                eng.install(kg, dst, eng.serialize(kg))
+                in_flight.remove(item)
+    for _ in range(scenario.drain_ticks):
+        eng.tick()
+    snap = eng.end_period()
+    return {
+        "metrics": {m: getattr(eng.metrics, m) for m in METRIC_FIELDS},
+        "sink_outputs": normalize(eng.metrics.sink_outputs),
+        "states": [normalize(s) for _, s in eng.store.items()],
+        "kg_load": snap.kg_load.tolist(),
+        "kg_tuple_rate": snap.kg_tuple_rate.tolist(),
+        "kg_state_bytes": snap.kg_state_bytes.tolist(),
+        "pair_src": snap.out_pairs.src.tolist(),
+        "pair_dst": snap.out_pairs.dst.tolist(),
+        "pair_rate": snap.out_pairs.rate.tolist(),
+        "alloc": eng.router.table.tolist(),
+        "queue_costs": [q.cost for q in eng._queues],
+        "seg_calls": eng.metrics.seg_calls,
+        "seg_tuples": eng.metrics.seg_tuples,
+    }
+
+
+def run_configs(topo_factory, feeder_factory, scenario):
+    """Run every execution configuration; returns {config name: result}."""
+    return {
+        f"{impl}+{'seg' if seg else 'fn'}": run_scenario(
+            topo_factory, feeder_factory, scenario, queue_impl=impl, use_fn_seg=seg
+        )
+        for impl, seg in CONFIGS
+    }
+
+
+def assert_equivalent(results: dict[str, dict]) -> None:
+    """All configurations must agree on every pinned field, bit for bit."""
+    names = list(results)
+    base_name, base = names[0], results[names[0]]
+    for name in names[1:]:
+        other = results[name]
+        for field, expect in base.items():
+            if field in ("seg_calls", "seg_tuples"):
+                continue  # differs by construction between seg and fn configs
+            got = other[field]
+            if field == "states":
+                for kg, (a, b) in enumerate(zip(expect, got)):
+                    assert a == b, (
+                        f"{base_name} vs {name}: state of key group {kg} differs:"
+                        f"\n  {a!r}\n  {b!r}"
+                    )
+                continue
+            assert got == expect, (
+                f"{base_name} vs {name}: {field} differs:"
+                f"\n  {str(expect)[:400]}\n  {str(got)[:400]}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Job registry: the four real jobs plus the synthetic pipeline.
+# ---------------------------------------------------------------------------
+
+_KGS = 12  # small key-group counts keep the suite fast but multi-run
+
+
+def _wiki_feeders():
+    return {"wiki": wiki_edit_stream(StreamSpec(rate=90.0, seed=5))}
+
+
+def _airline_feeders():
+    return {"airline": airline_stream(StreamSpec(rate=90.0, seed=5))}
+
+
+def _job4_feeders():
+    return {
+        "airline": airline_stream(StreamSpec(rate=90.0, seed=5)),
+        "weather": weather_stream(StreamSpec(rate=40.0, seed=5)),
+    }
+
+
+def _int_batches(rate=120, key_space=10_000, seed=5):
+    rng = np.random.default_rng(seed)
+    tick = 0
+    while True:
+        n = int(rng.poisson(rate))
+        keys = rng.integers(0, key_space, size=n).astype(np.int64)
+        yield keys, rng.random(n), np.full(n, float(tick))
+        tick += 1
+
+
+def make_pipeline_topo(kgs: int = 16) -> Topology:
+    """The synthetic source → re-key → recording-sink pipeline, with both
+    operator protocols (shared with the migration property tests)."""
+
+    def mid_fn(state, keys, values, ts):
+        state["n"] = state.get("n", 0) + len(keys)
+        return state, (keys + 17, values, ts)
+
+    def mid_seg(store, run_kgs, starts, ends, keys, values, ts):
+        for kg, a, z in zip(run_kgs, starts, ends):
+            st = store[kg]
+            st["n"] = st.get("n", 0) + (z - a)
+        return (keys + 17, values, ts), None
+
+    def sink_fn(state, keys, values, ts):
+        state["n"] = state.get("n", 0) + len(keys)
+        return state, (keys * 2, values, ts)
+
+    def sink_seg(store, run_kgs, starts, ends, keys, values, ts):
+        for kg, a, z in zip(run_kgs, starts, ends):
+            st = store[kg]
+            st["n"] = st.get("n", 0) + (z - a)
+        return (keys * 2, values, ts), None
+
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, num_keygroups=kgs, is_source=True))
+    t.add_operator(OperatorSpec("mid", mid_fn, num_keygroups=kgs, fn_seg=mid_seg))
+    t.add_operator(
+        OperatorSpec("sink", sink_fn, num_keygroups=kgs, is_sink=True, fn_seg=sink_seg)
+    )
+    t.connect("src", "mid")
+    t.connect("mid", "sink")
+    return t
+
+
+def _pipeline_feeders():
+    return {"src": _int_batches()}
+
+
+JOBS = {
+    "job1": (
+        lambda: make_real_job_1(keygroups_per_op=_KGS, topk=3, window_ticks=4.0),
+        _wiki_feeders,
+    ),
+    "job2": (lambda: real_job_2(keygroups_per_op=_KGS), _airline_feeders),
+    "job3": (lambda: real_job_3(keygroups_per_op=_KGS), _airline_feeders),
+    "job4": (lambda: real_job_4(keygroups_per_op=_KGS), _job4_feeders),
+    "pipeline": (lambda: make_pipeline_topo(_KGS), _pipeline_feeders),
+}

@@ -14,7 +14,11 @@ from conftest import make_cluster
 
 def test_albic_respects_max_ld():
     state = make_cluster(seed=1)
-    res = albic(state, max_migr_cost=200.0, params=AlbicParams(max_ld=10.0, time_limit=3.0))
+    res = albic(
+        state,
+        max_migr_cost=200.0,
+        params=AlbicParams(max_ld=10.0, time_limit=3.0),
+    )
     assert res.plan.status != "infeasible"
     assert res.plan.load_distance <= 10.0 + 1e-6 or res.retries > 0
 

@@ -92,11 +92,20 @@ def test_parse_row_matches_csv_format():
 
 
 def test_committed_baseline_is_loadable_and_gated():
-    """The repo baseline must cover both gated modules (CI depends on it)."""
-    baseline = load_rows(str(Path(__file__).parent.parent / "benchmarks" / "baseline.json"))
+    """The repo baseline must cover every gated module (CI depends on it) —
+    compare.py silently skips rows missing from the baseline, so a refresh
+    run with a stale --only list would disarm part of the gate unnoticed."""
+    baseline = load_rows(
+        str(Path(__file__).parent.parent / "benchmarks" / "baseline.json"),
+    )
     modules = {name.split("/", 1)[0] for name in baseline}
-    assert "engine_throughput" in modules
-    assert "solver_perf" in modules
+    from benchmarks.compare import DEFAULT_MODULES
+
+    for module in DEFAULT_MODULES:
+        assert module in modules, f"baseline.json lacks gated module {module!r}"
+    # The per-job throughput rows are the gated real_jobs signal.
+    for job in ("job1", "job2", "job3", "job4"):
+        assert f"real_jobs/{job}_seg_throughput" in baseline
 
 
 @pytest.mark.slow

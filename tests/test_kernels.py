@@ -44,7 +44,10 @@ from repro.kernels.moe_gemm.ref import moe_gemm_ref
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
 from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
 
-TOL = {jnp.float32: dict(atol=3e-5, rtol=3e-5), jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+TOL = {
+    jnp.float32: dict(atol=3e-5, rtol=3e-5),
+    jnp.bfloat16: dict(atol=3e-2, rtol=3e-2),
+}
 
 
 # ---------------------------------------------------------------------------

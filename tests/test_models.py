@@ -53,11 +53,10 @@ def test_smoke_forward_and_train_step(arch):
     assert np.isfinite(float(metrics["loss"]))
     assert np.isfinite(float(metrics["grad_norm"]))
     # Parameters actually changed.
-    delta = jax.tree.map(
-        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
-        params,
-        p2,
-    )
+    def absmax(a, b):
+        return float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+
+    delta = jax.tree.map(absmax, params, p2)
     assert max(jax.tree.leaves(delta)) > 0
 
 
@@ -111,7 +110,9 @@ def test_prefill_decode_consistency(arch):
 
 
 def test_long_500k_applicability_matches_design():
-    runs = {a for a in ARCH_IDS if shape_applicable(get_config(a), SHAPES["long_500k"])[0]}
+    runs = {
+        a for a in ARCH_IDS if shape_applicable(get_config(a), SHAPES["long_500k"])[0]
+    }
     assert runs == {"recurrentgemma_2b", "xlstm_1_3b"}
 
 

@@ -187,7 +187,12 @@ def _drive(eng, ticks=12, batch=300, seed=3):
     pushed = 0
     for t in range(ticks):
         keys = rng.integers(0, 10_000, size=batch).astype(np.int64)
-        pushed += eng.push_source("src", keys, rng.random(batch), np.full(batch, float(t)))
+        pushed += eng.push_source(
+            "src",
+            keys,
+            rng.random(batch),
+            np.full(batch, float(t)),
+        )
         eng.tick()
     for _ in range(4):  # drain stragglers
         eng.tick()
@@ -299,7 +304,18 @@ def test_extract_keygroup_masks_out_queued_runs(queue_cls):
     assert [b[0].tolist() for b in batches] == [[20, 20], [1, 2, 3]]
     # Remaining runs are untouched and drain normally.
     drained = []
-    q.drain(1e9, lambda node, op, kg, k, v, t: drained.append((kg, k.tolist())), 0, [], [])
+    q.drain(
+        1e9,
+        lambda node,
+        op,
+        kg,
+        k,
+        v,
+        t: drained.append((kg, k.tolist())),
+        0,
+        [],
+        [],
+    )
     assert drained == [(5, [10, 10]), (7, [30])]
     assert q.cost == 0.0
 
@@ -367,7 +383,13 @@ def test_fn_seg_matches_per_run_fn():
     always uses) — the contract the throughput benchmark relies on."""
     seg_eng = Engine(_pipeline_topo_seg(), 4, service_rate=1e9, seed=0)
     run_eng = Engine(_pipeline_topo(), 4, service_rate=1e9, seed=0)
-    oracle = Engine(_pipeline_topo_seg(), 4, service_rate=1e9, seed=0, queue_impl="deque")
+    oracle = Engine(
+        _pipeline_topo_seg(),
+        4,
+        service_rate=1e9,
+        seed=0,
+        queue_impl="deque",
+    )
     for eng in (seg_eng, run_eng, oracle):
         _drive(eng)
     assert seg_eng.metrics.processed_tuples == run_eng.metrics.processed_tuples

@@ -1,0 +1,132 @@
+"""kg_tuple_rate as a leading-load signal for the scaling policies.
+
+The scalers remember the previous period's per-key-group arrival rates and
+project each key group's load forward by its rate growth.  A hotspot key
+group whose arrivals surge therefore triggers scale-out one period earlier
+than the utilization-only watermark, which only reacts once the CPU load has
+materialized.
+"""
+
+import numpy as np
+
+from repro.core.milp import AllocationPlan
+from repro.core.scaling import (
+    LatencyProxyScaler,
+    UtilizationScaler,
+    projected_loads,
+)
+from repro.core.stats import ClusterState
+
+
+def _state(kg_load, rate, *, num_nodes=2, alloc=None):
+    g = len(kg_load)
+    alloc = np.asarray(alloc if alloc is not None else np.arange(g) % num_nodes)
+    return ClusterState.create(
+        num_nodes,
+        np.zeros(g, dtype=np.int64),
+        np.asarray(kg_load, dtype=np.float64),
+        alloc,
+        kg_tuple_rate=None if rate is None else np.asarray(rate, dtype=np.float64),
+    )
+
+
+def _plan(state):
+    return AllocationPlan(
+        alloc=state.alloc.copy(),
+        d=0.0,
+        d_u=0.0,
+        d_l=0.0,
+        objective=0.0,
+        status="ok",
+        solve_seconds=0.0,
+        load_distance=0.0,
+        migrations=[],
+        migration_cost=0.0,
+    )
+
+
+# Three periods of one hotspot story: load on key group 0 is about to triple.
+# Period 1: calm.  Period 2: arrivals surge into kg 0, CPU load unchanged
+# (it lags one period).  Period 3: the surged load has materialized.
+P1 = ([35.0, 35.0, 35.0, 35.0], [10.0, 10.0, 10.0, 10.0])
+P2 = ([35.0, 35.0, 35.0, 35.0], [30.0, 10.0, 10.0, 10.0])
+P3 = ([105.0, 35.0, 35.0, 35.0], [30.0, 10.0, 10.0, 10.0])
+ALLOC = [0, 0, 1, 1]
+
+
+def _drive(scaler):
+    """Feed the three periods; return the period index of first scale-out."""
+    for i, (load, rate) in enumerate((P1, P2, P3), start=1):
+        st = _state(load, rate, alloc=ALLOC)
+        decision = scaler.decide(st, _plan(st))
+        if decision.add_nodes > 0:
+            return i
+    return None
+
+
+def test_hotspot_triggers_utilization_scaleout_one_period_early():
+    # Node loads are [70, 70]: below high_wm=80 until the surge materializes
+    # at period 3.  The rate signal projects kg 0's load ×3 at period 2.
+    assert _drive(UtilizationScaler(high_wm=80.0, target=60.0)) == 2
+    plain = UtilizationScaler(high_wm=80.0, target=60.0, use_rate_signal=False)
+    assert _drive(plain) == 3
+
+
+def test_hotspot_triggers_latency_scaleout_one_period_early():
+    # rho_cap = 100·4/5 = 80: peak load 70 holds until period 3; the
+    # projected peak (140 on node 0) breaches at period 2.
+    assert _drive(LatencyProxyScaler(latency_budget=4.0)) == 2
+    assert _drive(LatencyProxyScaler(latency_budget=4.0, use_rate_signal=False)) == 3
+
+
+def test_rate_surge_vetoes_scale_in():
+    scaler = UtilizationScaler(high_wm=80.0, low_wm=40.0, target=60.0)
+    # Period 1 sits between the watermarks: no action, rates get remembered.
+    calm = _state([25.0, 25.0, 25.0, 25.0], [10.0] * 4, alloc=ALLOC)
+    assert not scaler.decide(calm, _plan(calm)).scaled
+    surge = _state([15.0, 15.0, 15.0, 15.0], [18.0, 18.0, 18.0, 18.0], alloc=ALLOC)
+    # Loads dropped far below low_wm, but arrivals are growing 1.8×: the
+    # projected average (54) clears low_wm, so the removal is vetoed while
+    # staying under high_wm (no spurious scale-out either).
+    assert not scaler.decide(surge, _plan(surge)).scaled
+    # Without the veto the same snapshot scales in.
+    plain = UtilizationScaler(
+        high_wm=80.0,
+        low_wm=40.0,
+        target=60.0,
+        use_rate_signal=False,
+    )
+    plain.decide(calm, _plan(calm))
+    assert plain.decide(surge, _plan(surge)).mark_for_removal
+
+
+def test_projection_requires_rates_on_both_periods():
+    st = _state([50.0, 50.0], None)
+    assert projected_loads(st, st.alloc, np.array([1.0, 1.0])) is None
+    st2 = _state([50.0, 50.0], [5.0, 5.0])
+    assert projected_loads(st2, st2.alloc, None) is None
+    # Mismatched key-group spaces (e.g. across a topology change) disable it.
+    assert projected_loads(st2, st2.alloc, np.array([1.0])) is None
+
+
+def test_projection_clips_growth_and_ignores_noise():
+    prev = np.array([10.0, 0.1, 10.0, 10.0])
+    st = _state(
+        [10.0, 10.0, 10.0, 10.0],
+        [100.0, 10.0, 5.0, 10.0],
+        num_nodes=4,
+        alloc=[0, 1, 2, 3],
+    )
+    proj = projected_loads(st, st.alloc, prev)
+    assert proj is not None
+    # kg0: 10× growth clipped to 4×; kg1: prev rate below the noise floor,
+    # unscaled; kg2: shrinking rate never *lowers* the projection; kg3: flat.
+    assert proj.tolist() == [40.0, 10.0, 10.0, 10.0]
+
+
+def test_first_period_without_history_matches_plain_policy():
+    """No stored rates yet → the rate-aware scaler is exactly the plain one."""
+    st = _state([95.0, 95.0, 95.0, 95.0], [10.0] * 4, alloc=ALLOC)
+    aware = UtilizationScaler(high_wm=80.0, target=60.0)
+    plain = UtilizationScaler(high_wm=80.0, target=60.0, use_rate_signal=False)
+    assert aware.decide(st, _plan(st)) == plain.decide(st, _plan(st))
