@@ -5,8 +5,10 @@ CI runs ``python -m benchmarks.run --quick --json BENCH_<sha>.json`` and then
 the job fails when any gated row regressed by more than ``--threshold``
 (default 20%).  Gated rows are the ones whose module prefix is in
 ``--modules`` (default: the perf-critical suites — engine_throughput,
-solver_perf, and the per-job real_jobs throughput rows) and whose baseline
-time clears ``--min-us`` — sub-50µs rows are noise, not signal.
+solver_perf, and the per-job real_jobs rows: the fn_seg/columnar throughput
+rows, the record-pipeline columnar-vs-object row, and the schema-typed
+migration round-trip row) and whose baseline time clears ``--min-us`` —
+sub-50µs rows are noise, not signal.
 
 To update the committed baseline after an intentional perf change::
 

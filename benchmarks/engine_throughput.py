@@ -4,9 +4,12 @@ largest scale (Fig. 4: 60 nodes × 1200 key groups).
 
 The pipeline job keeps operator bodies trivially cheap (a C-level re-key) so
 the measurement isolates the engine hot path itself: key hashing, key-group
-routing, queueing, and statistics recording.  The MILP row reports assembly
-time separately from HiGHS solve time (``total − solve_seconds``) so the
-constraint-build cost is pinned by its own number in the perf trajectory.
+routing, queueing, and statistics recording.  The record-pipeline row runs
+the same shape over structured record payloads twice — schema-typed
+(columnar structured-array edges) versus the object path — so the columnar
+win past the object-array boundary is pinned by its own number.  The MILP
+row reports assembly time separately from HiGHS solve time
+(``total − solve_seconds``) so the constraint-build cost is pinned too.
 """
 
 from __future__ import annotations
@@ -18,7 +21,7 @@ import numpy as np
 from benchmarks.common import csv_row, synthetic_cluster
 from repro.core import solve_allocation
 from repro.engine import Engine
-from repro.engine.topology import OperatorSpec, Topology
+from repro.engine.topology import OperatorSpec, Schema, Topology
 
 
 def _rekey_stage(shift: int):
@@ -122,6 +125,126 @@ def measure_pipeline(
     return best, batch * (depth + 1) / best * 1e6
 
 
+_REC_SCHEMA = Schema.record([("a", "i8"), ("b", "f8")])
+
+
+def _record_stage(shift: int):
+    """Record-payload stage: re-key and fold the int column into the float.
+
+    The fn_seg body branches on the value representation: structured column
+    arithmetic on the typed path, ``zip(*values)`` extraction on the object
+    path — the same contract the real jobs follow."""
+
+    def fn(state, keys, values, ts):
+        state["n"] = state.get("n", 0) + len(keys)
+        out = [
+            (k, (v[0], v[1] + v[0]), t)
+            for k, v, t in zip(keys.tolist(), values.tolist(), ts.tolist())
+        ]
+        return state, out
+
+    def fn_seg(store, kgs, starts, ends, keys, values, ts):
+        for kg, a, z in zip(kgs, starts, ends):
+            st = store[kg]
+            st["n"] = st.get("n", 0) + (z - a)
+        if values.dtype.names is not None:
+            out = np.empty(len(values), dtype=_REC_SCHEMA.value)
+            out["a"] = values["a"]
+            out["b"] = values["b"] + values["a"]
+        else:
+            a_l, b_l = zip(*values.tolist())
+            a = np.asarray(a_l, dtype=np.int64)
+            b = np.asarray(b_l) + a
+            out = np.empty(len(values), dtype=object)
+            out[:] = list(zip(a.tolist(), b.tolist()))
+        return (keys + shift, out, ts), None
+
+    return fn, fn_seg
+
+
+def make_record_pipeline_job(*, num_keygroups: int = 64, depth: int = 3) -> Topology:
+    """source → depth−1 record stages → counting sink, schema-declared."""
+    t = Topology()
+    t.add_operator(
+        OperatorSpec(
+            "src",
+            None,
+            num_keygroups=num_keygroups,
+            is_source=True,
+            schema=_REC_SCHEMA,
+        )
+    )
+    prev = "src"
+    for i in range(depth - 1):
+        name = f"stage{i}"
+        fn, fn_seg = _record_stage(17 * (i + 1))
+        t.add_operator(
+            OperatorSpec(
+                name,
+                fn,
+                num_keygroups=num_keygroups,
+                fn_seg=fn_seg,
+                schema=_REC_SCHEMA,
+                out_schema=_REC_SCHEMA,
+            )
+        )
+        t.connect(prev, name)
+        prev = name
+    t.add_operator(
+        OperatorSpec(
+            "sink",
+            _counting_sink,
+            num_keygroups=num_keygroups,
+            is_sink=True,
+            fn_seg=_counting_sink_seg,
+            schema=_REC_SCHEMA,
+        )
+    )
+    t.connect(prev, "sink")
+    return t
+
+
+def measure_record_pipeline(
+    *,
+    batch: int = 2048,
+    ticks: int = 50,
+    num_keygroups: int = 64,
+    depth: int = 4,
+    repeats: int = 3,
+) -> dict[str, float]:
+    """Columnar vs object throughput on the record-payload pipeline."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 1_000_000, size=batch).astype(np.int64)
+    values = list(zip(rng.integers(0, 1_000, size=batch).tolist(), rng.random(batch)))
+    ts = np.zeros(batch)
+    out = {}
+    for label, use_schema in (("typed", True), ("obj", False)):
+        best = 0.0
+        for _ in range(max(repeats, 1)):
+            topo = make_record_pipeline_job(num_keygroups=num_keygroups, depth=depth)
+            eng = Engine(
+                topo,
+                num_nodes=8,
+                service_rate=1e12,
+                seed=0,
+                collect_sinks=False,
+                use_schema=use_schema,
+            )
+            eng.push_source("src", keys, values, ts)
+            eng.tick()
+            start = eng.metrics.processed_tuples
+            t0 = time.perf_counter()
+            for tick in range(ticks):
+                eng.push_source("src", keys, values, ts + float(tick))
+                eng.tick()
+            dt = time.perf_counter() - t0
+            best = max(best, (eng.metrics.processed_tuples - start) / dt)
+        out[label] = best
+    out["speedup"] = out["typed"] / max(out["obj"], 1e-9)
+    out["us_per_tick"] = batch * (depth + 1) / out["typed"] * 1e6
+    return out
+
+
 def measure_milp_assembly(
     *, nodes: int = 60, kgs: int = 1200, ops: int = 30, time_limit: float = 1.0
 ) -> tuple[float, float, str]:
@@ -143,6 +266,16 @@ def run(quick: bool = False) -> list[str]:
             f"engine_throughput/pipeline_d4_64kg_b{batch}",
             us_tick,
             f"tuples_per_sec={tps:.0f}",
+        )
+    )
+    rec = measure_record_pipeline(batch=batch, ticks=ticks)
+    rows.append(
+        csv_row(
+            f"engine_throughput/pipeline_rec_d4_64kg_b{batch}",
+            rec["us_per_tick"],
+            f"tuples_per_sec={rec['typed']:.0f}"
+            f";object_tuples_per_sec={rec['obj']:.0f}"
+            f";columnar_vs_object={rec['speedup']:.2f}",
         )
     )
     assembly, solve, status = measure_milp_assembly(time_limit=0.5 if quick else 1.0)

@@ -232,17 +232,21 @@ def _legacy_job_4(keygroups_per_op: int):
 
 
 _AIRLINE_DICT_FIELDS = ("airplane", "origin", "dest", "dep_delay", "arr_delay", "year")
+_WEATHER_DICT_FIELDS = ("station", "precip", "mean_temp", "visibility", "airport")
 
 
 def _legacy_batches(batches):
-    """The same pre-generated data with airline records as dicts (the pre-PR
-    payload representation).  Conversion happens outside the timed region."""
+    """The same pre-generated data with airline/weather records as dicts (the
+    pre-PR payload representation).  Conversion stays outside the timed
+    region."""
     out = []
     for tick in batches:
         row = []
         for op, keys, values, ts in tick:
             if op == "airline":
                 values = [dict(zip(_AIRLINE_DICT_FIELDS, v)) for v in values]
+            elif op == "weather":
+                values = [dict(zip(_WEATHER_DICT_FIELDS, v)) for v in values]
             row.append((op, keys, values, ts))
         out.append(row)
     return out
@@ -284,7 +288,7 @@ def _pregenerate(sources: tuple[str, ...], *, rate: float, ticks: int, seed: int
 
 
 def _run_once(
-    topo_factory, kgs, batches, *, use_fn_seg: bool = True
+    topo_factory, kgs, batches, *, use_fn_seg: bool = True, use_schema: bool = True
 ) -> tuple[float, float]:
     """One engine run over the pre-generated batches → (tuples/s, s/tick)."""
     eng = Engine(
@@ -294,6 +298,7 @@ def _run_once(
         seed=0,
         collect_sinks=False,
         use_fn_seg=use_fn_seg,
+        use_schema=use_schema,
     )
     # Warm-up tick: store/window allocation outside the timed region.
     for op, keys, values, ts in batches[0]:
@@ -312,26 +317,31 @@ def _run_once(
 def measure_job_throughput(
     job_key: str, *, kgs: int, rate: float, ticks: int, repeats: int = 3
 ) -> dict[str, float]:
-    """Best-of-``repeats`` tuples/sec for one job, on three execution paths:
-    fn_seg (production), per-run fn (the oracle fallback on today's job
-    bodies), and the frozen pre-PR baseline.  The same pre-generated batches
-    feed every run, so the comparison (and the gated per-tick time) measures
-    the execution paths, not the sources.
+    """Best-of-``repeats`` tuples/sec for one job, on four execution paths:
+    schema-typed fn_seg (production: columnar structured-array edges),
+    object-path fn_seg (``use_schema=False`` — the pre-schema fn_seg
+    numbers), per-run fn (the oracle fallback on today's job bodies), and
+    the frozen pre-PR baseline.  The same pre-generated batches feed every
+    run, so the comparison (and the gated per-tick time) measures the
+    execution paths, not the sources.
     """
     topo_factory, sources = THROUGHPUT_JOBS[job_key]
     batches = _pregenerate(sources, rate=rate, ticks=ticks, seed=3)
     legacy_factory = LEGACY_JOBS.get(job_key)
     variants = {
-        "seg": (topo_factory, batches, True),
-        "fn": (topo_factory, batches, False),
+        "seg": (topo_factory, batches, True, True),
+        "obj": (topo_factory, batches, True, False),
+        "fn": (topo_factory, batches, False, False),
     }
     if legacy_factory is not None:
-        variants["legacy"] = (legacy_factory, _legacy_batches(batches), False)
+        variants["legacy"] = (legacy_factory, _legacy_batches(batches), False, False)
     best = {label: 0.0 for label in variants}
     tick_s = {label: float("inf") for label in variants}
     for _ in range(max(repeats, 1)):
-        for label, (factory, data, use_seg) in variants.items():
-            tps, spt = _run_once(factory, kgs, data, use_fn_seg=use_seg)
+        for label, (factory, data, use_seg, use_schema) in variants.items():
+            tps, spt = _run_once(
+                factory, kgs, data, use_fn_seg=use_seg, use_schema=use_schema
+            )
             best[label] = max(best[label], tps)
             tick_s[label] = min(tick_s[label], spt)
     # Job 1's per-run bodies are unchanged from before the port, so its
@@ -339,12 +349,69 @@ def measure_job_throughput(
     legacy_tps = best.get("legacy", best["fn"])
     return {
         "seg_tps": best["seg"],
+        "obj_tps": best["obj"],
         "fn_tps": best["fn"],
         "legacy_tps": legacy_tps,
         "speedup": best["seg"] / max(legacy_tps, 1e-9),
+        "obj_speedup": best["seg"] / max(best["obj"], 1e-9),
         "fn_speedup": best["seg"] / max(best["fn"], 1e-9),
         "seg_us_per_tick": tick_s["seg"] * 1e6,
     }
+
+
+def measure_migration_roundtrip(
+    *, kgs: int = 40, n_tuples: int = 20_000, warm_ticks: int = 4, repeats: int = 3
+) -> dict[str, float]:
+    """serialize→install cost of migrating every extract key group of job 2
+    with a large queued backlog, schema-typed vs object path.
+
+    The blob of each key group carries its σ_k state plus the queued
+    segments ``redirect`` masked out of the source queue — raw buffer slices
+    on the typed path, pickled boxed tuples on the object path.  Returns
+    best-of-``repeats`` seconds and the average blob bytes per path.
+    """
+    air = airline_stream(StreamSpec(rate=float(n_tuples), seed=3))
+    warm = [next(air) for _ in range(warm_ticks)]
+    backlog = next(air)
+    out: dict[str, float] = {}
+    for label, use_schema in (("typed", True), ("obj", False)):
+        best = float("inf")
+        for _ in range(max(repeats, 1)):
+            eng = Engine(
+                real_job_2(keygroups_per_op=kgs),
+                4,
+                service_rate=1e12,
+                seed=0,
+                collect_sinks=False,
+                use_schema=use_schema,
+            )
+            for k, v, ts in warm:  # accumulate real sumdelay state
+                eng.push_source("airline", k, v, ts)
+                eng.tick()
+            # Land the backlog in extract's queues: the push routes to the
+            # airline source's own key groups, and this tick's source drain
+            # flushes it to extract at end of tick — after extract already
+            # drained — so it sits queued there.  No further ticks run, so
+            # the redirect loop below migrates exactly these n_tuples
+            # records (plus each key group's σ_k) per blob.
+            k, v, ts = backlog
+            eng.push_source("airline", k, v, ts)
+            eng.tick()
+            base = eng.topology.kg_base(1)  # extract owns the queued work
+            bytes_total = 0
+            t0 = time.perf_counter()
+            for kg in range(base, base + kgs):
+                dst = (eng.router.node_of(kg) + 1) % eng.num_nodes
+                eng.redirect(kg, dst)
+                blob = eng.serialize(kg)
+                bytes_total += len(blob)
+                eng.install(kg, dst, blob)
+            dt = time.perf_counter() - t0
+            best = min(best, dt)
+            out[f"{label}_bytes"] = bytes_total / kgs
+        out[label] = best
+    out["speedup"] = out["obj"] / max(out["typed"], 1e-12)
+    return out
 
 
 def build(job_key: str, kgs: int, nodes: int, seed: int):
@@ -437,12 +504,26 @@ def run(quick: bool = False) -> list[str]:
                 f"real_jobs/{job_key}_seg_throughput",
                 m["seg_us_per_tick"],
                 f"tuples_per_sec={m['seg_tps']:.0f}"
+                f";object_tuples_per_sec={m['obj_tps']:.0f}"
                 f";fn_tuples_per_sec={m['fn_tps']:.0f}"
                 f";pre_pr_tuples_per_sec={m['legacy_tps']:.0f}"
                 f";speedup_vs_pre_pr={m['speedup']:.2f}"
+                f";columnar_vs_object={m['obj_speedup']:.2f}"
                 f";speedup_vs_fn={m['fn_speedup']:.2f}",
             )
         )
+    mig_kw = dict(kgs=16, n_tuples=6_000, repeats=2) if quick else {}
+    mig = measure_migration_roundtrip(**mig_kw)
+    rows.append(
+        csv_row(
+            "real_jobs/job2_migration_roundtrip",
+            mig["typed"] * 1e6,
+            f"object_us={mig['obj'] * 1e6:.0f}"
+            f";typed_vs_object={mig['speedup']:.2f}"
+            f";typed_blob_bytes={mig['typed_bytes']:.0f}"
+            f";object_blob_bytes={mig['obj_bytes']:.0f}",
+        )
+    )
     kgs, nodes = (16, 4) if quick else (30, 8)
     periods, ticks = (5, 8) if quick else (8, 10)
     jobs = ["job2_fig12"] if quick else list(JOBS)

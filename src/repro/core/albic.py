@@ -12,7 +12,13 @@ quadratic:
           migration-cost ratio dominates, else gLoad_i; ties random.
   Step 3  pick one pair from toBeColGrps with maximal out(g_i, g_j) (random
           among ties) and pin it — and the partitions it touches — to a node
-          per the three cases of the paper.
+          per the three cases of the paper.  Node scoring for the target
+          choice uses *rate-projected* loads when the caller supplies the
+          previous period's ``kg_tuple_rate`` (mirroring the scalers'
+          leading-load signal): a node whose key groups' arrivals are
+          surging scores as already loaded, so migration targeting
+          anticipates next period's load instead of only balancing the
+          measured one.
   Step 4  solve the constrained MILP; if the achieved load distance exceeds
           maxLD, retry with maxPL reduced by stepPL (more, smaller units).
           At maxPL == 0 this degenerates to the pure MILP.
@@ -29,6 +35,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.milp import AllocationPlan, solve_allocation
+from repro.core.scaling import projected_loads
 from repro.core.stats import ClusterState
 from repro.solver.graphpart import Graph, partition_graph
 
@@ -42,6 +49,9 @@ class AlbicParams:
     alpha: float = 1.0  # migration cost constant
     time_limit: float = 10.0
     seed: int = 0
+    # Score step-3 target nodes on rate-projected loads (leading signal)
+    # whenever the previous period's kg_tuple_rate is available.
+    use_rate_signal: bool = True
 
 
 @dataclasses.dataclass
@@ -198,14 +208,29 @@ def albic(
     max_migr_cost: Optional[float] = None,
     max_migrations: Optional[int] = None,
     params: AlbicParams | None = None,
+    prev_rate: Optional[np.ndarray] = None,
 ) -> AlbicResult:
-    """One ALBIC invocation (Algorithm 2)."""
+    """One ALBIC invocation (Algorithm 2).
+
+    ``prev_rate`` is the previous period's per-key-group arrival rates; when
+    given (and ``params.use_rate_signal``), step 3 scores candidate target
+    nodes on loads projected forward by rate growth, steering new
+    collocations away from nodes that are merely *currently* balanced but
+    about to absorb a surge.
+    """
     params = params or AlbicParams()
     rng = np.random.default_rng(params.seed)
     budget = max_migr_cost if max_migr_cost is not None else float("inf")
 
     # Step 1 — calculate scores.
     col_pairs, tobe = _score_pairs(state, params.score_factor)
+
+    # Leading-load node scores for step 3 (None → fall back to measured).
+    proj_loads = (
+        projected_loads(state, state.alloc, prev_rate)
+        if params.use_rate_signal
+        else None
+    )
 
     max_pl = params.max_pl
     retries = 0
@@ -234,7 +259,7 @@ def albic(
             gi, gj, _ = tobe[int(rng.choice(best))]
             pinned_pair = (gi, gj)
             n1, n2 = int(state.alloc[gi]), int(state.alloc[gj])
-            loads = state.node_loads()
+            loads = proj_loads if proj_loads is not None else state.node_loads()
             member_of = {g: u for u, p in enumerate(units) for g in p}
             ui, uj = member_of.get(gi), member_of.get(gj)
             if ui is None and uj is None:

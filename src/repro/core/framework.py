@@ -58,6 +58,11 @@ class AdaptationFramework:
     albic_params: AlbicParams = dataclasses.field(default_factory=AlbicParams)
     time_limit: float = 10.0
     alpha: float = 1.0
+    # Previous period's kg_tuple_rate — ALBIC's leading-load node scoring
+    # (mirrors the scalers' rate projection; see repro.core.scaling).
+    _prev_rate: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
 
     def _allocate(self, state: ClusterState) -> AllocationPlan:
         if self.mode == "albic":
@@ -66,6 +71,7 @@ class AdaptationFramework:
                 max_migr_cost=self.max_migr_cost,
                 max_migrations=self.max_migrations,
                 params=self.albic_params,
+                prev_rate=self._prev_rate,
             ).plan
         return solve_allocation(
             state,
@@ -107,6 +113,10 @@ class AdaptationFramework:
         # Line 8: apply(plan) — emit the migration plan and commit the alloc.
         migration_plan = plan_from_allocations(state, plan.alloc, alpha=self.alpha)
         state.alloc = plan.alloc.copy()
+        # Remember this period's arrival rates for next period's projection.
+        self._prev_rate = (
+            None if state.kg_tuple_rate is None else state.kg_tuple_rate.copy()
+        )
         return AdaptationResult(
             state=state,
             plan=plan,

@@ -4,8 +4,10 @@ Moving key group g_k from n1 to n2:
 
   1. upstream instances are told to *redirect* new tuples for g_k to n2;
   2. n2 buffers the redirected tuples;
-  3. n1 serializes σ_k and ships it to n2;
-  4. n2 deserializes, reconstructs g_k, replays the buffer, resumes.
+  3. n1 serializes σ_k — plus g_k's queued backlog, extracted at redirect —
+     and ships the envelope to n2 (schema-typed engines encode the backlog
+     as raw buffer slices; see repro.engine.serde);
+  4. n2 deserializes, reconstructs g_k, replays backlog + buffer, resumes.
 
 The cost model is mc_k = α·|σ_k| — the serialization time on an average-loaded
 node.  The adaptation algorithms are independent of the mechanism (paper:
@@ -85,6 +87,10 @@ class MigrationReport:
     applied: int
     total_cost: float
     pause_seconds: float  # summed per-key-group pause (paper Fig. 9 metric)
+    # Total serialized envelope bytes shipped (σ_k state + queued segments;
+    # schema-typed engines encode the segments as raw buffer slices, so this
+    # is the real wire cost the α·|σ_k| model approximates).
+    bytes_moved: int = 0
 
 
 def execute_plan(
@@ -100,6 +106,7 @@ def execute_plan(
     paper's per-key-group latency at ~2.5 s rather than a full-job stall.
     """
     pause = 0.0
+    bytes_moved = 0
     for m in plan.moves:
         mover.redirect(m.keygroup, m.dst)
         t0 = time.perf_counter() if measure else 0.0
@@ -107,8 +114,12 @@ def execute_plan(
         mover.install(m.keygroup, m.dst, blob)
         if measure:
             pause += time.perf_counter() - t0
+        bytes_moved += len(blob)
     return MigrationReport(
-        applied=len(plan.moves), total_cost=plan.total_cost, pause_seconds=pause
+        applied=len(plan.moves),
+        total_cost=plan.total_cost,
+        pause_seconds=pause,
+        bytes_moved=bytes_moved,
     )
 
 

@@ -26,6 +26,20 @@ dict insertion order (it decides TopK tie-breaks and pickle bytes), same
 float trajectories (running sums accumulate strictly left to right).  The
 differential conformance harness (``tests/conformance.py``) pins every job's
 fn_seg/fn and SoA/deque combinations against each other.
+
+Typed edges (this PR's port): every record-carrying edge declares a
+:class:`~repro.engine.topology.Schema`, so with ``use_schema=True`` (the
+default) values flow as native structured arrays — ``fn_seg`` bodies branch
+on ``values.dtype.names`` and read whole *column views* instead of
+``zip(*values.tolist())`` column extraction, and ``key_by_value_col`` keys
+typed batches with vectorized field arithmetic.  The per-run ``fn`` bodies
+normalize with one ``values.tolist()`` (a structured array and an object
+array of the same record tuples produce the *identical* list of python-
+scalar tuples), which is what keeps typed and untyped execution
+bit-identical — including dict insertion order and pickle bytes of σ_k.
+Only the join keeps an undeclared (object) input edge: its two upstreams
+carry different record layouts, so both decay at that boundary and the
+operator discriminates sides by record arity.
 """
 
 from __future__ import annotations
@@ -33,7 +47,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.data import synthetic
-from repro.engine.topology import OperatorSpec, Topology
+from repro.engine.topology import OperatorSpec, Schema, Topology
 
 # --------------------------------------------------------------------------
 # Shared operator bodies (state dicts are σ_k — everything must live there).
@@ -249,17 +263,23 @@ def _grouped_running_sums(
     return out_sums
 
 
+# geohash → topk record layout: (article, gh) tuples / the structured dtype.
+G_ARTICLE, G_GH = range(2)
+GEO_SCHEMA = Schema.record([("article", "i8"), ("gh", "U5")], key="U5")
+WIKI_SCHEMA = Schema(synthetic.WIKI_DTYPE)
+
+
 def make_real_job_1(
     *, keygroups_per_op: int = 100, topk: int = 10, window_ticks: float = 60.0
 ) -> Topology:
     def geohash_run(out, keys, values, ts):
-        for k, v, t in zip(keys, values, ts):
+        for k, t in zip(keys, ts):
             # Article id → deterministic pseudo-location inside Denmark.
             rng = (int(k) * 2654435761) & 0xFFFFFFFF
             lat = _DK[0] + (rng % 10_000) / 10_000 * (_DK[1] - _DK[0])
             lon = _DK[2] + ((rng // 10_000) % 10_000) / 10_000 * (_DK[3] - _DK[2])
             gh = _geohash(lat, lon)
-            out.append((gh, {"article": int(k), "gh": gh}, float(t)))
+            out.append((gh, (int(k), gh), float(t)))
 
     def geohash_op(state, keys, values, ts):
         out = []
@@ -269,17 +289,22 @@ def make_real_job_1(
     def geohash_seg(store, kgs, starts, ends, keys, values, ts):
         lat, lon = _pseudo_locations(keys)
         ghs = _geohash_batch(lat, lon)
-        out_vals = _object_array(
-            [{"article": a, "gh": g} for a, g in zip(keys.tolist(), ghs)]
-        )
-        return (np.asarray(ghs), out_vals, ts), None
+        gh_keys = np.asarray(ghs)
+        if values.dtype.names is not None:  # typed edge: build record columns
+            out_vals = np.empty(len(keys), dtype=GEO_SCHEMA.value)
+            out_vals["article"] = keys
+            out_vals["gh"] = gh_keys
+        else:
+            out_vals = _object_array(list(zip(keys.tolist(), ghs)))
+        return (gh_keys, out_vals, ts), None
 
     def topk_run(state, out, keys, values, ts):
         """Scalar TopK body shared by fn and the fn_seg window-closing path."""
         counts = state.setdefault("counts", {})
         w_start = state.setdefault("w_start", float(ts[0]) if len(ts) else 0.0)
-        for k, v, t in zip(keys, values, ts):
-            art = v["article"]
+        vals = values.tolist() if isinstance(values, np.ndarray) else values
+        for k, v, t in zip(keys, vals, ts):
+            art = v[G_ARTICLE]
             counts[art] = counts.get(art, 0) + 1
             if t - w_start >= window_ticks:
                 top = sorted(counts.items(), key=lambda x: -x[1])[:topk]
@@ -331,7 +356,10 @@ def make_real_job_1(
         # preserves the dict insertion order the scalar loop produces (the
         # sort that ranks the TopK is stable, so ties break on it).
         n = len(values)
-        arts = np.fromiter((v["article"] for v in values), np.int64, count=n)
+        if values.dtype.names is not None:  # typed edge: the column itself
+            arts = values["article"]
+        else:
+            arts = np.fromiter((v[G_ARTICLE] for v in values), np.int64, count=n)
         uniq, first, cnt = np.unique(arts, return_index=True, return_counts=True)
         order = np.argsort(first, kind="stable")
         for art, c in zip(uniq[order].tolist(), cnt[order].tolist()):
@@ -365,7 +393,13 @@ def make_real_job_1(
 
     t = Topology()
     t.add_operator(
-        OperatorSpec("wiki", None, num_keygroups=keygroups_per_op, is_source=True)
+        OperatorSpec(
+            "wiki",
+            None,
+            num_keygroups=keygroups_per_op,
+            is_source=True,
+            schema=WIKI_SCHEMA,
+        )
     )
     t.add_operator(
         OperatorSpec(
@@ -374,10 +408,20 @@ def make_real_job_1(
             num_keygroups=keygroups_per_op,
             cost_per_tuple=1.2,
             fn_seg=geohash_seg,
+            schema=WIKI_SCHEMA,
+            out_schema=GEO_SCHEMA,
         )
     )
     t.add_operator(
-        OperatorSpec("topk", topk_op, num_keygroups=keygroups_per_op, fn_seg=topk_seg)
+        OperatorSpec(
+            "topk",
+            topk_op,
+            num_keygroups=keygroups_per_op,
+            fn_seg=topk_seg,
+            # TopK windows emit variable-length rankings (dict payloads):
+            # the input edge is typed, the output edge stays object.
+            schema=GEO_SCHEMA,
+        )
     )
     t.add_operator(
         OperatorSpec(
@@ -402,29 +446,54 @@ def real_job_1(**kw) -> Topology:
 # --------------------------------------------------------------------------
 # Jobs 2–4 (airline + weather)
 #
-# ExtractDelay is a projection: it reads the wide airline record (a dict,
-# like real ingestion) once and emits a *compact record tuple* — the
-# classic column-pruning pushdown.  Downstream operators index the record
-# positionally, so the segment-vectorized bodies extract whole columns with
-# one C-level ``zip(*values)``.  Record layouts:
+# ExtractDelay is a projection: it reads the wide airline record once and
+# emits a *compact record tuple* — the classic column-pruning pushdown.
+# Downstream operators index the record positionally, so the segment-
+# vectorized bodies extract whole columns — as structured column views on
+# schema-typed edges, or with one C-level ``zip(*values)`` on the object
+# path.  Record layouts (each with a declared Schema for the typed edge):
 #
 #   extract    → (airplane, delay, year, origin, dest)       _R_*
 #   sumdelay   → (airplane, running_sum)                      sink record
 #   routedelay → (origin, dest, running_sum, delay)          _RD_*
-#   join       → (delay, rainscore)
+#   join       → (delay, rainscore)                          _J_*
 #   efficiency → (bucket, running_sum_delay)
 #
-# rainscore keeps dict values (the weather side is the heterogeneous join
-# input; ``join`` discriminates the two schemas with ``isinstance(v, dict)``).
+# ``join`` merges two *different* record layouts (rainscore's (airport,
+# rainscore) and routedelay's _RD_*), so its input edge stays undeclared —
+# both sides decay to object tuples there and the operator discriminates
+# them by record arity (rain records have 2 fields, route records 4).  Both
+# layouts carry the join key at position 0.
 # --------------------------------------------------------------------------
 
 _R_PLANE, _R_DELAY, _R_YEAR, _R_ORIGIN, _R_DEST = range(5)
 _RD_ORIGIN, _RD_DEST, _RD_SUM, _RD_DELAY = range(4)
+_RAIN_AIRPORT, _RAIN_SCORE = range(2)
+_J_DELAY, _J_SCORE = range(2)
+
+AIRLINE_SCHEMA = Schema(synthetic.AIRLINE_DTYPE)
+WEATHER_SCHEMA = Schema(synthetic.WEATHER_DTYPE)
+EXTRACT_SCHEMA = Schema.record(
+    [
+        ("plane", "i8"),
+        ("delay", "f8"),
+        ("year", "i8"),
+        ("origin", "i8"),
+        ("dest", "i8"),
+    ]
+)
+SUM_OUT_SCHEMA = Schema.record([("plane", "i8"), ("sum", "f8")])
+ROUTE_SCHEMA = Schema.record(
+    [("origin", "i8"), ("dest", "i8"), ("sum", "f8"), ("delay", "f8")]
+)
+RAIN_SCHEMA = Schema.record([("airport", "i8"), ("rainscore", "f8")])
+JOIN_SCHEMA = Schema.record([("delay", "f8"), ("rainscore", "f8")])
+EFF_SCHEMA = Schema.record([("bucket", "i8"), ("sum_delay", "f8")])
 
 
 def _extract_delay(state, keys, values, ts):
     out = []
-    for k, v, t in zip(keys, values, ts):
+    for v, t in zip(values.tolist(), ts):
         delay = v[synthetic.A_DEP_DELAY] + v[synthetic.A_ARR_DELAY]
         out.append(
             (
@@ -443,9 +512,20 @@ def _extract_delay(state, keys, values, ts):
 
 
 def _extract_delay_seg(store, kgs, starts, ends, keys, values, ts):
-    """Stateless projection over the whole segment: column extraction is one
-    ``zip(*values)``, the delay sum one vector add, the output records one
-    ``zip`` back together — no per-tuple python at all."""
+    """Stateless projection over the whole segment.
+
+    Typed edge: every column moves with one native assignment and the delay
+    is one vector add — no python objects are materialized at all.  Object
+    path: column extraction is one C-level ``zip(*values)`` and the records
+    are zipped back together."""
+    if values.dtype.names is not None:
+        out_vals = np.empty(len(values), dtype=EXTRACT_SCHEMA.value)
+        out_vals["plane"] = values["plane"]
+        out_vals["delay"] = values["dep_delay"] + values["arr_delay"]
+        out_vals["year"] = values["year"]
+        out_vals["origin"] = values["origin"]
+        out_vals["dest"] = values["dest"]
+        return (values["plane"], out_vals, ts), None
     vals = values.tolist()
     planes, origins, dests, dep, arr, years = zip(*vals)
     delays = (np.asarray(dep) + np.asarray(arr)).tolist()
@@ -457,7 +537,7 @@ def _extract_delay_seg(store, kgs, starts, ends, keys, values, ts):
 def _sum_delay(state, keys, values, ts):
     sums = state.setdefault("sums", {})
     out = []
-    for k, v, t in zip(keys, values, ts):
+    for v, t in zip(values.tolist(), ts):
         key = (v[_R_PLANE], v[_R_YEAR])
         sums[key] = sums.get(key, 0.0) + v[_R_DELAY]
         out.append((v[_R_PLANE], (v[_R_PLANE], sums[key]), float(t)))
@@ -473,12 +553,25 @@ def _sum_delay_seg(store, kgs, starts, ends, keys, values, ts):
     (Zipf airplane popularity) reduce to one cumulative sum; tail singletons
     take a plain scalar add.
     """
-    vals = values.tolist()
-    planes_l, delays_l, years_l, _, _ = zip(*vals)
-    planes = np.asarray(planes_l, dtype=np.int64)
+    typed = values.dtype.names is not None
+    if typed:
+        planes = values["plane"]
+        years = values["year"]
+        delays = values["delay"]
+        planes_l, years_l, delays_l = (
+            planes.tolist(),
+            years.tolist(),
+            delays.tolist(),
+        )
+    else:
+        vals = values.tolist()
+        planes_l, delays_l, years_l, _, _ = zip(*vals)
+        planes = np.asarray(planes_l, dtype=np.int64)
+        years = np.asarray(years_l, dtype=np.int64)
+        delays = np.asarray(delays_l)
     # Airplane ids and years are non-negative and < 2^31: the shifted code is
     # collision-free in int64.
-    codes = (planes << np.int64(32)) | np.asarray(years_l, dtype=np.int64)
+    codes = (planes << np.int64(32)) | years
     out_sums = _grouped_running_sums(
         store,
         kgs,
@@ -488,8 +581,13 @@ def _sum_delay_seg(store, kgs, starts, ends, keys, values, ts):
         "sums",
         list(zip(planes_l, years_l)),
         delays_l,
-        np.asarray(delays_l),
+        delays,
     )
+    if typed:
+        out_vals = np.empty(len(values), dtype=SUM_OUT_SCHEMA.value)
+        out_vals["plane"] = planes
+        out_vals["sum"] = out_sums
+        return (planes, out_vals, ts), None
     out_vals = _object_array(list(zip(planes_l, out_sums)))
     return (planes, out_vals, ts), None
 
@@ -497,7 +595,7 @@ def _sum_delay_seg(store, kgs, starts, ends, keys, values, ts):
 def _route_delay(state, keys, values, ts):
     sums = state.setdefault("route_sums", {})
     out = []
-    for k, v, t in zip(keys, values, ts):
+    for v, t in zip(values.tolist(), ts):
         route = (v[_R_ORIGIN], v[_R_DEST])
         sums[route] = sums.get(route, 0.0) + v[_R_DELAY]
         out.append(
@@ -512,13 +610,24 @@ def _route_delay(state, keys, values, ts):
 
 def _route_delay_seg(store, kgs, starts, ends, keys, values, ts):
     """Segment-reduced route sums; the group code doubles as the output key."""
-    vals = values.tolist()
     na = synthetic.num_airports()
-    _, delays_l, _, origins_l, dests_l = zip(*vals)
-    out_keys = (
-        np.asarray(origins_l, dtype=np.int64) * na
-        + np.asarray(dests_l, dtype=np.int64)
-    )  # dest < num_airports() ⇒ collision-free group code == output key
+    typed = values.dtype.names is not None
+    if typed:
+        origins, dests, delays = values["origin"], values["dest"], values["delay"]
+        origins_l, dests_l, delays_l = (
+            origins.tolist(),
+            dests.tolist(),
+            delays.tolist(),
+        )
+        # dest < num_airports() ⇒ collision-free group code == output key
+        out_keys = origins * np.int64(na) + dests
+    else:
+        vals = values.tolist()
+        _, delays_l, _, origins_l, dests_l = zip(*vals)
+        origins = np.asarray(origins_l, dtype=np.int64)
+        dests = np.asarray(dests_l, dtype=np.int64)
+        delays = np.asarray(delays_l)
+        out_keys = origins * na + dests
     out_sums = _grouped_running_sums(
         store,
         kgs,
@@ -528,8 +637,15 @@ def _route_delay_seg(store, kgs, starts, ends, keys, values, ts):
         "route_sums",
         list(zip(origins_l, dests_l)),
         delays_l,
-        np.asarray(delays_l),
+        delays,
     )
+    if typed:
+        out_vals = np.empty(len(values), dtype=ROUTE_SCHEMA.value)
+        out_vals["origin"] = origins
+        out_vals["dest"] = dests
+        out_vals["sum"] = out_sums
+        out_vals["delay"] = delays
+        return (out_keys, out_vals, ts), None
     out_vals = _object_array(list(zip(origins_l, dests_l, out_sums, delays_l)))
     return (out_keys, out_vals, ts), None
 
@@ -537,7 +653,13 @@ def _route_delay_seg(store, kgs, starts, ends, keys, values, ts):
 def real_job_2(*, keygroups_per_op: int = 100) -> Topology:
     t = Topology()
     t.add_operator(
-        OperatorSpec("airline", None, num_keygroups=keygroups_per_op, is_source=True)
+        OperatorSpec(
+            "airline",
+            None,
+            num_keygroups=keygroups_per_op,
+            is_source=True,
+            schema=AIRLINE_SCHEMA,
+        )
     )
     # Both operators parallelized on the SAME attribute (airplane) — the
     # One-To-One pattern where perfect collocation is possible (paper §5.4).
@@ -550,6 +672,8 @@ def real_job_2(*, keygroups_per_op: int = 100) -> Topology:
             _extract_delay,
             num_keygroups=keygroups_per_op,
             fn_seg=_extract_delay_seg,
+            schema=AIRLINE_SCHEMA,
+            out_schema=EXTRACT_SCHEMA,
         )
     )
     t.add_operator(
@@ -559,6 +683,7 @@ def real_job_2(*, keygroups_per_op: int = 100) -> Topology:
             num_keygroups=keygroups_per_op,
             is_sink=True,
             fn_seg=_sum_delay_seg,
+            schema=EXTRACT_SCHEMA,
         )
     )
     t.connect("airline", "extract")
@@ -573,7 +698,8 @@ def real_job_3(*, keygroups_per_op: int = 100) -> Topology:
     # collocated with SumDelay (paper: "collocation factor is only half").
     # The partition key is the integer route code (bijective with the
     # (origin, dest) pair, dest < num_airports): integer keys hash through
-    # the vectorized mix instead of per-tuple python tuple hashing.
+    # the vectorized mix — on typed batches as one whole-column expression
+    # (key_by_value_col), never touching per-tuple python.
     na = synthetic.num_airports()
     t.add_operator(
         OperatorSpec(
@@ -581,8 +707,11 @@ def real_job_3(*, keygroups_per_op: int = 100) -> Topology:
             _route_delay,
             num_keygroups=keygroups_per_op,
             key_by_value=lambda v: v[_R_ORIGIN] * na + v[_R_DEST],
+            key_by_value_col=lambda v: v["origin"] * np.int64(na) + v["dest"],
             is_sink=True,
             fn_seg=_route_delay_seg,
+            schema=EXTRACT_SCHEMA,
+            out_schema=ROUTE_SCHEMA,
         )
     )
     t.connect("extract", "routedelay")
@@ -592,32 +721,35 @@ def real_job_3(*, keygroups_per_op: int = 100) -> Topology:
 def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
     def rainscore(state, keys, values, ts):
         out = []
-        for k, v, t in zip(keys, values, ts):
-            score = 100.0 * v["precip"] / synthetic.max_precip()
-            out.append(
-                (v["airport"], {"airport": v["airport"], "rainscore": score}, float(t)),
-            )
+        for v, t in zip(values.tolist(), ts):
+            score = 100.0 * v[synthetic.WX_PRECIP] / synthetic.max_precip()
+            airport = v[synthetic.WX_AIRPORT]
+            out.append((airport, (airport, score), float(t)))
         return state, out
 
     def rainscore_seg(store, kgs, starts, ends, keys, values, ts):
+        if values.dtype.names is not None:
+            scores = 100.0 * values["precip"] / synthetic.max_precip()
+            out_keys = values["airport"]
+            out_vals = np.empty(len(values), dtype=RAIN_SCHEMA.value)
+            out_vals["airport"] = out_keys
+            out_vals["rainscore"] = scores
+            return (out_keys, out_vals, ts), None
         vals = values.tolist()
-        precip = np.asarray([v["precip"] for v in vals])
+        precip = np.asarray([v[synthetic.WX_PRECIP] for v in vals])
         scores = (100.0 * precip / synthetic.max_precip()).tolist()
-        out_keys = np.asarray([v["airport"] for v in vals], dtype=np.int64)
-        out_vals = _object_array(
-            [
-                {"airport": v["airport"], "rainscore": s}
-                for v, s in zip(vals, scores)
-            ]
+        out_keys = np.asarray(
+            [v[synthetic.WX_AIRPORT] for v in vals], dtype=np.int64
         )
+        out_vals = _object_array(list(zip(out_keys.tolist(), scores)))
         return (out_keys, out_vals, ts), None
 
     def join_route_rain(state, keys, values, ts):
         rain = state.setdefault("rain", {})  # airport → latest rainscore
         out = []
-        for k, v, t in zip(keys, values, ts):
-            if isinstance(v, dict):  # a weather tuple
-                rain[v["airport"]] = v["rainscore"]
+        for v, t in zip(values.tolist(), ts):
+            if len(v) == 2:  # a rainscore record: (airport, rainscore)
+                rain[v[_RAIN_AIRPORT]] = v[_RAIN_SCORE]
             else:  # a route-delay record; join on origin airport
                 score = rain.get(v[_RD_ORIGIN], 0.0)
                 out.append((v[_RD_ORIGIN], (v[_RD_DELAY], score), float(t)))
@@ -633,10 +765,10 @@ def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
         for kg, a, z in zip(kgs, starts, ends):
             rain = store[kg].setdefault("rain", {})
             run_vals = vals[a:z]
-            is_rain = [isinstance(v, dict) for v in run_vals]
+            is_rain = [len(v) == 2 for v in run_vals]
             emitted = 0
             if all(is_rain):  # pure weather run: last write per airport wins
-                rain.update((v["airport"], v["rainscore"]) for v in run_vals)
+                rain.update(run_vals)
             elif not any(is_rain):  # pure route run: lookups only
                 for i, v in enumerate(run_vals):
                     o = v[_RD_ORIGIN]
@@ -647,7 +779,7 @@ def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
             else:
                 for i, v in enumerate(run_vals):
                     if is_rain[i]:
-                        rain[v["airport"]] = v["rainscore"]
+                        rain[v[_RAIN_AIRPORT]] = v[_RAIN_SCORE]
                     else:
                         o = v[_RD_ORIGIN]
                         out_k.append(o)
@@ -665,18 +797,25 @@ def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
     def courier_efficiency(state, keys, values, ts):
         buckets = state.setdefault("buckets", {})  # rainscore decile → Σ delay
         out = []
-        for k, v, t in zip(keys, values, ts):
-            b = min(int(v[1] // 10), 9)  # v = (delay, rainscore)
-            buckets[b] = buckets.get(b, 0.0) + v[0]
+        for v, t in zip(values.tolist(), ts):
+            b = min(int(v[_J_SCORE] // 10), 9)
+            buckets[b] = buckets.get(b, 0.0) + v[_J_DELAY]
             out.append((b, (b, buckets[b]), float(t)))
         return state, out
 
     def efficiency_seg(store, kgs, starts, ends, keys, values, ts):
-        vals = values.tolist()
-        delays_l, scores_l = zip(*vals)
+        if values.dtype.names is not None:
+            delays = values["delay"]
+            scores = values["rainscore"]
+            delays_l = delays.tolist()
+        else:
+            vals = values.tolist()
+            delays_l, scores_l = zip(*vals)
+            delays = np.asarray(delays_l)
+            scores = np.asarray(scores_l)
         # Rainscores are non-negative, so the float floor-division matches
         # the scalar ``min(int(score // 10), 9)`` bucket exactly.
-        buckets_arr = np.minimum((np.asarray(scores_l) // 10.0).astype(np.int64), 9)
+        buckets_arr = np.minimum((scores // 10.0).astype(np.int64), 9)
         buckets_l = buckets_arr.tolist()
         out_sums = _grouped_running_sums(
             store,
@@ -687,14 +826,20 @@ def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
             "buckets",
             buckets_l,
             delays_l,
-            np.asarray(delays_l),
+            delays,
         )
+        if values.dtype.names is not None:
+            out_vals = np.empty(len(values), dtype=EFF_SCHEMA.value)
+            out_vals["bucket"] = buckets_arr
+            out_vals["sum_delay"] = out_sums
+            return (buckets_arr, out_vals, ts), None
         out_vals = _object_array(list(zip(buckets_l, out_sums)))
         return (buckets_arr, out_vals, ts), None
 
     def store(state, keys, values, ts):
         rows = state.setdefault("rows", [])
-        for k, v, t in zip(keys, values, ts):
+        vals = values.tolist()
+        for k, v, t in zip(keys, vals, ts):
             rows.append((int(k), v[1], float(t)))  # v = (bucket, sum_delay)
         if len(rows) > 1_000:  # periodic flush to the "local database"
             del rows[:-100]
@@ -702,7 +847,10 @@ def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
 
     def store_seg(kg_store, kgs, starts, ends, keys, values, ts):
         klist = keys.tolist()
-        sums_l = [v[1] for v in values.tolist()]
+        if values.dtype.names is not None:
+            sums_l = values["sum_delay"].tolist()
+        else:
+            sums_l = [v[1] for v in values.tolist()]
         tlist = ts.tolist()
         for kg, a, z in zip(kgs, starts, ends):
             rows = kg_store[kg].setdefault("rows", [])
@@ -714,15 +862,24 @@ def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
     t = real_job_3(keygroups_per_op=keygroups_per_op)
     t.operators[t._resolve("routedelay")].is_sink = False
     t.add_operator(
-        OperatorSpec("weather", None, num_keygroups=keygroups_per_op, is_source=True)
+        OperatorSpec(
+            "weather",
+            None,
+            num_keygroups=keygroups_per_op,
+            is_source=True,
+            schema=WEATHER_SCHEMA,
+        )
     )
     t.add_operator(
         OperatorSpec(
             "rainscore",
             rainscore,
             num_keygroups=keygroups_per_op,
-            key_by_value=lambda v: v["station"],
+            key_by_value=lambda v: v[synthetic.WX_STATION],
+            key_by_value_col=lambda v: v["station"],
             fn_seg=rainscore_seg,
+            schema=WEATHER_SCHEMA,
+            out_schema=RAIN_SCHEMA,
         )
     )
     t.add_operator(
@@ -730,12 +887,13 @@ def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
             "join",
             join_route_rain,
             num_keygroups=keygroups_per_op,
-            # Both sides partition by airport id: rain tuples (dicts) carry
-            # "airport", route records join on their origin airport.
-            key_by_value=lambda v: (
-                v["airport"] if isinstance(v, dict) else v[_RD_ORIGIN]
-            ),
+            # Both sides partition by airport id, carried at position 0 of
+            # either record layout (rain: airport; route: origin airport).
+            # The input edge is undeclared — two different upstream layouts —
+            # so both sides decay to object tuples here.
+            key_by_value=lambda v: v[0],
             fn_seg=join_seg,
+            out_schema=JOIN_SCHEMA,
         )
     )
     t.add_operator(
@@ -743,8 +901,13 @@ def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
             "efficiency",
             courier_efficiency,
             num_keygroups=keygroups_per_op,
-            key_by_value=lambda v: min(int(v[1] // 10), 9),  # rainscore decile
+            key_by_value=lambda v: min(int(v[_J_SCORE] // 10), 9),  # decile
+            key_by_value_col=lambda v: np.minimum(
+                (v["rainscore"] // 10.0).astype(np.int64), 9
+            ),
             fn_seg=efficiency_seg,
+            schema=JOIN_SCHEMA,
+            out_schema=EFF_SCHEMA,
         )
     )
     t.add_operator(
@@ -754,6 +917,7 @@ def real_job_4(*, keygroups_per_op: int = 100) -> Topology:
             num_keygroups=keygroups_per_op,
             is_sink=True,
             fn_seg=store_seg,
+            schema=EFF_SCHEMA,
         )
     )
     t.connect("weather", "rainscore")

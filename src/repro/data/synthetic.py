@@ -30,13 +30,22 @@ def _rate_at(spec: StreamSpec, tick: int, rng: np.random.Generator) -> int:
     return int(rng.poisson(lam))
 
 
+# Wikipedia revision record layout: tuples in the ``W_*`` positional order
+# below, with the matching structured dtype for schema-typed ingestion.
+W_ARTICLE, W_EDITOR, W_BYTES, W_MINOR = range(4)
+WIKI_DTYPE = np.dtype(
+    [("article", "i8"), ("editor", "i8"), ("bytes_changed", "i8"), ("minor", "?")]
+)
+
+
 def wiki_edit_stream(
     spec: StreamSpec | None = None, *, num_articles: int = 5_000, zipf_a: float = 1.3
 ) -> Iterator[tuple[np.ndarray, list, np.ndarray]]:
     """Parsed-Wikipedia-edit-history-shaped stream.
 
     Keys are article ids with Zipf popularity; values carry the ≥14-attribute
-    revision record (truncated to what the jobs read: editor, bytes, minor).
+    revision record (truncated to what the jobs read) as record tuples in the
+    ``W_*`` layout — ``WIKI_DTYPE`` is the corresponding declared schema.
     """
     spec = spec or StreamSpec()
     rng = np.random.default_rng(spec.seed)
@@ -45,12 +54,12 @@ def wiki_edit_stream(
         n = _rate_at(spec, tick, rng)
         arts = np.minimum(rng.zipf(zipf_a, size=n) - 1, num_articles - 1)
         values = [
-            {
-                "article": int(a),
-                "editor": int(rng.integers(0, 100_000)),
-                "bytes_changed": int(rng.integers(-500, 2_000)),
-                "minor": bool(rng.random() < 0.3),
-            }
+            (
+                int(a),
+                int(rng.integers(0, 100_000)),
+                int(rng.integers(-500, 2_000)),
+                bool(rng.random() < 0.3),
+            )
             for a in arts
         ]
         ts = np.full(n, float(tick))
@@ -63,8 +72,19 @@ _NUM_AIRPLANES = 4_000
 _NUM_AIRPORTS = 300
 
 # Airline record layout: tuples, not dicts — a typed ingestion schema whose
-# columns segment-vectorized operators extract with one ``zip(*values)``.
+# columns segment-vectorized operators read as structured column views (or
+# extract with one ``zip(*values)`` on the object path).
 A_PLANE, A_ORIGIN, A_DEST, A_DEP_DELAY, A_ARR_DELAY, A_YEAR = range(6)
+AIRLINE_DTYPE = np.dtype(
+    [
+        ("plane", "i8"),
+        ("origin", "i8"),
+        ("dest", "i8"),
+        ("dep_delay", "f8"),
+        ("arr_delay", "f8"),
+        ("year", "i8"),
+    ]
+)
 
 
 def airline_stream(
@@ -103,11 +123,27 @@ def airline_stream(
 _NUM_STATIONS = 2_000
 _MAX_PRECIP = 30.0
 
+# GSOD observation layout: record tuples in the ``WX_*`` positional order.
+WX_STATION, WX_PRECIP, WX_TEMP, WX_VIS, WX_AIRPORT = range(5)
+WEATHER_DTYPE = np.dtype(
+    [
+        ("station", "i8"),
+        ("precip", "f8"),
+        ("mean_temp", "f8"),
+        ("visibility", "f8"),
+        ("airport", "i8"),
+    ]
+)
+
 
 def weather_stream(
     spec: StreamSpec | None = None,
 ) -> Iterator[tuple[np.ndarray, list, np.ndarray]]:
-    """NOAA GSOD-shaped stream keyed by station (job 4 rainscore input)."""
+    """NOAA GSOD-shaped stream keyed by station (job 4 rainscore input).
+
+    Values are record tuples in the ``WX_*`` layout above; stations map onto
+    airports for the job-4 join.
+    """
     spec = spec or StreamSpec(rate=50.0)
     rng = np.random.default_rng(spec.seed + 2)
     tick = 0
@@ -115,14 +151,13 @@ def weather_stream(
         n = _rate_at(spec, tick, rng)
         stations = rng.integers(0, _NUM_STATIONS, size=n)
         values = [
-            {
-                "station": int(s),
-                "precip": float(np.clip(rng.exponential(2.0), 0.0, _MAX_PRECIP)),
-                "mean_temp": float(rng.normal(12.0, 10.0)),
-                "visibility": float(np.clip(rng.normal(9.0, 3.0), 0.0, 20.0)),
-                # Stations map onto airports for the job-4 join.
-                "airport": int(s % _NUM_AIRPORTS),
-            }
+            (
+                int(s),
+                float(np.clip(rng.exponential(2.0), 0.0, _MAX_PRECIP)),
+                float(rng.normal(12.0, 10.0)),
+                float(np.clip(rng.normal(9.0, 3.0), 0.0, 20.0)),
+                int(s % _NUM_AIRPORTS),
+            )
             for s in stations
         ]
         ts = np.full(n, float(tick))

@@ -34,10 +34,24 @@ never as per-tuple Python objects:
   histograms, serialization CPU, network bytes — are recorded as arrays
   (sparse pair codes, histograms, ``np.add.at`` scatters), never per-tuple
   Python calls;
+* operators may declare a :class:`~repro.engine.topology.Schema` — a
+  structured-numpy record layout for their input values plus a typed key
+  dtype.  Schema-typed edges carry native structured arrays instead of
+  object arrays: the routing permutation gathers fixed-width records, the
+  SoA work queues slice native buffers, ``fn_seg`` sees column views
+  (``values["field"]``), and sink collection is a structured ``tolist``.
+  Undeclared operators keep the object-array path behind the same API;
+  batches are conformed at edge boundaries (typed targets promote object
+  outputs in one C-level conversion, untyped targets decay structured
+  batches to the identical boxed tuples), and ``use_schema=False`` strips
+  every declaration for the untyped oracle configuration;
 * direct state migration moves a key group's *queued* work along with its
   state: ``redirect`` masks the key group's runs out of the source node's
-  queue (``extract_keygroup``) into the router's in-flight buffer, and
-  ``install`` replays buffer + backlog at the destination in FIFO order.
+  queue (``extract_keygroup``) into the migration backlog, ``serialize``
+  ships σ_k plus that backlog in one envelope — schema-typed batches as raw
+  ``tobytes`` buffer slices, object batches via pickle (see
+  :mod:`repro.engine.serde`) — and ``install`` replays backlog then buffered
+  arrivals at the destination in FIFO order.
 
 Execution is tick-based.  Per tick every node drains up to
 ``service_rate × capacity`` cost-units from its FIFO work queue; operator
@@ -78,11 +92,13 @@ protocol (see :data:`repro.engine.topology.SegmentFn`).  The contract:
   interleave freely within one run of the job.
 
 ``Engine(..., use_fn_seg=False)`` disables the segment protocol wholesale
-(the benchmark baseline); ``EngineMetrics.seg_calls``/``seg_tuples`` count
-how often the vectorized path actually fired.  New operators (and new
-``fn_seg`` ports) must be pinned by the differential conformance harness in
-``tests/conformance.py`` — see ``tests/test_real_jobs_conformance.py`` and
-``docs/operator_authoring.md``.
+(the benchmark baseline); ``use_schema=False`` likewise strips declared
+schemas so every edge carries object arrays (the untyped oracle).
+``EngineMetrics.seg_calls``/``seg_tuples``/``typed_batches`` count how
+often the vectorized and schema-typed paths actually fired.  New operators
+(and new ``fn_seg`` ports or schema declarations) must be pinned by the
+differential conformance harness in ``tests/conformance.py`` — see
+``tests/test_real_jobs_conformance.py`` and ``docs/operator_authoring.md``.
 """
 
 from __future__ import annotations
@@ -94,10 +110,17 @@ from typing import Optional
 import numpy as np
 
 from repro.core.stats import ClusterState, SPLWindow
+from repro.engine import serde
 from repro.engine.backpressure import CreditController, LatencyTracker
 from repro.engine.router import Router, concat_batches
 from repro.engine.state import KeyedStore
-from repro.engine.topology import Batch, Topology, _identity_key, make_batch
+from repro.engine.topology import (
+    Batch,
+    Schema,
+    Topology,
+    _identity_key,
+    make_batch,
+)
 from repro.engine.workqueue import _S_CUR, QUEUE_IMPLS, SoAWorkQueue
 
 
@@ -114,6 +137,9 @@ class EngineMetrics:
     # tuples processed through it (0 on the deque oracle / use_fn_seg=False).
     seg_calls: int = 0
     seg_tuples: int = 0
+    # Batches routed to a schema-declared operator as native-dtype arrays
+    # (0 with use_schema=False — the all-object oracle configuration).
+    typed_batches: int = 0
     # Materialized sink tuples; only populated when the engine was built with
     # ``collect_sinks=True`` (unbounded growth otherwise — benchmarks disable
     # it so they measure the data plane, not list appends).
@@ -181,6 +207,7 @@ class Engine:
         collect_sinks: bool = True,
         kernel_stats: Optional[bool] = None,
         use_fn_seg: bool = True,
+        use_schema: bool = True,
     ) -> None:
         topology.validate()
         self.topology = topology
@@ -219,6 +246,16 @@ class Engine:
         # conformance harness and benchmark baselines rely on this switch).
         self.use_fn_seg = use_fn_seg
         self._op_fn_seg = [o.fn_seg if use_fn_seg else None for o in topology.operators]
+        # use_schema=False strips declared schemas: every edge carries the
+        # object-array representation, giving the untyped oracle data path
+        # the conformance harness pins the columnar path against.
+        self.use_schema = use_schema
+        self._op_schema: list[Optional[Schema]] = [
+            o.schema if use_schema else None for o in topology.operators
+        ]
+        # Queued backlog extracted at redirect time, shipped inside the
+        # serialize() envelope (raw buffer slices for schema-typed batches).
+        self._backlog: dict[int, list[Batch]] = {}
         self._op_nkg = [o.num_keygroups for o in topology.operators]
         self._op_base = [topology.kg_base(i) for i in range(topology.num_operators)]
         self._op_terminal = [
@@ -251,7 +288,22 @@ class Engine:
             self.metrics.dropped_credits += len(keys) - n
         if n == 0:
             return 0
-        batch = make_batch(keys[:n], values[:n], ts[:n])
+        schema = self._op_schema[oid]
+        if schema is not None:
+            # Ingestion is the one edge where boxed records still exist:
+            # convert once, here, and the batch stays native end to end.
+            # (Copy when the conversion aliased the caller's buffer — queued
+            # batches must survive the caller refilling it, like make_batch.)
+            tv = schema.typed_values(values[:n] if len(values) != n else values)
+            if isinstance(values, np.ndarray) and np.shares_memory(tv, values):
+                tv = tv.copy()
+            batch = (
+                np.array(keys[:n], dtype=schema.key),
+                tv,
+                np.asarray(ts[:n], dtype=np.float64),
+            )
+        else:
+            batch = make_batch(keys[:n], values[:n], ts[:n])
         self._route_batch(oid, batch, src_kgs=None, src_nodes=None)
         return n
 
@@ -299,6 +351,15 @@ class Engine:
         n = len(keys)
         if n == 0:
             return
+        if self._op_schema[op] is not None:
+            # Schema-typed edge: callers conform batches before routing, so
+            # the object-dtype fallback never allocates on this path.
+            if values.dtype.kind == "O" or keys.dtype.kind == "O":
+                raise AssertionError(
+                    f"object-dtype batch routed to schema-typed operator "
+                    f"{self.topology.operators[op].name!r}"
+                )
+            self.metrics.typed_batches += 1
         kgs, hist = self._partition(op, keys, values)
         window = self.window
         nkg = self._op_nkg[op]
@@ -705,20 +766,57 @@ class Engine:
             except KeyError:
                 pending[dop] = [item]
 
+    def _conform_batch(self, batch: Batch, schema: Optional[Schema]) -> Batch:
+        """Fit a batch to the destination operator's declared edge layout.
+
+        Typed target: object batches (fn-oracle outputs, gradual-typing
+        boundaries) are promoted into the structured layout in one C-level
+        conversion; native batches pass through untouched.  Untyped target:
+        structured batches decay to the object representation — the tuples an
+        undeclared operator's ``fn`` iterates are then identical whether the
+        producer ran columnar or boxed.
+        """
+        keys, values, ts = batch
+        if schema is None:
+            if isinstance(values, np.ndarray) and values.dtype.names is not None:
+                obj = np.empty(len(values), dtype=object)
+                obj[:] = values.tolist()
+                return keys, obj, ts
+            return batch
+        if keys.dtype != schema.key:
+            keys = np.asarray(keys, dtype=schema.key)
+        if not (isinstance(values, np.ndarray) and values.dtype == schema.value):
+            values = schema.typed_values(values)
+        return keys, values, ts
+
     def _flush_outputs(self) -> None:
         """Route this tick's accumulated outputs, one batch per operator.
 
         An item's source-kg attribution is a scalar (one run) or an array
-        (a contiguous segment spanning several key groups).
+        (a contiguous segment spanning several key groups).  Each item is
+        conformed to the destination's declared schema (or decayed to the
+        object path) before batches are concatenated.
+
+        Destinations flush in operator-id order, NOT dict-insertion order:
+        the drain paths create ``_out_pending`` keys at different moments
+        (the per-run fast path pre-binds its downstream list before any
+        emission; the segment path only on first emission), and insertion-
+        order flushing would let the same tick push identical segments to a
+        node's queue in different FIFO order across execution paths —
+        divergent drain trajectories under a binding budget.
         """
         if not self._out_pending:
             return
         pending, self._out_pending = self._out_pending, {}
-        for dop, items in pending.items():
+        op_schema = self._op_schema
+        for dop in sorted(pending):
+            items = pending[dop]
             if not items:  # list pre-bound by the drain fast path, unused
                 continue
+            schema = op_schema[dop]
             if len(items) == 1:
                 batch, src_kg, src_node = items[0]
+                batch = self._conform_batch(batch, schema)
                 n = len(batch[0])
                 if type(src_kg) is np.ndarray:
                     src_kgs = src_kg
@@ -727,7 +825,9 @@ class Engine:
                 src_nodes = np.full(n, src_node, dtype=np.int64)
             else:
                 batches, kg_t, nd_t = zip(*items)
-                batch = concat_batches(list(batches))
+                batch = concat_batches(
+                    [self._conform_batch(b, schema) for b in batches]
+                )
                 m = len(items)
                 lens = np.fromiter((len(b[0]) for b in batches), np.int64, count=m)
                 if any(type(k) is np.ndarray for k in kg_t):
@@ -772,26 +872,38 @@ class Engine:
         """Flip routing for the key group and pull its queued work along.
 
         The key group's pending runs are masked out of its current node's
-        queue and parked in the router's in-flight buffer (ahead of anything
-        that arrives during the migration), so ``install`` replays *all* of
-        the key group's outstanding tuples at the destination in FIFO order.
+        queue into the migration backlog; ``serialize`` ships that backlog
+        inside the σ_k envelope (raw buffer slices on schema-typed edges —
+        see :mod:`repro.engine.serde`) and ``install`` replays it ahead of
+        anything the router buffered during the migration, so the key
+        group's outstanding tuples resume at the destination in FIFO order.
         """
         src = self.router.node_of(keygroup)
         self.router.redirect(keygroup, dst)
         batches, _removed = self._queues[src].extract_keygroup(keygroup)
-        for b in batches:
-            self.router.buffer(keygroup, b)
+        if batches:
+            self._backlog.setdefault(keygroup, []).extend(batches)
 
     def serialize(self, keygroup: int) -> bytes:
-        return self.store.serialize(keygroup)
+        backlog = self._backlog.pop(keygroup, [])
+        return serde.encode_migration(self.store.serialize(keygroup), backlog)
 
     def install(self, keygroup: int, dst: int, blob: bytes) -> None:
-        self.store.deserialize(keygroup, blob)
+        state_blob, backlog = serde.decode_migration(blob)
+        self.store.deserialize(keygroup, state_blob)
         op = int(self._kg_op[keygroup])
-        buffered = self.router.complete(keygroup)
-        if buffered:
-            # Replay everything buffered during the migration as one batch.
-            batch = concat_batches(buffered)
+        # Any backlog still parked engine-side replays too: a blob that did
+        # not come from serialize() (bare checkpoint pickles in failure
+        # recovery) must not strand the tuples redirect extracted.  The two
+        # backlog sources are mutually exclusive — serialize() pops the
+        # engine-side list into the blob — so nothing replays twice.
+        replay = backlog + self._backlog.pop(keygroup, []) + self.router.complete(
+            keygroup
+        )
+        if replay:
+            # Replay the shipped backlog plus everything buffered during the
+            # migration as one batch, in FIFO order.
+            batch = concat_batches(replay)
             cost = self._cost_per_tuple[op] * len(batch[0])
             self._queues[dst].push_batch(op, keygroup, batch, cost)
             self._record_admission(dst, len(batch[0]))

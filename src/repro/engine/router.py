@@ -3,10 +3,12 @@
 During a migration of g_k from n1 to n2 (paper §3):
 
   * `redirect(k, n2)` flips the table immediately — upstream sends for g_k now
-    land at n2 and are *buffered* there (n2 does not own σ_k yet);
+    land at n2 and are *buffered* there (n2 does not own σ_k yet); the work
+    already queued at n1 is extracted engine-side and ships inside the
+    serialize envelope instead (see repro.engine.serde);
   * `install(...)` (driven by the engine's StateMover) hands σ_k over, after
-    which `drain(k)` returns the buffered tuples for replay and the key group
-    resumes at n2.
+    which `complete(k)` returns the buffered tuples for replay — behind the
+    shipped backlog, preserving FIFO — and the key group resumes at n2.
 """
 
 from __future__ import annotations

@@ -3,6 +3,9 @@
 State is a plain dict per key group (operators put whatever they need in it —
 counters, windows, jnp arrays).  Serialization uses pickle over a numpy-
 friendly normal form; sizes feed the migration cost model mc_k = α·|σ_k|.
+This codec covers the *state* half of a migration blob only — the engine
+wraps it in an envelope that also carries the key group's queued segments
+(repro.engine.serde), without affecting the |σ_k| sizes measured here.
 """
 
 from __future__ import annotations

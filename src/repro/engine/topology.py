@@ -64,6 +64,68 @@ SegmentFn = Callable[
 ]
 
 
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    """Declared record layout of a typed edge: value dtype + key dtype.
+
+    ``value`` is a numpy dtype for the tuple *values* flowing over an edge —
+    usually a structured record dtype (``Schema.record``), but any native
+    scalar dtype works (e.g. plain ``float64`` payloads).  ``key`` types the
+    partition keys.  Neither may be ``object``: a Schema is exactly the claim
+    that the edge needs no object boxing, which is what lets the engine keep
+    the routing permutation, the SoA work queues, sink buffers and migration
+    codecs on native-dtype operations end to end.
+
+    Two schemas are equal iff both dtypes are equal — topology validation
+    compares them structurally, so declaring the same field layout twice
+    (e.g. in the producer's ``out_schema`` and the consumer's ``schema``)
+    compares equal even through distinct ``np.dtype`` instances.
+    """
+
+    value: np.dtype
+    key: np.dtype = np.dtype(np.int64)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "value", np.dtype(self.value))
+        object.__setattr__(self, "key", np.dtype(self.key))
+        if self.value.kind == "O" or self.key.kind == "O":
+            raise ValueError(
+                "Schema dtypes must be native (object is the untyped path)"
+            )
+
+    @staticmethod
+    def record(
+        fields: Sequence[tuple[str, object]], key: object = np.int64
+    ) -> "Schema":
+        """Build a schema whose value layout is a structured record dtype."""
+        return Schema(value=np.dtype(list(fields)), key=np.dtype(key))
+
+    @property
+    def names(self) -> Optional[tuple[str, ...]]:
+        return self.value.names
+
+    def typed_values(self, values) -> np.ndarray:
+        """Coerce a value sequence/array to this schema's native layout.
+
+        Lists of per-tuple records (python tuples) convert in one C-level
+        ``np.array(..., dtype)``; object arrays go through ``tolist`` first
+        (numpy cannot cast object arrays to structured dtypes directly); a
+        native array of the right dtype passes through unchanged.
+        """
+        if isinstance(values, np.ndarray):
+            if values.dtype == self.value:
+                return values
+            if values.dtype.kind == "O":
+                return np.array(values.tolist(), dtype=self.value)
+            return values.astype(self.value, copy=False)
+        return np.array(
+            values if isinstance(values, list) else list(values), dtype=self.value
+        )
+
+    def typed_keys(self, keys) -> np.ndarray:
+        return np.asarray(keys, dtype=self.key)
+
+
 def _identity_key(k: object) -> object:
     return k
 
@@ -160,7 +222,20 @@ class OperatorSpec:
       key_by_value: optional — partition by a function of the tuple *value*
         instead (e.g. RouteDelay partitions extract's airplane-keyed tuples
         by (origin, dest)).  Takes precedence over key_fn.
+      key_by_value_col: optional columnar form of ``key_by_value`` — applied
+        to a whole schema-typed values array at once (field expressions like
+        ``v["origin"] * na + v["dest"]`` vectorize over structured columns).
+        Must return one partition key per tuple, elementwise identical to
+        ``key_by_value``; ignored for untyped (object) batches.
       is_source / is_sink: role flags.
+      schema: optional :class:`Schema` declaring the operator's *input* edge
+        layout.  Schema-typed operators receive native structured value
+        arrays (column views in ``fn_seg``); undeclared operators keep the
+        object-array path behind the same API.
+      out_schema: optional :class:`Schema` for the operator's *output* edge
+        (sources forward their input, so their out schema is ``schema``).
+        Validated against every downstream operator's declared input schema
+        at construction time.
     """
 
     name: str
@@ -172,6 +247,9 @@ class OperatorSpec:
     is_source: bool = False
     is_sink: bool = False
     fn_seg: Optional[SegmentFn] = None  # vectorized protocol (see SegmentFn)
+    schema: Optional[Schema] = None
+    out_schema: Optional[Schema] = None
+    key_by_value_col: Optional[Callable[[np.ndarray], np.ndarray]] = None
 
 
 class Topology:
@@ -295,6 +373,26 @@ class Topology:
         spec = self.operators[op]
         n = len(keys)
         base = self.kg_base(op)
+        nkg = spec.num_keygroups
+        if (
+            spec.key_by_value_col is not None
+            and isinstance(values, np.ndarray)
+            and values.dtype.names is not None
+        ):
+            # Schema-typed batch with a columnar key expression: the whole
+            # partition-key vector is field arithmetic — no per-tuple python,
+            # no object array, straight into the vectorized mix.
+            part = spec.key_by_value_col(values)
+            if (
+                isinstance(part, np.ndarray)
+                and part.shape == (n,)
+                and part.dtype.kind in "iu"
+            ):
+                return _mixed_keygroups(mix32(part), base, nkg)
+            raise TypeError(
+                f"key_by_value_col of operator {spec.name!r} must return an "
+                f"integer array of length {n}, got {type(part).__name__}"
+            )
         if spec.key_by_value is not None:
             # Match the scalar path: a None value falls back to key_fn(key).
             # Object arrays iterate faster as lists (no per-element boxing).
@@ -306,7 +404,6 @@ class Topology:
             part = [kfn(k) for k in keys]
         else:
             part = keys
-        nkg = spec.num_keygroups
         if isinstance(part, np.ndarray) and part.dtype.kind in "iu":
             return _mixed_keygroups(mix32(part), base, nkg)
         if isinstance(part, list):
@@ -322,6 +419,11 @@ class Topology:
         h = np.fromiter((hash_key(x) for x in part), dtype=np.int64, count=n)
         return base + h % nkg
 
+    def out_schema_of(self, op: int) -> Optional[Schema]:
+        """Effective output schema of an operator (sources forward input)."""
+        spec = self.operators[op]
+        return spec.schema if spec.fn is None else spec.out_schema
+
     def validate(self) -> None:
         self.topo_order()  # raises on cycles
         downs = self.downstream()
@@ -336,4 +438,25 @@ class Topology:
                 raise ValueError(
                     f"source {o.name!r} cannot have fn_seg — sources are "
                     "pass-through; the engine forwards their batches directly"
+                )
+            if o.key_by_value_col is not None and o.key_by_value is None:
+                raise ValueError(
+                    f"{o.name!r} declares key_by_value_col without the scalar "
+                    "key_by_value it must be elementwise identical to"
+                )
+        # Schema mismatch across an edge is a construction-time error, not a
+        # runtime surprise.  A declared consumer accepts either (a) producers
+        # declaring the *same* schema (the fully typed edge) or (b) undeclared
+        # producers — the gradual-typing boundary, where the engine coerces
+        # object batches into the declared layout at routing time.  A typed
+        # producer feeding an undeclared consumer decays to the object path.
+        for s, d in self.edges:
+            want = self.operators[d].schema
+            have = self.out_schema_of(s)
+            if want is not None and have is not None and have != want:
+                raise ValueError(
+                    f"schema mismatch on edge {self.operators[s].name!r} -> "
+                    f"{self.operators[d].name!r}: producer emits {have.value} "
+                    f"(key {have.key}), consumer declares {want.value} "
+                    f"(key {want.key})"
                 )

@@ -21,7 +21,13 @@ routed batch — in FIFO order.  Two implementations share one interface:
 
 Both support ``extract_keygroup`` — masked slicing of one key group's queued
 tuples out of the queue in FIFO order — which the engine uses during direct
-state migration so in-flight work follows σ_k to its new node.
+state migration so in-flight work follows σ_k to its new node (packed into
+the serialize envelope as raw buffer slices on schema-typed edges).
+
+Queues are representation-agnostic: a segment's key/value arrays are
+whatever the routed batch carried — native structured records on
+schema-typed edges (slicing stays a fixed-width view, no per-element
+refcounting) or object arrays on undeclared ones.
 """
 
 from __future__ import annotations

@@ -3,10 +3,13 @@
 One scenario — a topology, randomized sources, optional migrations and
 backpressure — is driven through every execution configuration:
 
-* ``soa+seg``   — SoA work queues with the segment-vectorized ``fn_seg``
-  protocol enabled (the production path);
-* ``soa+fn``    — SoA queues with ``fn_seg`` stripped (every run takes the
-  per-run ``fn``);
+* ``soa+seg+schema`` — SoA work queues, segment-vectorized ``fn_seg``,
+  declared schemas honored (columnar structured-array edges — the
+  production path);
+* ``soa+seg``   — same but with schemas stripped (``use_schema=False``):
+  every edge carries the object-array representation;
+* ``soa+fn``    — SoA queues with ``fn_seg`` also stripped (every run takes
+  the per-run ``fn``);
 * ``deque+fn``  — the legacy per-entry deque queue (always per-run ``fn``),
   the original oracle.
 
@@ -16,11 +19,16 @@ insertion order — it decides TopK tie-breaks and pickle bytes), the folded
 SPL statistics (loads, arrival rates, sparse pair rates, state sizes), the
 routing table and the per-node queue costs.
 
-This is the required check for new operators and new ``fn_seg`` ports: add a
-topology + feeder entry to ``JOBS`` (or call :func:`run_configs` directly)
-and assert with :func:`assert_equivalent`.  See
-``tests/test_real_jobs_conformance.py`` for the real-job instantiation and
-``docs/operator_authoring.md`` for the authoring contract.
+This is the required check for new operators, new ``fn_seg`` ports and new
+schema declarations: add a topology + feeder entry to ``JOBS`` (or call
+:func:`run_configs` directly) and assert with :func:`assert_equivalent`.
+See ``tests/test_real_jobs_conformance.py`` for the real-job instantiation
+and ``docs/operator_authoring.md`` for the authoring contract.
+
+:func:`make_fuzz_topology` extends the harness with *randomized* topologies
+— random fan-out DAGs, key dtypes, schema/no-schema mixes over a library of
+generic operators — driven by hypothesis in
+``tests/test_conformance_fuzz.py``.
 """
 
 from __future__ import annotations
@@ -37,9 +45,15 @@ from repro.data.synthetic import (
     wiki_edit_stream,
 )
 from repro.engine import Engine
-from repro.engine.topology import OperatorSpec, Topology
+from repro.engine.topology import OperatorSpec, Schema, Topology
 
-CONFIGS = (("soa", True), ("soa", False), ("deque", False))
+# (queue_impl, use_fn_seg, use_schema)
+CONFIGS = (
+    ("soa", True, True),
+    ("soa", True, False),
+    ("soa", False, False),
+    ("deque", False, False),
+)
 
 METRIC_FIELDS = (
     "processed_tuples",
@@ -85,7 +99,15 @@ def normalize(obj):
     return obj
 
 
-def run_scenario(topo_factory, feeder_factory, scenario, *, queue_impl, use_fn_seg):
+def run_scenario(
+    topo_factory,
+    feeder_factory,
+    scenario,
+    *,
+    queue_impl,
+    use_fn_seg,
+    use_schema=False,
+):
     """Drive one engine configuration through the scenario; return a result
     dict of everything the equivalence contract pins."""
     topo = topo_factory()
@@ -96,6 +118,7 @@ def run_scenario(topo_factory, feeder_factory, scenario, *, queue_impl, use_fn_s
         seed=scenario.seed,
         queue_impl=queue_impl,
         use_fn_seg=use_fn_seg,
+        use_schema=use_schema,
     )
     feeds = feeder_factory()
     rng = np.random.default_rng(scenario.seed + 1)
@@ -135,16 +158,26 @@ def run_scenario(topo_factory, feeder_factory, scenario, *, queue_impl, use_fn_s
         "queue_costs": [q.cost for q in eng._queues],
         "seg_calls": eng.metrics.seg_calls,
         "seg_tuples": eng.metrics.seg_tuples,
+        "typed_batches": eng.metrics.typed_batches,
     }
+
+
+def _config_name(impl: str, seg: bool, schema: bool) -> str:
+    return f"{impl}+{'seg' if seg else 'fn'}{'+schema' if schema else ''}"
 
 
 def run_configs(topo_factory, feeder_factory, scenario):
     """Run every execution configuration; returns {config name: result}."""
     return {
-        f"{impl}+{'seg' if seg else 'fn'}": run_scenario(
-            topo_factory, feeder_factory, scenario, queue_impl=impl, use_fn_seg=seg
+        _config_name(impl, seg, schema): run_scenario(
+            topo_factory,
+            feeder_factory,
+            scenario,
+            queue_impl=impl,
+            use_fn_seg=seg,
+            use_schema=schema,
         )
-        for impl, seg in CONFIGS
+        for impl, seg, schema in CONFIGS
     }
 
 
@@ -155,8 +188,8 @@ def assert_equivalent(results: dict[str, dict]) -> None:
     for name in names[1:]:
         other = results[name]
         for field, expect in base.items():
-            if field in ("seg_calls", "seg_tuples"):
-                continue  # differs by construction between seg and fn configs
+            if field in ("seg_calls", "seg_tuples", "typed_batches"):
+                continue  # differs by construction across configurations
             got = other[field]
             if field == "states":
                 for kg, (a, b) in enumerate(zip(expect, got)):
@@ -205,7 +238,12 @@ def _int_batches(rate=120, key_space=10_000, seed=5):
 
 def make_pipeline_topo(kgs: int = 16) -> Topology:
     """The synthetic source → re-key → recording-sink pipeline, with both
-    operator protocols (shared with the migration property tests)."""
+    operator protocols (shared with the migration property tests).  Every
+    edge declares the scalar float64 payload schema, so the same topology
+    runs typed (native key/value dtypes end to end, raw-buffer migration
+    blobs) or untyped via ``Engine(use_schema=...)``."""
+
+    scalar = Schema(np.dtype(np.float64))
 
     def mid_fn(state, keys, values, ts):
         state["n"] = state.get("n", 0) + len(keys)
@@ -228,10 +266,28 @@ def make_pipeline_topo(kgs: int = 16) -> Topology:
         return (keys * 2, values, ts), None
 
     t = Topology()
-    t.add_operator(OperatorSpec("src", None, num_keygroups=kgs, is_source=True))
-    t.add_operator(OperatorSpec("mid", mid_fn, num_keygroups=kgs, fn_seg=mid_seg))
     t.add_operator(
-        OperatorSpec("sink", sink_fn, num_keygroups=kgs, is_sink=True, fn_seg=sink_seg)
+        OperatorSpec("src", None, num_keygroups=kgs, is_source=True, schema=scalar)
+    )
+    t.add_operator(
+        OperatorSpec(
+            "mid",
+            mid_fn,
+            num_keygroups=kgs,
+            fn_seg=mid_seg,
+            schema=scalar,
+            out_schema=scalar,
+        )
+    )
+    t.add_operator(
+        OperatorSpec(
+            "sink",
+            sink_fn,
+            num_keygroups=kgs,
+            is_sink=True,
+            fn_seg=sink_seg,
+            schema=scalar,
+        )
     )
     t.connect("src", "mid")
     t.connect("mid", "sink")
@@ -252,3 +308,205 @@ JOBS = {
     "job4": (lambda: real_job_4(keygroups_per_op=_KGS), _job4_feeders),
     "pipeline": (lambda: make_pipeline_topo(_KGS), _pipeline_feeders),
 }
+
+
+# ---------------------------------------------------------------------------
+# Fuzzing mode: randomized topologies over a library of generic operators.
+#
+# A *fuzz spec* is a plain dict (hypothesis draws it in
+# tests/test_conformance_fuzz.py) describing a random fan-out DAG:
+#
+#   {"family": "scalar" | "record",       # value payload family
+#    "key_dtype": "i8" | "i4",            # declared key dtype
+#    "source_schema": bool,               # source edge declared?
+#    "ops": [{"kind": ..., "kgs": int,    # per middle operator
+#             "schema": bool,             # input edge declared?
+#             "out_schema": bool,         # output edge declared?
+#             "key": "id" | "mod" | "byval"},
+#            ...],
+#    "edges": [[upstream indices], ...]}  # -1 = source, else earlier op
+#
+# Every operator implements fn + fn_seg, and each fn_seg handles both value
+# representations, so any schema/no-schema mix along any DAG must stay
+# bit-identical across the full CONFIGS matrix.
+# ---------------------------------------------------------------------------
+
+FUZZ_RECORD_DTYPE = np.dtype([("a", "i8"), ("b", "f8")])
+FUZZ_KINDS = {
+    "scalar": ("rekey", "vshift", "filter"),
+    "record": ("rekey", "project", "filter"),
+}
+
+
+def _count_runs(store, run_kgs, starts, ends):
+    for kg, a, z in zip(run_kgs, starts, ends):
+        st = store[kg]
+        st["n"] = st.get("n", 0) + (z - a)
+
+
+def _fuzz_bodies(kind: str, family: str):
+    """(fn, fn_seg) for one generic operator, bit-identical across
+    representations (structured column views vs object tuples)."""
+    if family == "scalar":
+        if kind == "rekey":
+
+            def fn(state, keys, values, ts):
+                state["n"] = state.get("n", 0) + len(keys)
+                return state, (keys + 7, values, ts)
+
+            def seg(store, run_kgs, starts, ends, keys, values, ts):
+                _count_runs(store, run_kgs, starts, ends)
+                return (keys + 7, values, ts), None
+
+        elif kind == "vshift":
+
+            def fn(state, keys, values, ts):
+                state["n"] = state.get("n", 0) + len(keys)
+                return state, (keys, values + 0.5, ts)
+
+            def seg(store, run_kgs, starts, ends, keys, values, ts):
+                _count_runs(store, run_kgs, starts, ends)
+                return (keys, values + 0.5, ts), None
+
+        else:  # filter
+
+            def fn(state, keys, values, ts):
+                state["n"] = state.get("n", 0) + len(keys)
+                keep = keys % 3 != 0
+                return state, (keys[keep], values[keep], ts[keep])
+
+            def seg(store, run_kgs, starts, ends, keys, values, ts):
+                _count_runs(store, run_kgs, starts, ends)
+                keep = keys % 3 != 0
+                lens = [int(keep[a:z].sum()) for a, z in zip(starts, ends)]
+                return (keys[keep], values[keep], ts[keep]), lens
+
+        return fn, seg
+
+    # record family: values are (a: i8, b: f8) records
+    def _project_cols(values):
+        """(a column, b column) as native arrays, either representation."""
+        if values.dtype.names is not None:
+            return values["a"], values["b"]
+        a_l, b_l = zip(*values.tolist())
+        return np.asarray(a_l, dtype=np.int64), np.asarray(b_l)
+
+    def _record_out(values, a, b):
+        if values.dtype.names is not None:
+            out = np.empty(len(a), dtype=FUZZ_RECORD_DTYPE)
+            out["a"] = a
+            out["b"] = b
+            return out
+        out = np.empty(len(a), dtype=object)
+        out[:] = list(zip(a.tolist(), b.tolist()))
+        return out
+
+    if kind == "rekey":
+
+        def fn(state, keys, values, ts):
+            state["n"] = state.get("n", 0) + len(keys)
+            return state, (keys + 7, values, ts)
+
+        def seg(store, run_kgs, starts, ends, keys, values, ts):
+            _count_runs(store, run_kgs, starts, ends)
+            return (keys + 7, values, ts), None
+
+    elif kind == "project":
+
+        def fn(state, keys, values, ts):
+            state["n"] = state.get("n", 0) + len(keys)
+            out = [
+                (k, (v[0], v[1] + v[0]), t)
+                for k, v, t in zip(keys.tolist(), values.tolist(), ts.tolist())
+            ]
+            return state, out
+
+        def seg(store, run_kgs, starts, ends, keys, values, ts):
+            _count_runs(store, run_kgs, starts, ends)
+            a, b = _project_cols(values)
+            return (keys, _record_out(values, a, b + a), ts), None
+
+    else:  # filter on the record's a field
+
+        def fn(state, keys, values, ts):
+            state["n"] = state.get("n", 0) + len(keys)
+            a, _ = _project_cols(values)
+            keep = a % 3 != 0
+            return state, (keys[keep], values[keep], ts[keep])
+
+        def seg(store, run_kgs, starts, ends, keys, values, ts):
+            _count_runs(store, run_kgs, starts, ends)
+            a, _ = _project_cols(values)
+            keep = a % 3 != 0
+            lens = [int(keep[a_:z].sum()) for a_, z in zip(starts, ends)]
+            return (keys[keep], values[keep], ts[keep]), lens
+
+    return fn, seg
+
+
+def make_fuzz_topology(spec: dict) -> Topology:
+    """Build the randomized DAG a fuzz spec describes (deterministic)."""
+    family = spec["family"]
+    key_dtype = np.dtype(spec["key_dtype"])
+    value_dtype = (
+        FUZZ_RECORD_DTYPE if family == "record" else np.dtype(np.float64)
+    )
+    schema = Schema(value_dtype, key=key_dtype)
+    t = Topology()
+    t.add_operator(
+        OperatorSpec(
+            "src",
+            None,
+            num_keygroups=spec.get("source_kgs", 8),
+            is_source=True,
+            schema=schema if spec["source_schema"] else None,
+        )
+    )
+    for i, op in enumerate(spec["ops"]):
+        fn, seg = _fuzz_bodies(op["kind"], family)
+        kw = {}
+        if op["key"] == "mod":
+            kw["key_fn"] = lambda k: k % 13
+        elif op["key"] == "byval" and family == "record":
+            kw["key_by_value"] = lambda v: v[0] % 11
+            kw["key_by_value_col"] = lambda v: v["a"] % np.int64(11)
+        t.add_operator(
+            OperatorSpec(
+                f"op{i}",
+                fn,
+                num_keygroups=op["kgs"],
+                fn_seg=seg,
+                schema=schema if op["schema"] else None,
+                out_schema=schema if op["out_schema"] else None,
+                **kw,
+            )
+        )
+    for i, ups in enumerate(spec["edges"]):
+        for u in ups:
+            t.connect("src" if u < 0 else f"op{u}", f"op{i}")
+    return t
+
+
+def fuzz_feeders(spec: dict, *, rate: float = 90.0, seed: int = 5):
+    """Deterministic source feeders matching a fuzz spec's value family."""
+    family = spec["family"]
+
+    def factory():
+        def gen():
+            rng = np.random.default_rng(seed)
+            tick = 0
+            while True:
+                n = int(rng.poisson(rate))
+                keys = rng.integers(0, 100_000, size=n).astype(np.int64)
+                if family == "record":
+                    a = rng.integers(0, 1_000, size=n)
+                    b = rng.random(n)
+                    values = list(zip(a.tolist(), b.tolist()))
+                else:
+                    values = rng.random(n)
+                yield keys, values, np.full(n, float(tick))
+                tick += 1
+
+        return {"src": gen()}
+
+    return factory

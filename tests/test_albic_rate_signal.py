@@ -1,0 +1,80 @@
+"""kg_tuple_rate as a leading-load signal in ALBIC's node scoring.
+
+Mirror of the scaler-side rate projection (tests/test_scaling_rate_signal.py):
+step 3 of Algorithm 2 pins a new collocation pair to the less-loaded of the
+two candidate nodes.  With the rate signal, "less loaded" means less loaded
+*one period ahead* — a node that is merely currently-balanced but hosts a
+surging key group scores as loaded, and the migration targets the other node.
+"""
+
+import numpy as np
+
+from repro.core.albic import AlbicParams, albic
+from repro.core.framework import AdaptationFramework
+from repro.core.stats import ClusterState
+
+# Two operators × two key groups: kg 0/1 belong to op 0, kg 2/3 to op 1.
+# The only hot pair is 0 → 2 (kg 0 on node 0, kg 2 on node 1), so step 3
+# case 1 fires: both ends pinned to whichever node scores less loaded.
+_KG_OP = [0, 0, 1, 1]
+_ALLOC = [0, 0, 1, 1]
+_DOWNSTREAM = {0: [1], 1: []}
+
+
+def _state(rate):
+    out = np.zeros((4, 4))
+    out[0, 2] = 50.0
+    return ClusterState.create(
+        2,
+        np.asarray(_KG_OP),
+        np.full(4, 10.0),  # node loads [20, 20]: currently balanced
+        np.asarray(_ALLOC),
+        out_rates=out,
+        downstream=_DOWNSTREAM,
+        kg_tuple_rate=np.asarray(rate, dtype=np.float64),
+    )
+
+
+_FLAT_PREV = np.full(4, 10.0)
+# kg 1 (node 0) arrivals are surging 4×: node 0 projects to 10 + 40 = 50
+# load points versus node 1's 20 — node 0 is about to overload.
+_SURGE_NOW = [10.0, 40.0, 10.0, 10.0]
+
+
+def test_surging_node_is_steered_away_from():
+    st = _state(_SURGE_NOW)
+    res = albic(st, params=AlbicParams(seed=0), prev_rate=_FLAT_PREV)
+    assert res.pinned_pair == (0, 2)
+    # Both ends of the pinned pair land on node 1 — away from the node the
+    # surge is about to overload, even though measured loads tie at 20/20.
+    assert res.plan.alloc[0] == res.plan.alloc[2] == 1
+
+
+def test_without_rate_signal_ties_break_to_first_node():
+    st = _state(_SURGE_NOW)
+    # No history → projection unavailable → measured loads tie → n1 (node 0).
+    res = albic(st, params=AlbicParams(seed=0))
+    assert res.pinned_pair == (0, 2)
+    assert res.plan.alloc[0] == res.plan.alloc[2] == 0
+    # Same with the signal explicitly disabled despite available history.
+    res = albic(
+        st,
+        params=AlbicParams(seed=0, use_rate_signal=False),
+        prev_rate=_FLAT_PREV,
+    )
+    assert res.plan.alloc[0] == res.plan.alloc[2] == 0
+
+
+def test_flat_rates_match_measured_scoring():
+    st = _state([10.0, 10.0, 10.0, 10.0])
+    with_signal = albic(st, params=AlbicParams(seed=0), prev_rate=_FLAT_PREV)
+    without = albic(st, params=AlbicParams(seed=0))
+    assert np.array_equal(with_signal.plan.alloc, without.plan.alloc)
+
+
+def test_framework_threads_prev_rate_between_periods():
+    fw = AdaptationFramework(mode="albic", albic_params=AlbicParams(seed=0))
+    assert fw._prev_rate is None
+    fw.adapt(_state(_SURGE_NOW))
+    assert fw._prev_rate is not None
+    assert fw._prev_rate.tolist() == _SURGE_NOW

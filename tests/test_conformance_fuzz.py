@@ -1,0 +1,94 @@
+"""Fuzzing mode for the conformance harness: randomized topologies.
+
+Hypothesis draws random fan-out DAGs — value family, key dtype,
+schema/no-schema mix per operator, partitioning flavor, random mid-run
+migrations — and every drawn topology must be bit-identical across the full
+execution-configuration matrix (soa+seg+schema / soa+seg / soa+fn /
+deque+fn), exactly like the hand-written jobs.  This generalizes the fixed
+JOBS registry the same way tests/test_migration_properties.py generalizes
+the hand-written migration round-trips.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
+from hypothesis import given, settings, strategies as st
+
+from conformance import (
+    FUZZ_KINDS,
+    Scenario,
+    assert_equivalent,
+    fuzz_feeders,
+    make_fuzz_topology,
+    run_configs,
+)
+
+
+@st.composite
+def fuzz_specs(draw):
+    family = draw(st.sampled_from(["scalar", "record"]))
+    keys = ["id", "mod", "byval"] if family == "record" else ["id", "mod"]
+    n_ops = draw(st.integers(1, 4))
+    ops = [
+        {
+            "kind": draw(st.sampled_from(FUZZ_KINDS[family])),
+            "kgs": draw(st.sampled_from([4, 8, 12])),
+            "schema": draw(st.booleans()),
+            "out_schema": draw(st.booleans()),
+            "key": draw(st.sampled_from(keys)),
+        }
+        for _ in range(n_ops)
+    ]
+    edges = [
+        draw(
+            st.lists(
+                st.integers(-1, i - 1),
+                min_size=1,
+                max_size=min(i + 1, 3),
+                unique=True,
+            )
+        )
+        for i in range(n_ops)
+    ]
+    return {
+        "family": family,
+        "key_dtype": draw(st.sampled_from(["i8", "i4"])),
+        "source_schema": draw(st.booleans()),
+        "ops": ops,
+        "edges": edges,
+        "migrate_at": tuple(draw(st.lists(st.integers(2, 8), max_size=2, unique=True))),
+    }
+
+
+@settings(max_examples=15, deadline=None)
+@given(spec=fuzz_specs())
+def test_fuzzed_topologies_conform(spec):
+    scenario = Scenario(
+        "fuzz", ticks=10, drain_ticks=6, migrate_at=spec["migrate_at"]
+    )
+    results = run_configs(
+        lambda: make_fuzz_topology(spec), fuzz_feeders(spec), scenario
+    )
+    assert_equivalent(results)
+    assert results["soa+seg+schema"]["metrics"]["processed_tuples"] > 0
+    # Declared edges really carried typed batches (when any were declared).
+    declared = spec["source_schema"] or any(o["schema"] for o in spec["ops"])
+    if declared:
+        assert results["soa+seg+schema"]["typed_batches"] > 0
+    assert results["deque+fn"]["typed_batches"] == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(spec=fuzz_specs())
+def test_fuzzed_topologies_conform_under_backpressure(spec):
+    scenario = Scenario(
+        "fuzz-pressure",
+        ticks=12,
+        drain_ticks=8,
+        service_rate=220.0,
+        migrate_at=spec["migrate_at"],
+    )
+    results = run_configs(
+        lambda: make_fuzz_topology(spec), fuzz_feeders(spec), scenario
+    )
+    assert_equivalent(results)

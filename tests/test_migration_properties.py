@@ -3,7 +3,9 @@
 Random interleavings of ``redirect`` / ``serialize`` / ``install`` across
 random key groups — with pushes and ticks in between — must preserve the
 total tuple counts and the per-key-group state, identically on both queue
-implementations.  This generalizes the hand-written round-trip cases in
+implementations and on the schema-typed data path (whose serialize/install
+envelope ships queued segments as raw buffer slices rather than pickled
+lists).  This generalizes the hand-written round-trip cases in
 tests/test_routing_equivalence.py to arbitrary schedules.
 """
 
@@ -80,9 +82,14 @@ def _apply(eng, schedule):
 @given(schedule=actions)
 def test_migration_interleavings_preserve_tuples_and_state(schedule):
     results = []
-    for impl in ("soa", "deque"):
+    for impl, use_schema in (("soa", True), ("soa", False), ("deque", False)):
         eng = Engine(
-            make_pipeline_topo(KGS), NODES, service_rate=120.0, seed=0, queue_impl=impl
+            make_pipeline_topo(KGS),
+            NODES,
+            service_rate=120.0,
+            seed=0,
+            queue_impl=impl,
+            use_schema=use_schema,
         )
         accepted = _apply(eng, schedule)
         mid_base = eng.topology.kg_base(1)
@@ -108,5 +115,5 @@ def test_migration_interleavings_preserve_tuples_and_state(schedule):
                 eng.router.table.tolist(),
             )
         )
-    # Both queue implementations agree field for field.
-    assert results[0] == results[1]
+    # Every configuration agrees field for field.
+    assert results[0] == results[1] == results[2]

@@ -1,9 +1,11 @@
-"""The real jobs' fn_seg ports must be bit-identical to the per-run fn,
-and the SoA queue to the deque oracle, under every drive pattern.
+"""The real jobs' fn_seg ports (and their schema-typed columnar edges) must
+be bit-identical to the per-run fn, and the SoA queue to the deque oracle,
+under every drive pattern.
 
-Each test runs one job through the three execution configurations
-(soa+seg, soa+fn, deque+fn — see tests/conformance.py) and requires
-identical tuple flow, sink outputs, per-key-group state and SPL statistics:
+Each test runs one job through the four execution configurations
+(soa+seg+schema, soa+seg, soa+fn, deque+fn — see tests/conformance.py) and
+requires identical tuple flow, sink outputs, per-key-group state and SPL
+statistics:
 
 * ``steady``   — unconstrained budgets, pure data-plane equivalence;
 * ``migrate``  — three random mid-run migrations: tuples buffered in flight,
@@ -31,19 +33,24 @@ def test_job_conformance(job, scenario):
     topo_factory, feeder_factory = JOBS[job]
     results = run_configs(topo_factory, feeder_factory, SCENARIOS[scenario])
     assert_equivalent(results)
-    # The production configuration actually exercised the vectorized path,
-    # and the scenario moved real data (equivalence over nothing is vacuous).
+    # The production configuration actually exercised the vectorized path
+    # and routed schema-typed batches; the oracle configurations stayed on
+    # per-run fn / object arrays (equivalence over nothing is vacuous).
+    assert results["soa+seg+schema"]["seg_calls"] > 0
+    assert results["soa+seg+schema"]["typed_batches"] > 0
     assert results["soa+seg"]["seg_calls"] > 0
+    assert results["soa+seg"]["typed_batches"] == 0
     assert results["soa+fn"]["seg_calls"] == 0
     assert results["deque+fn"]["seg_calls"] == 0
-    assert results["soa+seg"]["metrics"]["processed_tuples"] > 0
+    assert results["deque+fn"]["typed_batches"] == 0
+    assert results["soa+seg+schema"]["metrics"]["processed_tuples"] > 0
 
 
 def test_jobs_produce_sink_output_and_state():
     """The conformance drive is not vacuous: sinks emit and state accretes."""
     for job, (topo_factory, feeder_factory) in JOBS.items():
         res = run_configs(topo_factory, feeder_factory, SCENARIOS["steady"])
-        seg = res["soa+seg"]
+        seg = res["soa+seg+schema"]
         assert seg["metrics"]["sink_tuples"] > 0, job
         non_empty = sum(1 for s in seg["states"] if s != ("dict", []))
         assert non_empty > 0, job
@@ -56,7 +63,7 @@ def test_migration_actually_interleaved():
     plain = run_configs(topo_factory, feeder_factory, SCENARIOS["steady"])
     moved = run_configs(topo_factory, feeder_factory, SCENARIOS["migrate"])
     assert_equivalent(moved)
-    assert moved["soa+seg"]["alloc"] != plain["soa+seg"]["alloc"]
+    assert moved["soa+seg+schema"]["alloc"] != plain["soa+seg+schema"]["alloc"]
 
 
 def test_pressure_scenario_is_binding():
@@ -68,7 +75,8 @@ def test_pressure_scenario_is_binding():
     assert_equivalent(pressed)
     # Same total work eventually drains, but the per-tick interleaving (and
     # hence the number of whole-segment fn_seg calls) must differ.
-    assert pressed["soa+seg"]["seg_calls"] != steady["soa+seg"]["seg_calls"]
+    seg = "soa+seg+schema"
+    assert pressed[seg]["seg_calls"] != steady[seg]["seg_calls"]
 
 
 def test_normalize_pins_dict_insertion_order():

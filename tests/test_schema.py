@@ -1,0 +1,355 @@
+"""Schema-typed operator API: declaration, validation, columnar routing and
+raw-buffer migration codecs.
+
+Covers the construction-time contract (schema mismatch across an edge is an
+error, not a runtime surprise), the no-object-fallback guarantee on fully
+typed paths (the small-fix satellite: neither ``keygroups_of`` nor
+``_route_batch`` may box when every edge into the batch is schema-typed),
+and bit-exact serialize→install round-trips of schema-typed state and
+queued segments across both queue implementations.
+"""
+
+import pickle
+
+import numpy as np
+import pytest
+
+from conformance import make_pipeline_topo
+from repro.data.jobs import real_job_3
+from repro.data.synthetic import StreamSpec, airline_stream
+from repro.engine import Engine, OperatorSpec, Schema, Topology
+from repro.engine import serde
+from repro.engine.topology import make_batch
+
+
+def _noop(state, keys, values, ts):
+    return state, []
+
+
+REC = Schema.record([("a", "i8"), ("b", "f8")])
+
+
+# ---------------------------------------------------------------------------
+# Declaration and validation
+# ---------------------------------------------------------------------------
+
+
+def test_schema_rejects_object_dtypes():
+    with pytest.raises(ValueError, match="native"):
+        Schema(np.dtype(object))
+    with pytest.raises(ValueError, match="native"):
+        Schema(np.dtype(np.float64), key=np.dtype(object))
+
+
+def test_schema_structural_equality():
+    assert REC == Schema.record([("a", "i8"), ("b", "f8")])
+    assert REC != Schema.record([("a", "i8"), ("b", "f4")])
+    assert Schema(np.float64) == Schema(np.dtype("f8"))
+
+
+def test_edge_schema_mismatch_is_construction_error():
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, is_source=True, schema=REC))
+    t.add_operator(
+        OperatorSpec("dst", _noop, schema=Schema.record([("a", "i8"), ("b", "f4")]))
+    )
+    t.connect("src", "dst")
+    with pytest.raises(ValueError, match="schema mismatch"):
+        t.validate()
+
+
+def test_gradual_edges_validate():
+    """Typed→untyped (decay) and untyped→typed (promote) are both legal."""
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, is_source=True, schema=REC))
+    t.add_operator(OperatorSpec("untyped", _noop, out_schema=None))
+    t.add_operator(OperatorSpec("typed", _noop, schema=REC, is_sink=True))
+    t.connect("src", "untyped")
+    t.connect("untyped", "typed")
+    t.validate()
+
+
+def test_key_by_value_col_requires_scalar_form():
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, is_source=True))
+    t.add_operator(
+        OperatorSpec("op", _noop, key_by_value_col=lambda v: v["a"], is_sink=True)
+    )
+    t.connect("src", "op")
+    with pytest.raises(ValueError, match="key_by_value_col"):
+        t.validate()
+
+
+# ---------------------------------------------------------------------------
+# Columnar keying skips the object-dtype fallback entirely
+# ---------------------------------------------------------------------------
+
+
+def _typed_byval_topo():
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, is_source=True, schema=REC))
+    t.add_operator(
+        OperatorSpec(
+            "op",
+            _noop,
+            num_keygroups=16,
+            key_by_value=lambda v: v[0] * 3 + 1,
+            key_by_value_col=lambda v: v["a"] * np.int64(3) + np.int64(1),
+            schema=REC,
+            is_sink=True,
+        )
+    )
+    t.connect("src", "op")
+    return t
+
+
+def test_columnar_key_by_value_matches_scalar_oracle():
+    t = _typed_byval_topo()
+    values = np.array(
+        [(i, float(i) / 3) for i in range(257)], dtype=REC.value
+    )
+    keys = np.arange(257, dtype=np.int64)
+    batched = t.keygroups_of(1, keys, values)
+    scalar = np.array(
+        [t.keygroup_of(1, k, v) for k, v in zip(keys, values)], dtype=np.int64
+    )
+    assert np.array_equal(batched, scalar)
+
+
+def test_typed_batch_keying_never_boxes(monkeypatch):
+    """On a fully schema-typed batch the per-object hash fallback is dead
+    code: poison it and the batched path must not notice."""
+    import repro.engine.topology as topo_mod
+
+    t = _typed_byval_topo()
+    values = np.array([(i, 0.0) for i in range(64)], dtype=REC.value)
+    keys = np.arange(64, dtype=np.int64)
+
+    def boom(x):
+        raise AssertionError("object-dtype fallback reached on a typed batch")
+
+    monkeypatch.setattr(topo_mod, "hash_key", boom)
+    t.keygroups_of(1, keys, values)  # does not raise
+
+
+def test_typed_job_routes_no_object_arrays(monkeypatch):
+    """Job 3 typed end to end: every routed/queued value array is native
+    (the airline jobs' edges are all declared), and the per-object hash
+    never fires."""
+    import repro.engine.topology as topo_mod
+
+    real_hash = topo_mod.hash_key
+
+    def boom(x):
+        raise AssertionError(f"hash_key({x!r}) on the typed airline job")
+
+    monkeypatch.setattr(topo_mod, "hash_key", boom)
+    eng = Engine(real_job_3(keygroups_per_op=12), 4, service_rate=1e9, seed=0)
+    stream = airline_stream(StreamSpec(rate=150.0, seed=3))
+    for _ in range(6):
+        k, v, ts = next(stream)
+        eng.push_source("airline", k, v, ts)
+        for q in eng._queues:  # queued segments are native-dtype slices
+            for seg in getattr(q, "_segs", ()):
+                assert seg[1].dtype.kind != "O"
+                assert seg[0].dtype.kind != "O"
+        eng.tick()
+    monkeypatch.setattr(topo_mod, "hash_key", real_hash)
+    assert eng.metrics.typed_batches > 0
+    assert eng.metrics.processed_tuples > 0
+
+
+def test_untyped_engine_routes_zero_typed_batches():
+    eng = Engine(
+        real_job_3(keygroups_per_op=12), 4, service_rate=1e9, seed=0, use_schema=False
+    )
+    stream = airline_stream(StreamSpec(rate=150.0, seed=3))
+    for _ in range(4):
+        k, v, ts = next(stream)
+        eng.push_source("airline", k, v, ts)
+        eng.tick()
+    assert eng.metrics.typed_batches == 0
+    assert eng.metrics.processed_tuples > 0
+
+
+# ---------------------------------------------------------------------------
+# serde: raw-buffer batch codec and the migration envelope
+# ---------------------------------------------------------------------------
+
+
+def test_typed_batch_roundtrip_is_byte_exact():
+    values = np.array([(i, i * 0.25) for i in range(500)], dtype=REC.value)
+    keys = np.arange(500, dtype=np.int32)
+    ts = np.linspace(0.0, 1.0, 500)
+    out = serde.decode_batch(serde.encode_batch((keys, values, ts)))
+    for orig, dec in zip((keys, values, ts), out):
+        assert dec.dtype == orig.dtype
+        assert dec.tobytes() == orig.tobytes()
+        assert dec.flags.writeable
+
+
+def test_object_batch_roundtrip_preserves_values():
+    batch = make_batch(
+        [1, 2, 3], [(1, "x"), {"d": 2}, None], [0.0, 1.0, 2.0]
+    )
+    out = serde.decode_batch(serde.encode_batch(batch))
+    assert out[0].tolist() == [1, 2, 3]
+    assert out[1].tolist() == [(1, "x"), {"d": 2}, None]
+    assert out[2].tolist() == [0.0, 1.0, 2.0]
+
+
+def test_typed_encoding_beats_pickled_tuples():
+    """The raw-buffer encoding of a typed batch is smaller than what the
+    object path ships for the same tuples (a pickled object array of boxed
+    record tuples)."""
+    n = 4_000
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 2**40, size=n)
+    b = rng.random(n)
+    keys = rng.integers(0, 2**40, size=n)
+    ts = rng.random(n)
+    values = np.empty(n, dtype=REC.value)
+    values["a"] = a
+    values["b"] = b
+    boxed_vals = np.empty(n, dtype=object)
+    boxed_vals[:] = list(zip(a.tolist(), b.tolist()))
+    typed = serde.encode_batch((keys, values, ts))
+    boxed = serde.encode_batch((keys, boxed_vals, ts))
+    assert len(typed) < len(boxed)
+    # Raw-slice encoding: header + the exact column bytes, nothing else.
+    payload = n * (8 + values.dtype.itemsize + 8)
+    assert len(typed) < payload + 256
+
+
+def test_migration_envelope_roundtrip_and_legacy_blobs():
+    state_blob = pickle.dumps({"n": 7})
+    batch = (
+        np.arange(8, dtype=np.int64),
+        np.arange(8, dtype=np.float64),
+        np.zeros(8),
+    )
+    blob = serde.encode_migration(state_blob, [batch, batch])
+    state_out, backlog = serde.decode_migration(blob)
+    assert state_out == state_blob
+    assert len(backlog) == 2
+    assert np.array_equal(backlog[0][0], batch[0])
+    # Pre-envelope blobs (failure recovery from checkpoints) pass through.
+    assert serde.decode_migration(state_blob) == (state_blob, [])
+
+
+# ---------------------------------------------------------------------------
+# Engine serialize→install: schema-typed state and queued segments
+# ---------------------------------------------------------------------------
+
+
+def test_schema_roundtrip_identical_across_queue_impls():
+    """Mid-migration serialize blobs — σ_k plus queued segments — are
+    byte-identical on SoA and deque queues under backpressure, and both
+    engines finish the migration with identical results."""
+    engines, blobs = [], []
+    for impl in ("soa", "deque"):
+        eng = Engine(
+            make_pipeline_topo(8), 3, service_rate=90.0, seed=0, queue_impl=impl
+        )
+        rng = np.random.default_rng(11)
+        for t in range(4):  # binding budget: work stays queued
+            keys = rng.integers(0, 5_000, size=300).astype(np.int64)
+            eng.push_source("src", keys, rng.random(300), np.full(300, float(t)))
+            eng.tick()
+        kg = eng.topology.kg_base(1) + 2
+        dst = (eng.router.node_of(kg) + 1) % eng.num_nodes
+        eng.redirect(kg, dst)
+        eng.push_source(
+            "src",
+            rng.integers(0, 5_000, size=200).astype(np.int64),
+            rng.random(200),
+            np.full(200, 9.0),
+        )
+        eng.tick()
+        blob = eng.serialize(kg)
+        blobs.append(blob)
+        eng.install(kg, dst, blob)
+        for _ in range(60):
+            if not any(eng._queues):
+                break
+            eng.tick()
+        engines.append(eng)
+    assert blobs[0] == blobs[1]
+    # The envelope really carried queued segments as raw typed buffers.
+    _state, backlog = serde.decode_migration(blobs[0])
+    assert backlog, "migration moved no queued segments — vacuous round-trip"
+    assert all(b[1].dtype.kind != "O" for b in backlog)
+    a, b = engines
+    assert a.metrics.processed_tuples == b.metrics.processed_tuples
+    assert a.metrics.sink_outputs == b.metrics.sink_outputs
+    assert [s for _, s in a.store.items()] == [s for _, s in b.store.items()]
+
+
+def test_bare_blob_install_does_not_strand_backlog():
+    """Installing a checkpoint-style bare state pickle (no envelope) after a
+    redirect must still replay the queued tuples redirect extracted — the
+    engine-side backlog drains on install regardless of blob provenance."""
+    eng = Engine(make_pipeline_topo(8), 3, service_rate=1e9, seed=0)
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 5_000, size=400).astype(np.int64)
+    accepted = eng.push_source("src", keys, rng.random(400), np.zeros(400))
+    eng.tick()  # src → mid queued
+    kg = eng.topology.kg_base(1) + 1
+    dst = (eng.router.node_of(kg) + 1) % eng.num_nodes
+    eng.redirect(kg, dst)
+    assert eng._backlog.get(kg), "redirect extracted no queued work — vacuous"
+    # Failure-recovery style: state restored from a raw store pickle, the
+    # serialize() envelope never built.
+    eng.install(kg, dst, eng.store.serialize(kg))
+    assert kg not in eng._backlog
+    for _ in range(40):
+        if not any(eng._queues):
+            break
+        eng.tick()
+    mid_base = eng.topology.kg_base(1)
+    mid_total = sum(
+        eng.store.get(k).get("n", 0) for k in range(mid_base, mid_base + 8)
+    )
+    assert mid_total == accepted  # every accepted tuple processed exactly once
+
+
+def test_schema_roundtrip_matches_untyped_path():
+    """The same migration schedule driven typed and untyped lands on the
+    identical state, sinks and statistics (raw-buffer vs pickle envelopes
+    are an encoding choice, not a semantic one)."""
+    results = []
+    for use_schema in (True, False):
+        eng = Engine(
+            make_pipeline_topo(8), 3, service_rate=120.0, seed=0, use_schema=use_schema
+        )
+        rng = np.random.default_rng(13)
+        pending = []
+        for t in range(8):
+            keys = rng.integers(0, 5_000, size=250).astype(np.int64)
+            eng.push_source("src", keys, rng.random(250), np.full(250, float(t)))
+            if t in (2, 5):
+                kg = int(rng.integers(0, eng.topology.num_keygroups))
+                dstn = int(rng.integers(0, eng.num_nodes))
+                if not eng.router.is_in_flight(kg):
+                    eng.redirect(kg, dstn)
+                    pending.append(kg)
+            eng.tick()
+            if t in (4, 7):
+                for kg in pending:
+                    eng.install(kg, eng.router.node_of(kg), eng.serialize(kg))
+                pending = []
+        for _ in range(80):
+            if not any(eng._queues):
+                break
+            eng.tick()
+        snap = eng.end_period()
+        results.append(
+            (
+                eng.metrics.processed_tuples,
+                eng.metrics.sink_outputs,
+                [s for _, s in eng.store.items()],
+                snap.kg_load.tolist(),
+                snap.kg_state_bytes.tolist(),
+            )
+        )
+    assert results[0] == results[1]
