@@ -7,13 +7,21 @@ the measurement isolates the engine hot path itself: key hashing, key-group
 routing, queueing, and statistics recording.  The record-pipeline row runs
 the same shape over structured record payloads twice — schema-typed
 (columnar structured-array edges) versus the object path — so the columnar
-win past the object-array boundary is pinned by its own number.  The MILP
-row reports assembly time separately from HiGHS solve time
+win past the object-array boundary is pinned by its own number.  The
+``pipeline_rec_jit`` row additionally runs the schema-typed shape through
+the compiled tier (``use_fn_jit=True``, one batched jax.jit call per
+operator per tick): steady-state throughput is measured after a full
+warm-up pass, with first-call trace+compile seconds reported separately in
+the derived column.  The ``push_source_ingest`` row pins the batched
+ingestion boundary: structured-array stream batches convert in one C-level
+call versus the per-tuple boxed-record representation.  The MILP row
+reports assembly time separately from HiGHS solve time
 (``total − solve_seconds``) so the constraint-build cost is pinned too.
 """
 
 from __future__ import annotations
 
+import functools
 import time
 
 import numpy as np
@@ -21,7 +29,13 @@ import numpy as np
 from benchmarks.common import csv_row, synthetic_cluster
 from repro.core import solve_allocation
 from repro.engine import Engine
-from repro.engine.topology import OperatorSpec, Schema, Topology
+from repro.engine.topology import (
+    OperatorSpec,
+    Schema,
+    StateField,
+    StateSchema,
+    Topology,
+)
 
 
 def _rekey_stage(shift: int):
@@ -126,14 +140,26 @@ def measure_pipeline(
 
 
 _REC_SCHEMA = Schema.record([("a", "i8"), ("b", "f8")])
+_COUNT_STATE = StateSchema((StateField("n", "scalar", dtype=np.int64, py=int),))
 
 
+def _counting_sink_jit(state, kgs, starts, ends, keys, values, ts):
+    from repro.engine import jitexec as jx
+
+    return {"n": jx.count_runs(state["n"], kgs, starts, ends)}, None, None
+
+
+@functools.lru_cache(maxsize=None)
 def _record_stage(shift: int):
     """Record-payload stage: re-key and fold the int column into the float.
 
     The fn_seg body branches on the value representation: structured column
     arithmetic on the typed path, ``zip(*values)`` extraction on the object
-    path — the same contract the real jobs follow."""
+    path — the same contract the real jobs follow.  The fn_jit body is the
+    compiled-tier port (pure column math over the padded segment).
+    Memoized so every topology instance shares one set of body objects —
+    the jit compile cache is keyed by them.
+    """
 
     def fn(state, keys, values, ts):
         state["n"] = state.get("n", 0) + len(keys)
@@ -159,11 +185,22 @@ def _record_stage(shift: int):
             out[:] = list(zip(a.tolist(), b.tolist()))
         return (keys + shift, out, ts), None
 
-    return fn, fn_seg
+    def fn_jit(state, kgs, starts, ends, keys, values, ts):
+        from repro.engine import jitexec as jx
+
+        col = jx.count_runs(state["n"], kgs, starts, ends)
+        out = {"a": values["a"], "b": values["b"] + values["a"]}
+        return {"n": col}, (keys + shift, out, ts), None
+
+    return fn, fn_seg, fn_jit
 
 
 def make_record_pipeline_job(*, num_keygroups: int = 64, depth: int = 3) -> Topology:
-    """source → depth−1 record stages → counting sink, schema-declared."""
+    """source → depth−1 record stages → counting sink, schema-declared.
+
+    Every stage implements all three protocols; ``Engine(use_fn_jit=...)``
+    selects whether the compiled tier runs them.
+    """
     t = Topology()
     t.add_operator(
         OperatorSpec(
@@ -177,13 +214,15 @@ def make_record_pipeline_job(*, num_keygroups: int = 64, depth: int = 3) -> Topo
     prev = "src"
     for i in range(depth - 1):
         name = f"stage{i}"
-        fn, fn_seg = _record_stage(17 * (i + 1))
+        fn, fn_seg, fn_jit = _record_stage(17 * (i + 1))
         t.add_operator(
             OperatorSpec(
                 name,
                 fn,
                 num_keygroups=num_keygroups,
                 fn_seg=fn_seg,
+                fn_jit=fn_jit,
+                state_schema=_COUNT_STATE,
                 schema=_REC_SCHEMA,
                 out_schema=_REC_SCHEMA,
             )
@@ -197,6 +236,8 @@ def make_record_pipeline_job(*, num_keygroups: int = 64, depth: int = 3) -> Topo
             num_keygroups=num_keygroups,
             is_sink=True,
             fn_seg=_counting_sink_seg,
+            fn_jit=_counting_sink_jit,
+            state_schema=_COUNT_STATE,
             schema=_REC_SCHEMA,
         )
     )
@@ -245,6 +286,121 @@ def measure_record_pipeline(
     return out
 
 
+def _record_batch(batch: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 1_000_000, size=batch).astype(np.int64)
+    values = np.empty(batch, dtype=_REC_SCHEMA.value)
+    values["a"] = rng.integers(0, 1_000, size=batch)
+    values["b"] = rng.random(batch)
+    return keys, values, np.zeros(batch)
+
+
+def measure_record_pipeline_jit(
+    *,
+    batch: int = 8192,
+    ticks: int = 20,
+    num_keygroups: int = 64,
+    depth: int = 4,
+    repeats: int = 3,
+) -> dict[str, float]:
+    """Compiled tier vs numpy fn_seg on the record pipeline.
+
+    Both paths run the identical schema-typed engine configuration; the jit
+    engine takes one warm-up pass over every tick first (all padding
+    buckets compile there), so the timed pass measures steady state —
+    first-call trace+compile seconds are reported separately.
+    """
+    keys, values, ts = _record_batch(batch)
+    out: dict[str, float] = {}
+    for label, use_jit in (("jit", True), ("seg", False)):
+        best = 0.0
+        for _ in range(max(repeats, 1)):
+            topo = make_record_pipeline_job(
+                num_keygroups=num_keygroups, depth=depth
+            )
+            eng = Engine(
+                topo,
+                num_nodes=8,
+                service_rate=1e12,
+                seed=0,
+                collect_sinks=False,
+                use_fn_jit=use_jit,
+            )
+            for tick in range(ticks):  # warm-up: compiles + allocation
+                eng.push_source("src", keys, values, ts + float(tick))
+                eng.tick()
+            start = eng.metrics.processed_tuples
+            t0 = time.perf_counter()
+            for tick in range(ticks):
+                eng.push_source("src", keys, values, ts + float(tick))
+                eng.tick()
+            dt = time.perf_counter() - t0
+            best = max(best, (eng.metrics.processed_tuples - start) / dt)
+            if use_jit and eng._jit is not None:
+                # First repeat carries the real compiles; later repeats hit
+                # the process-wide cache.
+                out["compile_s"] = max(
+                    out.get("compile_s", 0.0), eng._jit.compile_seconds
+                )
+        out[label] = best
+    out["jit_vs_seg"] = out["jit"] / max(out["seg"], 1e-9)
+    out["us_per_tick"] = batch * (depth + 1) / out["jit"] * 1e6
+    return out
+
+
+def measure_push_source_ingest(
+    *, batch: int = 4096, pushes: int = 60, repeats: int = 3
+) -> dict[str, float]:
+    """Ingestion-conversion throughput of ``push_source`` on a typed source.
+
+    ``typed`` feeds the structured-array batches the vectorized stream
+    generators now emit (the declared-dtype buffer passes straight
+    through); ``boxed`` feeds the identical data as the pre-PR list of
+    python record tuples (one C-level ``np.array(list)`` conversion per
+    push, after per-tuple boxing upstream).  Same engine, same routing —
+    the delta is the ingestion boundary.
+    """
+    keys, values, ts = _record_batch(batch)
+    boxed = values.tolist()
+    t = Topology()
+    t.add_operator(
+        OperatorSpec(
+            "src", None, num_keygroups=64, is_source=True, schema=_REC_SCHEMA
+        )
+    )
+    t.add_operator(
+        OperatorSpec(
+            "sink",
+            _counting_sink,
+            num_keygroups=64,
+            is_sink=True,
+            fn_seg=_counting_sink_seg,
+            schema=_REC_SCHEMA,
+        )
+    )
+    t.connect("src", "sink")
+    out: dict[str, float] = {}
+    for label, payload in (("typed", values), ("boxed", boxed)):
+        best = 0.0
+        for _ in range(max(repeats, 1)):
+            eng = Engine(
+                t, num_nodes=4, service_rate=1e12, seed=0, collect_sinks=False
+            )
+            eng.push_source("src", keys, payload, ts)
+            eng.tick()  # drain the warm-up push
+            t0 = time.perf_counter()
+            for i in range(pushes):
+                eng.push_source("src", keys, payload, ts)
+                if i % 8 == 7:
+                    eng.tick()  # keep queues bounded, off the hot loop
+            dt = time.perf_counter() - t0
+            best = max(best, pushes * batch / dt)
+        out[label] = best
+    out["speedup"] = out["typed"] / max(out["boxed"], 1e-9)
+    out["us_per_push"] = batch / out["typed"] * 1e6
+    return out
+
+
 def measure_milp_assembly(
     *, nodes: int = 60, kgs: int = 1200, ops: int = 30, time_limit: float = 1.0
 ) -> tuple[float, float, str]:
@@ -276,6 +432,31 @@ def run(quick: bool = False) -> list[str]:
             f"tuples_per_sec={rec['typed']:.0f}"
             f";object_tuples_per_sec={rec['obj']:.0f}"
             f";columnar_vs_object={rec['speedup']:.2f}",
+        )
+    )
+    jit_batch = 4096 if quick else 8192
+    jit_ticks = 10 if quick else 20
+    jrec = measure_record_pipeline_jit(batch=jit_batch, ticks=jit_ticks)
+    rows.append(
+        csv_row(
+            f"engine_throughput/pipeline_rec_jit_b{jit_batch}",
+            jrec["us_per_tick"],
+            f"tuples_per_sec={jrec['jit']:.0f}"
+            f";seg_tuples_per_sec={jrec['seg']:.0f}"
+            f";jit_vs_seg={jrec['jit_vs_seg']:.2f}"
+            f";compile_s={jrec.get('compile_s', 0.0):.2f}",
+        )
+    )
+    ing = measure_push_source_ingest(
+        batch=2048 if quick else 4096, pushes=40 if quick else 60
+    )
+    rows.append(
+        csv_row(
+            "engine_throughput/push_source_ingest",
+            ing["us_per_push"],
+            f"tuples_per_sec={ing['typed']:.0f}"
+            f";boxed_tuples_per_sec={ing['boxed']:.0f}"
+            f";typed_vs_boxed={ing['speedup']:.2f}",
         )
     )
     assembly, solve, status = measure_milp_assembly(time_limit=0.5 if quick else 1.0)

@@ -1,12 +1,21 @@
 """Real Jobs 1–4 on the live engine.
 
-Two row families:
+Three row families:
 
 * ``real_jobs/jobN_seg_throughput`` — raw data-plane tuples/sec per job with
   the segment-vectorized operators (``fn_seg``, the production path), the
   per-run ``fn`` fallback, and the frozen pre-PR baseline; the derived
   column reports the speedups.  The gated ``us_per_call`` is the per-tick
   wall time of the fn_seg path.
+* ``real_jobs/jobN_jit_throughput`` (jobs 2–3) — the compiled tier
+  (``use_fn_jit=True``) against the numpy ``fn_seg`` path on identical
+  engines and data: steady-state only (a full warm-up pass absorbs every
+  padding-bucket compile; first-call trace+compile seconds are reported
+  separately in the derived column).  On CPU the jit tier currently runs
+  at a fraction of the hand-tuned numpy path (XLA CPU's comparison sort
+  and per-call host↔device boundary dominate — see ROADMAP); the row
+  exists to pin that ratio and catch regressions as the tier evolves
+  toward the accelerator backends it targets.
 * ``real_jobs/jobN_figNN/{albic,cola}`` — Figs 12–14 timelines of
   collocation factor, load distance, load index and migrations.
 """
@@ -237,16 +246,21 @@ _WEATHER_DICT_FIELDS = ("station", "precip", "mean_temp", "visibility", "airport
 
 def _legacy_batches(batches):
     """The same pre-generated data with airline/weather records as dicts (the
-    pre-PR payload representation).  Conversion stays outside the timed
+    pre-PR payload representation; the structured stream arrays ``tolist`` to
+    the identical record tuples).  Conversion stays outside the timed
     region."""
     out = []
     for tick in batches:
         row = []
         for op, keys, values, ts in tick:
             if op == "airline":
-                values = [dict(zip(_AIRLINE_DICT_FIELDS, v)) for v in values]
+                values = [
+                    dict(zip(_AIRLINE_DICT_FIELDS, v)) for v in values.tolist()
+                ]
             elif op == "weather":
-                values = [dict(zip(_WEATHER_DICT_FIELDS, v)) for v in values]
+                values = [
+                    dict(zip(_WEATHER_DICT_FIELDS, v)) for v in values.tolist()
+                ]
             row.append((op, keys, values, ts))
         out.append(row)
     return out
@@ -285,6 +299,17 @@ def _pregenerate(sources: tuple[str, ...], *, rate: float, ticks: int, seed: int
     if "weather" in sources:
         streams["weather"] = weather_stream(StreamSpec(rate=rate / 4, seed=seed))
     return [[(op, *next(it)) for op, it in streams.items()] for _ in range(ticks + 1)]
+
+
+def _object_batches(batches):
+    """The same data with values as boxed record-tuple lists — what the
+    ``use_schema=False`` oracle engines ingested before the streams went
+    columnar.  Decayed here, outside the timed region, so the object-path
+    rows keep measuring execution, not ingestion decay."""
+    return [
+        [(op, keys, values.tolist(), ts) for op, keys, values, ts in tick]
+        for tick in batches
+    ]
 
 
 def _run_once(
@@ -327,11 +352,12 @@ def measure_job_throughput(
     """
     topo_factory, sources = THROUGHPUT_JOBS[job_key]
     batches = _pregenerate(sources, rate=rate, ticks=ticks, seed=3)
+    obj_batches = _object_batches(batches)
     legacy_factory = LEGACY_JOBS.get(job_key)
     variants = {
         "seg": (topo_factory, batches, True, True),
-        "obj": (topo_factory, batches, True, False),
-        "fn": (topo_factory, batches, False, False),
+        "obj": (topo_factory, obj_batches, True, False),
+        "fn": (topo_factory, obj_batches, False, False),
     }
     if legacy_factory is not None:
         variants["legacy"] = (legacy_factory, _legacy_batches(batches), False, False)
@@ -357,6 +383,60 @@ def measure_job_throughput(
         "fn_speedup": best["seg"] / max(best["fn"], 1e-9),
         "seg_us_per_tick": tick_s["seg"] * 1e6,
     }
+
+
+JIT_JOBS = ("job2", "job3")
+
+
+def measure_job_jit(
+    job_key: str, *, kgs: int, rate: float, ticks: int, repeats: int = 3
+) -> dict[str, float]:
+    """Compiled tier (``use_fn_jit=True``) vs the numpy fn_seg path on one
+    flight-delay job, same engine configuration and pre-generated batches.
+
+    Each engine takes one full warm-up pass (every padding bucket compiles
+    there; tables reach steady capacity), then the timed pass measures
+    steady state — first-call trace+compile seconds are reported
+    separately, never inside the throughput number.
+    """
+    topo_factory, sources = THROUGHPUT_JOBS[job_key]
+    batches = _pregenerate(sources, rate=rate, ticks=ticks, seed=3)
+    out: dict[str, float] = {}
+    for label, use_jit in (("jit", True), ("seg", False)):
+        best = 0.0
+        tick_s = float("inf")
+        for _ in range(max(repeats, 1)):
+            eng = Engine(
+                topo_factory(kgs),
+                num_nodes=8,
+                service_rate=1e12,
+                seed=0,
+                collect_sinks=False,
+                use_fn_jit=use_jit,
+            )
+            for tick_batches in batches:  # warm-up pass: compiles, tables
+                for op, keys, values, ts in tick_batches:
+                    eng.push_source(op, keys, values, ts)
+                eng.tick()
+            start = eng.metrics.processed_tuples
+            t0 = time.perf_counter()
+            for tick_batches in batches:
+                for op, keys, values, ts in tick_batches:
+                    eng.push_source(op, keys, values, ts)
+                eng.tick()
+            dt = time.perf_counter() - t0
+            best = max(best, (eng.metrics.processed_tuples - start) / dt)
+            tick_s = min(tick_s, dt / len(batches))
+            if use_jit and eng._jit is not None:
+                # First repeat carries the real compiles; later repeats hit
+                # the process-wide cache.
+                out["compile_s"] = max(
+                    out.get("compile_s", 0.0), eng._jit.compile_seconds
+                )
+        out[label] = best
+        out[f"{label}_us_per_tick"] = tick_s * 1e6
+    out["jit_vs_seg"] = out["jit"] / max(out["seg"], 1e-9)
+    return out
 
 
 def measure_migration_roundtrip(
@@ -510,6 +590,21 @@ def run(quick: bool = False) -> list[str]:
                 f";speedup_vs_pre_pr={m['speedup']:.2f}"
                 f";columnar_vs_object={m['obj_speedup']:.2f}"
                 f";speedup_vs_fn={m['fn_speedup']:.2f}",
+            )
+        )
+    jit_rate = 4_000.0 if quick else 8_000.0
+    for job_key in JIT_JOBS:
+        m = measure_job_jit(
+            job_key, kgs=tp_kgs, rate=jit_rate, ticks=tp_ticks
+        )
+        rows.append(
+            csv_row(
+                f"real_jobs/{job_key}_jit_throughput",
+                m["jit_us_per_tick"],
+                f"tuples_per_sec={m['jit']:.0f}"
+                f";seg_tuples_per_sec={m['seg']:.0f}"
+                f";jit_vs_seg={m['jit_vs_seg']:.2f}"
+                f";compile_s={m.get('compile_s', 0.0):.2f}",
             )
         )
     mig_kw = dict(kgs=16, n_tuples=6_000, repeats=2) if quick else {}

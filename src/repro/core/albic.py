@@ -286,7 +286,9 @@ def albic(
                 if uj != ui:
                     pins[uj] = target
 
-        # Step 4 — solve the constrained MILP.
+        # Step 4 — solve the constrained MILP.  The rate projection feeds
+        # the balance objective itself here, not just step 3's target
+        # scoring: a surging key group weighs as next period's load.
         plan = solve_allocation(
             state,
             max_migr_cost=max_migr_cost,
@@ -295,6 +297,7 @@ def albic(
             pins=pins if pins else None,
             alpha=params.alpha,
             time_limit=params.time_limit,
+            prev_rate=prev_rate if params.use_rate_signal else None,
         )
         ld_ok = plan.status != "infeasible" and plan.load_distance <= params.max_ld
         if ld_ok or max_pl <= 0:

@@ -58,8 +58,10 @@ class AdaptationFramework:
     albic_params: AlbicParams = dataclasses.field(default_factory=AlbicParams)
     time_limit: float = 10.0
     alpha: float = 1.0
-    # Previous period's kg_tuple_rate — ALBIC's leading-load node scoring
-    # (mirrors the scalers' rate projection; see repro.core.scaling).
+    # Previous period's kg_tuple_rate — the leading-load signal: ALBIC's
+    # step-3 node scoring AND the MILP balance objective's gLoad vector
+    # project with it (mirrors the scalers' rate projection; see
+    # repro.core.scaling.rate_growth).
     _prev_rate: Optional[np.ndarray] = dataclasses.field(
         default=None, init=False, repr=False, compare=False
     )
@@ -79,6 +81,7 @@ class AdaptationFramework:
             max_migrations=self.max_migrations,
             alpha=self.alpha,
             time_limit=self.time_limit,
+            prev_rate=self._prev_rate,
         )
 
     def adapt(self, state: ClusterState) -> AdaptationResult:

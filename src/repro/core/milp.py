@@ -27,6 +27,7 @@ Generalizations carried from the paper text:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence
 
 import numpy as np
@@ -108,11 +109,20 @@ def solve_allocation(
     time_limit: float = 10.0,
     extra_resources: Optional[dict[str, tuple[np.ndarray, np.ndarray]]] = None,
     candidate_limit: Optional[int] = None,
+    prev_rate: Optional[np.ndarray] = None,
 ) -> AllocationPlan:
     """Build and solve the Table-2 MILP; return the new allocation plan.
 
     Args:
       state: current cluster snapshot (q, gLoad, kill, capacities).
+      prev_rate: previous period's per-key-group arrival rates.  When given
+        (and the snapshot carries ``kg_tuple_rate``), the gLoad vector the
+        balance objective optimizes is *projected one period ahead* by the
+        clipped rate-growth ratios (``repro.core.scaling.rate_growth``) —
+        a key group whose arrivals are surging weighs as the load it is
+        about to impose, so the solver rebalances one period before the
+        measured loads would force it.  The reported ``load_distance`` stays
+        measured (it scores the plan against today's loads).
       max_migr_cost: budget on Σ mc_k of migrated key groups (paper default).
       max_migrations: alternative budget on the *count* of migrated key
         groups (used for the Flux comparison, §5.2.1).  Exactly one of the two
@@ -137,7 +147,25 @@ def solve_allocation(
     unit_list = _units_or_singletons(g, units)
     nu = len(unit_list)
     mc = state.migration_costs(alpha)
-    mean = state.mean_load()
+    # Effective gLoad: measured, or rate-projected when the leading signal
+    # is available — the projection only ever raises loads, so it can move
+    # a surge early but never hides one.
+    kg_load = state.kg_load
+    if prev_rate is not None:
+        from repro.core.scaling import rate_growth
+
+        growth = rate_growth(state, prev_rate)
+        if growth is not None:
+            kg_load = kg_load * growth
+    node_loads = (
+        np.bincount(state.alloc, weights=kg_load, minlength=n) / state.capacity
+    )
+    a_live = np.where(state.alive & ~state.kill)[0]
+    mean = (
+        math.ceil(float(node_loads[state.alive].sum()) / len(a_live))
+        if len(a_live)
+        else 0.0
+    )
     live = state.alive  # dead nodes take no variables at all
     pins = pins or {}
 
@@ -160,7 +188,7 @@ def solve_allocation(
     if candidate_limit is None:
         cand[:, live_nodes] = True
     else:
-        loads = state.node_loads()
+        loads = node_loads
         a_sorted = [i for i in np.argsort(loads) if live[i] and not state.kill[i]]
         cand[:, a_sorted[: max(candidate_limit, 1)]] = True
         home_ok = valid & live[mem_alloc]
@@ -207,7 +235,7 @@ def solve_allocation(
     # (3)/(4) load bounds per node, assembled node-major from the candidate
     # mask transpose.  Heterogeneity: divide by capacity.  Nodes without any
     # candidate binary (pruned) cannot receive anything and need no bound.
-    unit_load = (state.kg_load[members] * valid).sum(axis=1)
+    unit_load = (kg_load[members] * valid).sum(axis=1)
     iT, uT = np.nonzero(cand.T)
     colsT = xvar[uT, iT]
     loadT = unit_load[uT] / state.capacity[iT]

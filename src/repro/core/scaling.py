@@ -57,6 +57,33 @@ class Scaler(Protocol):
 MAX_RATE_GROWTH = 4.0
 
 
+def rate_growth(
+    state: ClusterState,
+    prev_rate: Optional[np.ndarray],
+    *,
+    max_growth: float = MAX_RATE_GROWTH,
+    min_rate: float = 0.5,
+) -> Optional[np.ndarray]:
+    """Per-key-group arrival-rate growth ratios versus the previous period.
+
+    Clipped to ``[1, max_growth]``; key groups below ``min_rate``
+    tuples/tick previously stay at 1 — their ratios are noise.  Returns
+    None when rates are unavailable for either period.  This is the shared
+    leading-load signal: the scalers and ALBIC's step-3 scoring project
+    node loads with it, and :func:`repro.core.milp.solve_allocation` scales
+    its gLoad vector by it so the balance objective itself anticipates the
+    surge.
+    """
+    cur = state.kg_tuple_rate
+    if cur is None or prev_rate is None or len(prev_rate) != len(cur):
+        return None
+    growth = np.ones_like(cur)
+    meaningful = prev_rate >= min_rate
+    growth[meaningful] = cur[meaningful] / prev_rate[meaningful]
+    np.clip(growth, 1.0, max_growth, out=growth)
+    return growth
+
+
 def projected_loads(
     state: ClusterState,
     alloc: np.ndarray,
@@ -67,19 +94,15 @@ def projected_loads(
 ) -> Optional[np.ndarray]:
     """Planned node loads one period ahead, using arrival-rate growth.
 
-    Each key group's measured ``gLoad`` is scaled by the growth ratio of its
-    arrival rate versus the previous period (clipped to ``[1, max_growth]``;
-    key groups below ``min_rate`` tuples/tick previously are left unscaled —
-    their ratios are noise).  Returns None when rates are unavailable for
+    Each key group's measured ``gLoad`` is scaled by its
+    :func:`rate_growth` ratio.  Returns None when rates are unavailable for
     either period, so callers fall back to utilization-only behaviour.
     """
-    cur = state.kg_tuple_rate
-    if cur is None or prev_rate is None or len(prev_rate) != len(cur):
+    growth = rate_growth(
+        state, prev_rate, max_growth=max_growth, min_rate=min_rate
+    )
+    if growth is None:
         return None
-    growth = np.ones_like(cur)
-    meaningful = prev_rate >= min_rate
-    growth[meaningful] = cur[meaningful] / prev_rate[meaningful]
-    np.clip(growth, 1.0, max_growth, out=growth)
     raw = np.bincount(alloc, weights=state.kg_load * growth, minlength=state.num_nodes)
     return raw / state.capacity
 

@@ -13,12 +13,17 @@ Job 3  job 2 + RouteDelay(origin→dest)                    (different key — t
 Job 4  job 3 + weather → RainScore → join(route × rainscore) → courier
        efficiency → store (periodic DB writes modelled as a sink)
 
-Every operator implements *both* execution protocols:
+Every operator implements *both* interpreted execution protocols:
 
 * the per-run ``fn`` — the semantic oracle, executed per (key group, batch);
 * the segment-vectorized ``fn_seg`` — one call per (node, operator) per tick
   covering every key group as whole-segment array operations (vectorized
-  geohash bisection, segment-reduced running sums, masked join/rainscore).
+  geohash bisection, segment-reduced running sums, masked join/rainscore);
+
+and the flight-delay operators of jobs 2–3 (extract / sumdelay /
+routedelay — pure integer/float column math) additionally implement the
+compiled tier ``fn_jit`` with declared ``StateSchema`` keyed-accumulator
+state (see :mod:`repro.engine.jitexec` and docs/operator_authoring.md).
 
 ``fn_seg`` is required to be bit-identical to running ``fn`` run by run:
 same emitted tuples in the same order, same per-key-group state including
@@ -47,7 +52,13 @@ from __future__ import annotations
 import numpy as np
 
 from repro.data import synthetic
-from repro.engine.topology import OperatorSpec, Schema, Topology
+from repro.engine.topology import (
+    OperatorSpec,
+    Schema,
+    StateField,
+    StateSchema,
+    Topology,
+)
 
 # --------------------------------------------------------------------------
 # Shared operator bodies (state dicts are σ_k — everything must live there).
@@ -650,6 +661,108 @@ def _route_delay_seg(store, kgs, starts, ends, keys, values, ts):
     return (out_keys, out_vals, ts), None
 
 
+# --------------------------------------------------------------------------
+# Compiled tier (OperatorSpec.fn_jit) for the flight-delay operators — pure
+# integer/float column math, executed by repro.engine.jitexec as one jax.jit
+# call per (node, operator) segment.  Bodies are module-level so every
+# topology instance shares one compile cache; jax is imported lazily inside
+# them (only engines with use_fn_jit=True ever trace these).
+#
+# State lives in declared StateSchema columns: the (airplane, year) and
+# (origin, dest) running sums are keyed-accumulator tables whose int64
+# codes refine the partition key (equal codes ⇒ equal key group), with
+# key_encode/key_decode converting to the oracle dicts' tuple keys.
+# --------------------------------------------------------------------------
+
+
+def _extract_delay_jit(state, kgs, starts, ends, keys, values, ts):
+    out = {
+        "plane": values["plane"],
+        "delay": values["dep_delay"] + values["arr_delay"],
+        "year": values["year"],
+        "origin": values["origin"],
+        "dest": values["dest"],
+    }
+    return state, (values["plane"], out, ts), None
+
+
+def _sum_delay_jit(state, kgs, starts, ends, keys, values, ts):
+    import jax.numpy as jnp
+
+    from repro.engine import jitexec as jx
+
+    planes, years, delays = values["plane"], values["year"], values["delay"]
+    nb = planes.shape[0]
+    codes = (planes << jnp.int64(32)) | years
+    kg = kgs[jx.run_of_tuples(ends, nb)]
+    valid = jx.tuple_valid(starts, ends, nb)
+    table, running = jx.keyed_running_sum(
+        state["sums"], codes, kg, delays, valid
+    )
+    return {"sums": table}, (planes, {"plane": planes, "sum": running}, ts), None
+
+
+def _route_delay_jit(state, kgs, starts, ends, keys, values, ts):
+    import jax.numpy as jnp
+
+    from repro.engine import jitexec as jx
+
+    na = synthetic.num_airports()
+    origins, dests, delays = values["origin"], values["dest"], values["delay"]
+    nb = origins.shape[0]
+    codes = origins * jnp.int64(na) + dests
+    kg = kgs[jx.run_of_tuples(ends, nb)]
+    valid = jx.tuple_valid(starts, ends, nb)
+    table, running = jx.keyed_running_sum(
+        state["route_sums"], codes, kg, delays, valid
+    )
+    out = {"origin": origins, "dest": dests, "sum": running, "delay": delays}
+    return {"route_sums": table}, (codes, out, ts), None
+
+
+def _plane_year_encode(key: tuple) -> int:
+    return (int(key[0]) << 32) | int(key[1])
+
+
+def _plane_year_decode(code: int) -> tuple:
+    return (code >> 32, code & 0xFFFFFFFF)
+
+
+def _route_encode(key: tuple) -> int:
+    return int(key[0]) * synthetic.num_airports() + int(key[1])
+
+
+def _route_decode(code: int) -> tuple:
+    na = synthetic.num_airports()
+    return (code // na, code % na)
+
+
+SUM_STATE = StateSchema(
+    (
+        StateField(
+            "sums",
+            "table",
+            dtype=np.float64,
+            py=float,
+            key_encode=_plane_year_encode,
+            key_decode=_plane_year_decode,
+        ),
+    )
+)
+ROUTE_STATE = StateSchema(
+    (
+        StateField(
+            "route_sums",
+            "table",
+            dtype=np.float64,
+            py=float,
+            key_encode=_route_encode,
+            key_decode=_route_decode,
+        ),
+    )
+)
+
+
 def real_job_2(*, keygroups_per_op: int = 100) -> Topology:
     t = Topology()
     t.add_operator(
@@ -672,6 +785,7 @@ def real_job_2(*, keygroups_per_op: int = 100) -> Topology:
             _extract_delay,
             num_keygroups=keygroups_per_op,
             fn_seg=_extract_delay_seg,
+            fn_jit=_extract_delay_jit,
             schema=AIRLINE_SCHEMA,
             out_schema=EXTRACT_SCHEMA,
         )
@@ -683,7 +797,12 @@ def real_job_2(*, keygroups_per_op: int = 100) -> Topology:
             num_keygroups=keygroups_per_op,
             is_sink=True,
             fn_seg=_sum_delay_seg,
+            fn_jit=_sum_delay_jit,
+            state_schema=SUM_STATE,
             schema=EXTRACT_SCHEMA,
+            # Sinks have no downstream edge to validate, but the jit tier
+            # packs its output columns through the declared record layout.
+            out_schema=SUM_OUT_SCHEMA,
         )
     )
     t.connect("airline", "extract")
@@ -710,6 +829,8 @@ def real_job_3(*, keygroups_per_op: int = 100) -> Topology:
             key_by_value_col=lambda v: v["origin"] * np.int64(na) + v["dest"],
             is_sink=True,
             fn_seg=_route_delay_seg,
+            fn_jit=_route_delay_jit,
+            state_schema=ROUTE_STATE,
             schema=EXTRACT_SCHEMA,
             out_schema=ROUTE_SCHEMA,
         )

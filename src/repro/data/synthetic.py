@@ -6,6 +6,14 @@ popularity (Zipf — Wikipedia article edits famously follow one), diurnal rate
 fluctuation, and the attribute schemas the paper's jobs consume.  Each
 generator yields (keys, values, ts) batches suitable for
 :meth:`repro.engine.Engine.push_source`.
+
+Values are emitted as **native structured arrays** (the declared ingestion
+schema's dtype), generated column-wise: the whole batch is one C-level
+assembly, so ``push_source`` on a schema-typed source passes the buffer
+straight through — no per-tuple record boxing anywhere on the ingestion
+edge (the last boxed boundary the ROADMAP named).  Untyped consumers are
+unaffected: a structured array ``tolist()``s to the identical record
+tuples the old per-tuple generators produced.
 """
 
 from __future__ import annotations
@@ -53,15 +61,11 @@ def wiki_edit_stream(
     while True:
         n = _rate_at(spec, tick, rng)
         arts = np.minimum(rng.zipf(zipf_a, size=n) - 1, num_articles - 1)
-        values = [
-            (
-                int(a),
-                int(rng.integers(0, 100_000)),
-                int(rng.integers(-500, 2_000)),
-                bool(rng.random() < 0.3),
-            )
-            for a in arts
-        ]
+        values = np.empty(n, dtype=WIKI_DTYPE)
+        values["article"] = arts
+        values["editor"] = rng.integers(0, 100_000, size=n)
+        values["bytes_changed"] = rng.integers(-500, 2_000, size=n)
+        values["minor"] = rng.random(n) < 0.3
         ts = np.full(n, float(tick))
         yield arts.astype(np.int64), values, ts
         tick += 1
@@ -102,19 +106,13 @@ def airline_stream(
         planes = np.minimum(rng.zipf(1.2, size=n) - 1, _NUM_AIRPLANES - 1)
         origins = rng.integers(0, _NUM_AIRPORTS, size=n)
         jump = 1 + rng.integers(0, _NUM_AIRPORTS - 1, size=n)
-        dests = (origins + jump) % _NUM_AIRPORTS
-        year = int(2004 + (tick // 500) % 10)
-        values = [
-            (
-                int(p),
-                int(o),
-                int(d),
-                float(max(rng.normal(8.0, 20.0), -10.0)),
-                float(max(rng.normal(6.0, 25.0), -20.0)),
-                year,
-            )
-            for p, o, d in zip(planes, origins, dests)
-        ]
+        values = np.empty(n, dtype=AIRLINE_DTYPE)
+        values["plane"] = planes
+        values["origin"] = origins
+        values["dest"] = (origins + jump) % _NUM_AIRPORTS
+        values["dep_delay"] = np.maximum(rng.normal(8.0, 20.0, size=n), -10.0)
+        values["arr_delay"] = np.maximum(rng.normal(6.0, 25.0, size=n), -20.0)
+        values["year"] = 2004 + (tick // 500) % 10
         ts = np.full(n, float(tick))
         yield planes.astype(np.int64), values, ts
         tick += 1
@@ -150,16 +148,12 @@ def weather_stream(
     while True:
         n = _rate_at(spec, tick, rng)
         stations = rng.integers(0, _NUM_STATIONS, size=n)
-        values = [
-            (
-                int(s),
-                float(np.clip(rng.exponential(2.0), 0.0, _MAX_PRECIP)),
-                float(rng.normal(12.0, 10.0)),
-                float(np.clip(rng.normal(9.0, 3.0), 0.0, 20.0)),
-                int(s % _NUM_AIRPORTS),
-            )
-            for s in stations
-        ]
+        values = np.empty(n, dtype=WEATHER_DTYPE)
+        values["station"] = stations
+        values["precip"] = np.clip(rng.exponential(2.0, size=n), 0.0, _MAX_PRECIP)
+        values["mean_temp"] = rng.normal(12.0, 10.0, size=n)
+        values["visibility"] = np.clip(rng.normal(9.0, 3.0, size=n), 0.0, 20.0)
+        values["airport"] = stations % _NUM_AIRPORTS
         ts = np.full(n, float(tick))
         yield stations.astype(np.int64), values, ts
         tick += 1

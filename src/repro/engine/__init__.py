@@ -7,7 +7,13 @@ maintains SPL statistics, and exposes direct state migration — everything
 :mod:`repro.core` needs to run Algorithm 1 against a live job.
 """
 
-from repro.engine.topology import OperatorSpec, Schema, Topology
+from repro.engine.topology import (
+    OperatorSpec,
+    Schema,
+    StateField,
+    StateSchema,
+    Topology,
+)
 from repro.engine.state import KeyedStore
 from repro.engine.router import Router
 from repro.engine.executor import Engine, EngineMetrics
@@ -25,5 +31,7 @@ __all__ = [
     "Router",
     "Schema",
     "SoAWorkQueue",
+    "StateField",
+    "StateSchema",
     "Topology",
 ]

@@ -25,6 +25,13 @@ never as per-tuple Python objects:
   for that operator in a tick, with the per-run ``fn`` as the required
   fallback for non-contiguous segments (in-flight migrations, partial
   budgets) and as the semantic oracle the equivalence tests pin against;
+* operators may additionally implement the compiled tier
+  (``OperatorSpec.fn_jit`` + declared ``StateSchema``, enabled with
+  ``use_fn_jit=True``): contiguous whole-budget segments defer into one
+  batched ``jax.jit`` call per operator per tick over device state columns
+  (:mod:`repro.engine.jitexec`; placeholder cells keep output order
+  identical to inline execution, and per-run fallbacks force-flush the
+  deferred batch first so state updates stay in drain order);
 * a tick is a BSP superstep: outputs produced while draining are accumulated
   per downstream operator and routed once, at the end of the tick, as one
   coalesced batch carrying per-tuple source attribution — so each (operator,
@@ -140,6 +147,13 @@ class EngineMetrics:
     # Batches routed to a schema-declared operator as native-dtype arrays
     # (0 with use_schema=False — the all-object oracle configuration).
     typed_batches: int = 0
+    # Compiled-tier usage: fn_jit segment executions, tuples through them,
+    # and actual program compilations (one per (operator, padding bucket) —
+    # O(#buckets) across a run, never O(#ticks); pinned by
+    # tests/test_jitexec.py).
+    jit_calls: int = 0
+    jit_tuples: int = 0
+    jit_compiles: int = 0
     # Materialized sink tuples; only populated when the engine was built with
     # ``collect_sinks=True`` (unbounded growth otherwise — benchmarks disable
     # it so they measure the data plane, not list appends).
@@ -208,6 +222,9 @@ class Engine:
         kernel_stats: Optional[bool] = None,
         use_fn_seg: bool = True,
         use_schema: bool = True,
+        use_fn_jit: bool = False,
+        jit_mesh=None,
+        jit_mesh_axis: Optional[str] = None,
     ) -> None:
         topology.validate()
         self.topology = topology
@@ -253,6 +270,41 @@ class Engine:
         self._op_schema: list[Optional[Schema]] = [
             o.schema if use_schema else None for o in topology.operators
         ]
+        # use_fn_jit=True enables the compiled tier: operators declaring
+        # fn_jit execute their contiguous whole-budget segments through
+        # repro.engine.jitexec (one jax.jit call per node/operator, state in
+        # device columns); everything else — and every fallback path —
+        # behaves exactly as without the flag.  The tier needs native column
+        # payloads and the SoA drain, hence the config requirements.
+        if use_fn_jit and (queue_impl != "soa" or not use_schema):
+            raise ValueError(
+                "use_fn_jit requires queue_impl='soa' and use_schema=True "
+                "(the jit tier executes native columns over SoA segments)"
+            )
+        self.use_fn_jit = use_fn_jit
+        self._op_fn_jit = [
+            o.fn_jit if use_fn_jit else None for o in topology.operators
+        ]
+        self._jit = None  # JitRuntime, built on first fn_jit execution
+        self._jit_mesh = jit_mesh
+        self._jit_mesh_axis = jit_mesh_axis
+        self._jit_on = any(f is not None for f in self._op_fn_jit)
+        if self._jit_on:
+            # Importing jitexec enables jax x64 process-wide (the tier's f8
+            # columns must not silently truncate).  Import it NOW, at engine
+            # construction — the explicit use_fn_jit=True opt-in — so the
+            # dtype-semantics flip happens at a predictable time instead of
+            # whenever the first segment hits the compiled tier mid-run.
+            from repro.engine import jitexec  # noqa: F401
+        # Deferred jit segments of the current tick: the drain collects
+        # (accounting immediately, placeholder cells hold output order) and
+        # one batched jax.jit call per operator executes at end of tick —
+        # the BSP superstep makes the deferral invisible (outputs only ever
+        # route at _flush_outputs), and a per-run fallback on a jit operator
+        # force-flushes first so state updates stay in drain order.
+        self._jit_batch: list = []
+        self._had_sink_cells = False
+        self._sink_tail_base = 0
         # Queued backlog extracted at redirect time, shipped inside the
         # serialize() envelope (raw buffer slices for schema-typed batches).
         self._backlog: dict[int, list[Batch]] = {}
@@ -506,6 +558,9 @@ class Engine:
         service_rate = self.service_rate
         caps = self._capacity_list
         alive = self.alive.tolist()
+        jit_on = self._jit_on
+        if jit_on:
+            self._sink_tail_base = len(self.metrics.sink_outputs)
         for node, q in enumerate(self._queues):
             if not q or not alive[node]:
                 continue
@@ -514,6 +569,11 @@ class Engine:
                 self._drain_soa(node, q, budget, drained_kgs, drained_costs)
             else:
                 q.drain(budget, self._process, node, drained_kgs, drained_costs)
+        if jit_on:
+            if self._jit_batch:
+                self._flush_jit_batch()
+            if self._had_sink_cells:
+                self._expand_sink_cells()
         if drained_kgs:
             np.add.at(self._cpu_usage, drained_kgs, drained_costs)
         self._flush_outputs()
@@ -542,10 +602,12 @@ class Engine:
         seg_calls = seg_tuples = 0
         kg_append, cost_append = out_kgs.append, out_costs.append
         op_fn_seg = self._op_fn_seg
+        op_fn_jit = self._op_fn_jit
         while segs and budget > 0:
             seg = segs[0]
             keys, values, ts, op, kgs, starts, ends, costs, cur, contig = seg
             fn = op_fn[op]
+            fjit = op_fn_jit[op]
             term = terminal[op]
             downs = downstream[op]
             nruns = len(kgs)
@@ -563,15 +625,54 @@ class Engine:
                     budget -= c
                     qcost -= c
                 fseg = op_fn_seg[op]
-                if contig and (fn is None or fseg is not None):
+                if contig and (
+                    fn is None or fseg is not None or fjit is not None
+                ):
                     # Contiguous segment: the runs tile one slice [A:Z) of
                     # the shared arrays, so the whole segment moves with a
                     # handful of array ops — pass-through forwards the slice
-                    # as-is; fn_seg ops transform it in one vectorized call.
+                    # as-is; fn_seg ops transform it in one vectorized call;
+                    # fn_jit ops defer to the compiled tier's batched
+                    # end-of-tick call (placeholder cells keep output order).
                     rk, rs, re_ = kgs[cur:], starts[cur:], ends[cur:]
                     a0, zn = rs[0], re_[-1]
                     n_seg = zn - a0
                     processed += n_seg
+                    if fjit is not None and fn is not None:
+                        rel_s = [a - a0 for a in rs] if a0 else rs
+                        rel_e = [z - a0 for z in re_] if a0 else re_
+                        if term:
+                            cell = None
+                            if collect:
+                                cell = []
+                                sink_outputs.append(cell)
+                                self._had_sink_cells = True
+                        else:
+                            cell = []
+                            for dop in downs:
+                                try:
+                                    pending[dop].append(cell)
+                                except KeyError:
+                                    pending[dop] = [cell]
+                        self._jit_batch.append(
+                            (
+                                op,
+                                rk,
+                                rel_s,
+                                rel_e,
+                                keys[a0:zn],
+                                values[a0:zn],
+                                ts[a0:zn],
+                                cell,
+                                term,
+                                node,
+                                downs,
+                            )
+                        )
+                        segs.popleft()
+                        if budget <= 0:
+                            break
+                        continue
                     if fn is None:
                         outputs = (keys[a0:zn], values[a0:zn], ts[a0:zn])
                         out_lens = None
@@ -637,6 +738,15 @@ class Engine:
                     if fn is None:
                         out = (k, v, t)
                     else:
+                        if fjit is not None:
+                            # Per-run fallback on a jit-tier operator: apply
+                            # deferred jit segments first (state updates stay
+                            # in drain order), then pull the key group's
+                            # device columns into the dict.
+                            if self._jit_batch:
+                                self._flush_jit_batch()
+                            if self._jit is not None:
+                                self._jit.ensure_dict(kg)
                         state = store[kg]
                         state, outputs = fn(state, k, v, t)
                         store[kg] = state
@@ -686,6 +796,11 @@ class Engine:
                 if fn is None:  # source pass-through: forward the batch as-is
                     out = (k, v, t)
                 else:
+                    if fjit is not None:
+                        if self._jit_batch:
+                            self._flush_jit_batch()
+                        if self._jit is not None:
+                            self._jit.ensure_dict(kg)
                     state = store[kg]
                     state, outputs = fn(state, k, v, t)
                     store[kg] = state
@@ -732,6 +847,136 @@ class Engine:
         metrics.sink_tuples += sink_n
         metrics.seg_calls += seg_calls
         metrics.seg_tuples += seg_tuples
+
+    def _flush_jit_batch(self) -> None:
+        """Execute the tick's deferred jit segments, one call per operator.
+
+        Segments collected across nodes concatenate into a single padded
+        program execution per operator (runs stay in drain order; key groups
+        are node-disjoint, so state updates commute across the concat), and
+        the results are split back into the placeholder cells the drain left
+        in ``_out_pending`` / ``sink_outputs`` — output order is therefore
+        exactly what per-segment inline execution would have produced.
+        """
+        batch, self._jit_batch = self._jit_batch, []
+        by_op: dict[int, list] = {}
+        for entry in batch:
+            try:
+                by_op[entry[0]].append(entry)
+            except KeyError:
+                by_op[entry[0]] = [entry]
+        metrics = self.metrics
+        for op, entries in by_op.items():
+            if len(entries) == 1:
+                (_, rk, rs, re_, keys, values, ts, _, _, _, _) = entries[0]
+                outputs, out_lens = self._jit_exec(
+                    op, rk, rs, re_, keys, values, ts
+                )
+                parts = [(entries[0], outputs, out_lens)]
+            else:
+                cat_k = np.concatenate([e[4] for e in entries])
+                cat_v = np.concatenate([e[5] for e in entries])
+                cat_t = np.concatenate([e[6] for e in entries])
+                rk, rs, re_ = [], [], []
+                off = 0
+                bounds = []
+                for e in entries:
+                    rk.extend(e[1])
+                    rs.extend(a + off for a in e[2])
+                    re_.extend(z + off for z in e[3])
+                    bounds.append((len(e[1]), len(e[4])))
+                    off += len(e[4])
+                outputs, out_lens = self._jit_exec(
+                    op, rk, rs, re_, cat_k, cat_v, cat_t
+                )
+                # Split the concatenated output back per source segment.
+                parts = []
+                run0 = 0
+                pos = 0
+                for e, (nrun, n_in) in zip(entries, bounds):
+                    if outputs is None:
+                        parts.append((e, None, None))
+                    elif out_lens is None:
+                        parts.append(
+                            (
+                                e,
+                                tuple(o[pos : pos + n_in] for o in outputs),
+                                None,
+                            )
+                        )
+                        pos += n_in
+                    else:
+                        lens_e = out_lens[run0 : run0 + nrun]
+                        n_out = int(sum(lens_e))
+                        parts.append(
+                            (
+                                e,
+                                tuple(o[pos : pos + n_out] for o in outputs),
+                                lens_e,
+                            )
+                        )
+                        pos += n_out
+                    run0 += nrun
+            for e, outputs, out_lens in parts:
+                (_, rk, rs, re_, _, _, _, cell, term, node, downs) = e
+                if outputs is None:
+                    continue
+                n_out = len(outputs[0])
+                if n_out == 0:
+                    continue
+                metrics.emitted_tuples += n_out
+                if term:
+                    metrics.sink_tuples += n_out
+                    if cell is not None:
+                        cell.extend(
+                            zip(
+                                outputs[0].tolist(),
+                                outputs[1].tolist(),
+                                outputs[2].tolist(),
+                            )
+                        )
+                else:
+                    if out_lens is None:
+                        lens = np.subtract(re_, rs)
+                    else:
+                        lens = np.asarray(out_lens, dtype=np.int64)
+                    kg_arr = np.repeat(np.asarray(rk, dtype=np.int64), lens)
+                    cell.append((outputs, kg_arr, node))
+
+    def _expand_sink_cells(self) -> None:
+        """Flatten this tick's sink placeholder cells in place (cells were
+        appended in drain order; only the tick's tail is rebuilt)."""
+        self._had_sink_cells = False
+        outs = self.metrics.sink_outputs
+        base = self._sink_tail_base
+        tail = outs[base:]
+        del outs[base:]
+        for item in tail:
+            if type(item) is list:
+                outs.extend(item)
+            else:
+                outs.append(item)
+
+    def _jit_exec(self, op, kgs, starts, ends, keys, values, ts):
+        """Hand one contiguous segment to the compiled tier (lazy runtime).
+
+        The JitRuntime (and jax itself) is only imported/constructed when an
+        fn_jit operator actually executes, so engines that never take the
+        jit path pay nothing for it.
+        """
+        jrt = self._jit
+        if jrt is None:
+            from repro.engine.jitexec import JitRuntime
+
+            jrt = self._jit = JitRuntime(
+                self.topology,
+                self.store,
+                self.metrics,
+                self._kg_op,
+                mesh=self._jit_mesh,
+                mesh_axis=self._jit_mesh_axis,
+            )
+        return jrt.execute(op, kgs, starts, ends, keys, values, ts)
 
     def _process(self, node: int, op: int, kg: int, keys, values, ts) -> None:
         metrics = self.metrics
@@ -809,8 +1054,17 @@ class Engine:
             return
         pending, self._out_pending = self._out_pending, {}
         op_schema = self._op_schema
+        jit_on = self._jit_on
         for dop in sorted(pending):
             items = pending[dop]
+            if jit_on:
+                # Expand jit placeholder cells (a cell is a list holding the
+                # segment's delivered item, empty when it emitted nothing).
+                items = [
+                    x
+                    for it in items
+                    for x in (it if type(it) is list else (it,))
+                ]
             if not items:  # list pre-bound by the drain fast path, unused
                 continue
             schema = op_schema[dop]
@@ -847,6 +1101,11 @@ class Engine:
     # ------------------------------------------------------- SPL statistics
     def end_period(self) -> ClusterState:
         """Fold the SPL window into a ClusterState snapshot and reset it."""
+        if self._jit is not None:
+            # Statistics (and any external reader of the store) see dicts:
+            # refresh every column-authoritative key group before |σ_k| is
+            # re-measured below.
+            self._jit.sync_store()
         ticks = max(self._ticks_this_period, 1)
         scale = 100.0 / (ticks * self.service_rate)  # → % of a reference node
         kg_load, out_pairs, _resource = self.window.fold(scale_to_percent=scale)
@@ -885,12 +1144,20 @@ class Engine:
             self._backlog.setdefault(keygroup, []).extend(batches)
 
     def serialize(self, keygroup: int) -> bytes:
+        if self._jit is not None:
+            # σ_k may live in jit-tier device columns: materialize the dict
+            # (insertion order included) so the blob is the oracle's pickle.
+            self._jit.ensure_dict(keygroup)
         backlog = self._backlog.pop(keygroup, [])
         return serde.encode_migration(self.store.serialize(keygroup), backlog)
 
     def install(self, keygroup: int, dst: int, blob: bytes) -> None:
         state_blob, backlog = serde.decode_migration(blob)
         self.store.deserialize(keygroup, state_blob)
+        if self._jit is not None:
+            # The installed dict is now authoritative; stale device columns
+            # will be re-pushed on the key group's next jit execution.
+            self._jit.invalidate(keygroup)
         op = int(self._kg_op[keygroup])
         # Any backlog still parked engine-side replays too: a blob that did
         # not come from serialize() (bare checkpoint pickles in failure

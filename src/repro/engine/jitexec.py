@@ -1,0 +1,730 @@
+"""The compiled operator tier: ``fn_jit`` bodies as jitted segment programs.
+
+This module is the runtime behind ``OperatorSpec.fn_jit`` — the third
+execution tier after the per-run ``fn`` and the segment-vectorized numpy
+``fn_seg``.  A jit-tier operator's body is a *pure JAX function over column
+arrays*; the runtime
+
+* keeps the operator's declared :class:`~repro.engine.topology.StateSchema`
+  in preallocated **device columns** — per-key-group scalar vectors and
+  keyed-accumulator tables — instead of the python ``store`` dicts,
+* compiles each body **once per (operator, padding bucket)**: segment tuple
+  counts and run counts are padded to power-of-two buckets, so a long run
+  with varied batch sizes compiles O(#buckets) programs, not O(#ticks)
+  (``EngineMetrics.jit_compiles`` pins this),
+* executes a node's whole drained contiguous slice in **one ``jax.jit``
+  call** per (node, operator) with the state pytree donated (tables update
+  in place), and
+* when a mesh is configured, runs the same body as **one ``shard_map``
+  shard per node-axis device**: the segment's runs are sharded across the
+  axis (run → key group → disjoint state rows), per-shard state/output
+  deltas are merged with ``psum``-of-masked selects, so the merged result
+  is bit-identical to the unsharded call.
+
+Coherence with the interpreted tiers: the python ``store`` dict and the
+device columns hold the *same* state in two layouts.  Exactly one of them is
+authoritative per key group at any time.  A jit call flips its key groups to
+column-authoritative (pushing any dict-authoritative state in first); the
+engine's per-run ``fn`` fallbacks (partial budgets, non-contiguous
+migration rebuilds) and the migration codec call :meth:`JitRuntime.ensure_dict`
+first, which materializes the columns back into the dict — including the
+keyed tables' **insertion order** (each entry carries its insertion sequence
+number) — so σ_k pickles, ``kg_state_bytes`` and the conformance state
+comparison see exactly the dict the per-run oracle would have produced.
+
+Float-tolerance policy: integer columns, single float operations and the
+first addend of every running sum are bit-exact; *multi-term float
+reductions* (``jnp.cumsum`` inside :func:`keyed_running_sum`) may diverge
+from the oracle's strict left-to-right association in the last bits — the
+conformance harness compares the jit configuration with a documented
+``rtol=1e-9`` on floats for exactly this reason (see tests/conformance.py
+and docs/operator_authoring.md).
+"""
+
+from __future__ import annotations
+
+import time
+import weakref
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+
+# The jit tier carries the engine's float64/int64 payloads through XLA
+# unchanged; without x64 every f8 column would silently truncate to f32 and
+# no tolerance policy could be honest about it.  NOTE: this flips dtype
+# semantics PROCESS-WIDE for all jax code — which is why the engine imports
+# this module eagerly at ``Engine(use_fn_jit=True)`` construction (the
+# explicit opt-in), never lazily mid-run, and why in-repo kernels pin their
+# accumulator dtypes (see keygroup_partition's histogram sum).
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402  (after the x64 flag, deliberately)
+
+from repro.engine.topology import StateField, Topology  # noqa: E402
+
+# Sentinel for unused table slots and padding tuple codes.  Real codes must
+# be < EMPTY_CODE (any keyed state built from finite attributes is).
+EMPTY_CODE = np.iinfo(np.int64).max
+
+_MIN_TUPLE_BUCKET = 16
+_MIN_RUN_BUCKET = 4
+_MIN_TABLE_CAP = 64
+
+
+def _bucket(x: int, lo: int) -> int:
+    b = lo
+    while b < x:
+        b <<= 1
+    return b
+
+
+class TableState(NamedTuple):
+    """One keyed-accumulator state field: a flat append-ordered table.
+
+    Entries of *all* key groups share one capacity-``S`` slab (codes are
+    globally unique — a code determines its key group — so no per-key-group
+    partitioning is needed): ``codes``/``vals``/``owner`` hold the entries
+    in insertion order (``cnt`` used, :data:`EMPTY_CODE` beyond), ``seq``
+    carries ``epoch << 32 | first_position`` — monotone in insertion order
+    across calls, which is what reproduces the oracle dicts' insertion
+    order without ranking new entries per key group — and ``perm`` is the
+    code-sorted permutation of the slab, maintained *incrementally* by the
+    merge in :func:`keyed_running_sum` (new codes arrive pre-sorted from
+    the segment sort, so keeping the view sorted costs searchsorted +
+    prefix sums, never a table-sized sort).
+    """
+
+    codes: jax.Array  # (S,) int64, insertion order
+    vals: jax.Array  # (S,) value dtype
+    seq: jax.Array  # (S,) int64: epoch << 32 | first position
+    owner: jax.Array  # (S,) int32 key group of each entry
+    perm: jax.Array  # (S,) int32: slab indices in code-sorted order
+    cnt: jax.Array  # () int32 used entries
+    epoch: jax.Array  # () int64 call counter (seq high bits)
+
+
+# --------------------------------------------------------------------------
+# fn_jit authoring helpers (pure JAX; shape-polymorphic over padding and
+# shard_map run-slices — validity always derives from the run bounds).
+# --------------------------------------------------------------------------
+
+
+def tuple_valid(starts: jax.Array, ends: jax.Array, nb: int) -> jax.Array:
+    """Per-position validity of the (padded) tuple arrays.
+
+    Runs tile a contiguous slice, and padding runs (``start == end`` at the
+    real tuple count) are a suffix, so the valid positions are exactly
+    ``[starts[0], ends[-1])`` — under shard_map run-sharding each shard's
+    slice of the run arrays yields exactly its own tuple range.
+    """
+    pos = jnp.arange(nb)
+    return (pos >= starts[0]) & (pos < ends[-1])
+
+
+def run_of_tuples(ends: jax.Array, nb: int) -> jax.Array:
+    """Run index per tuple position (meaningful where ``tuple_valid``)."""
+    pos = jnp.arange(nb)
+    idx = jnp.searchsorted(ends, pos, side="right")
+    return jnp.minimum(idx, ends.shape[0] - 1)
+
+
+def count_runs(col: jax.Array, kgs, starts, ends) -> jax.Array:
+    """Scalar-counter update: add each run's length to its key group's cell.
+
+    Padding runs carry ``kg == K`` (out of range → dropped) and zero length.
+    """
+    return col.at[kgs].add(
+        (ends - starts).astype(col.dtype), mode="drop"
+    )
+
+
+def keyed_running_sum(
+    table: TableState,
+    codes: jax.Array,
+    kg: jax.Array,
+    addends: jax.Array,
+    valid: jax.Array,
+) -> tuple[TableState, jax.Array]:
+    """Grouped running sums over one segment, against the keyed table.
+
+    For every tuple ``i``: looks up ``codes[i]`` in the flat table, adds the
+    within-segment prefix of its group's ``addends`` and returns the
+    per-tuple running totals; new codes are appended to the slab with
+    ``seq = epoch << 32 | first_position`` — monotone in first-occurrence
+    order, which is exactly the order the per-run oracle inserts them into
+    its dicts.  Requirements: equal codes always map to the same key group
+    (key the table by the operator's partition key), and real codes are
+    non-negative and < 2^63 − 1.
+
+    Cost: ONE stable sort of the segment (the only comparison sort — the
+    table's code-sorted view is maintained incrementally by merging the
+    segment's pre-sorted new codes: searchsorted + prefix sums), plus
+    O(segment + capacity) gathers/scatters.  The within-group prefix is
+    computed via ``jnp.cumsum`` — the one place the jit tier's floats may
+    diverge from the oracle's left-to-right association (module docstring's
+    tolerance policy); group heads take ``base + addend`` directly, so
+    singleton groups (mostly-unique keys) stay bit-exact end to end.
+    """
+    nb = codes.shape[0]
+    cap = table.codes.shape[0]
+    mcodes = jnp.where(valid, codes, EMPTY_CODE)
+    order = jnp.argsort(mcodes)  # stable: ties keep original tuple order
+    sc = mcodes[order]
+    real = sc != EMPTY_CODE
+    sk = jnp.where(real, kg[order], 0)
+    sa = jnp.where(real, addends[order], jnp.zeros((), addends.dtype))
+    head = jnp.concatenate([jnp.ones(1, bool), sc[1:] != sc[:-1]])
+    # Lookup through the maintained code-sorted view.
+    scodes = table.codes[table.perm]  # (cap,) sorted, EMPTY tail
+    pos = jnp.minimum(jnp.searchsorted(scodes, sc), cap - 1)
+    fidx = table.perm[pos].astype(jnp.int64)  # candidate slab index
+    has = (scodes[pos] == sc) & real
+    base = jnp.where(has, table.vals[fidx], jnp.zeros((), table.vals.dtype))
+    # Within-group inclusive prefix of the addends.
+    csum = jnp.cumsum(sa)
+    seg = jnp.cumsum(head) - 1  # group index per sorted position
+    gstart = (
+        jnp.zeros(nb, csum.dtype)
+        .at[jnp.where(head, seg, nb)]
+        .set(jnp.where(head, csum - sa, 0), mode="drop")
+    )
+    running_sorted = jnp.where(head, base + sa, base + (csum - gstart[seg]))
+    running = jnp.zeros(nb, running_sorted.dtype).at[order].set(running_sorted)
+    # ---- table update ----------------------------------------------------
+    tail = jnp.concatenate([head[1:], jnp.ones(1, bool)])
+    newhead = head & real & ~has
+    nc_in = jnp.cumsum(newhead.astype(jnp.int64))  # inclusive new count
+    total_new = nc_in[-1]
+    rank = nc_in - 1  # code-order rank among new codes (valid at newheads)
+    dest = table.cnt.astype(jnp.int64) + rank  # slab append position
+    # Slab index per group (existing: the hit; new: the append slot),
+    # broadcast from heads to the whole group.
+    slab_head = jnp.where(has, fidx, dest)
+    slabarr = (
+        jnp.zeros(nb, slab_head.dtype)
+        .at[jnp.where(head, seg, nb)]
+        .set(jnp.where(head, slab_head, 0), mode="drop")
+    )
+    widx_all = slabarr[seg]
+    wvalid = tail & real
+    widx = jnp.where(wvalid, widx_all, cap)  # out of range → dropped
+    codes2 = table.codes.at[widx].set(sc, mode="drop")
+    vals2 = table.vals.at[widx].set(running_sorted, mode="drop")
+    # seq/owner only change for new entries (scatter at newheads).
+    nidx = jnp.where(newhead, dest, cap)
+    seq_new = (table.epoch << jnp.int64(32)) | order
+    seq2 = table.seq.at[nidx].set(seq_new, mode="drop")
+    owner2 = table.owner.at[nidx].set(sk.astype(jnp.int32), mode="drop")
+    # Merge the pre-sorted new codes into the sorted view.  Invariant: the
+    # EMPTY tail of ``perm`` is ascending by slab index, so the entries the
+    # append consumes are exactly the FIRST ``total_new`` EMPTY pointers.
+    ncex = jnp.concatenate([jnp.zeros(1, jnp.int64), nc_in])  # exclusive
+    is_empty_old = scodes == EMPTY_CODE
+    shift_real = ncex[jnp.searchsorted(sc, scodes, side="left")]
+    jemp = jnp.cumsum(is_empty_old.astype(jnp.int64)) - 1
+    arange_cap = jnp.arange(cap)
+    oldpos = jnp.where(
+        is_empty_old,
+        jnp.where(jemp < total_new, cap, arange_cap),  # consumed → dropped
+        arange_cap + shift_real,
+    )
+    perm2 = (
+        jnp.zeros(cap, table.perm.dtype)
+        .at[oldpos]
+        .set(table.perm, mode="drop")
+    )
+    npos = jnp.where(
+        newhead, jnp.searchsorted(scodes, sc, side="left") + rank, cap
+    )
+    perm2 = perm2.at[npos].set(dest.astype(table.perm.dtype), mode="drop")
+    return (
+        TableState(
+            codes2,
+            vals2,
+            seq2,
+            owner2,
+            perm2,
+            table.cnt + total_new.astype(table.cnt.dtype),
+            table.epoch + 1,
+        ),
+        running,
+    )
+
+
+# --------------------------------------------------------------------------
+# Compile caches.  Keyed by the fn_jit *object* — declare bodies at module
+# level (or memoize the factory) so topology factories reuse one identity
+# and every engine in the process shares the compiled programs.
+# --------------------------------------------------------------------------
+
+_JITTED: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _jitted_plain(fn):
+    entry = _JITTED.setdefault(fn, {})
+    if "plain" not in entry:
+        entry["plain"] = jax.jit(fn, donate_argnums=0)
+    return entry["plain"]
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """Version-portable shard_map (mirrors repro.models.moe's shim)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def _jitted_sharded(fn, mesh, axis):
+    entry = _JITTED.setdefault(fn, {})
+    key = ("shard", id(mesh), axis)
+    if key not in entry:
+        from jax.sharding import PartitionSpec as P
+
+        def call(state, kgs, starts, ends, keys, values, ts):
+            def shard(state_in, kgs_l, st_l, en_l, keys_r, values_r, ts_r):
+                nb = keys_r.shape[0]
+                state2, outputs, out_counts = fn(
+                    state_in, kgs_l, st_l, en_l, keys_r, values_r, ts_r
+                )
+                if out_counts is not None:
+                    raise ValueError(
+                        "shard_map execution requires 1:1 (or output-free) "
+                        "fn_jit bodies — out_counts must be None"
+                    )
+                leaves = jax.tree_util.tree_leaves(state_in)
+                if leaves:
+                    num_kg = leaves[0].shape[0]
+                    touched = (
+                        jnp.zeros(num_kg, bool).at[kgs_l].set(True, mode="drop")
+                    )
+                    t_any = (
+                        jax.lax.psum(touched.astype(jnp.int32), axis) > 0
+                    )
+
+                    def merge(orig, new):
+                        t = touched.reshape(
+                            (num_kg,) + (1,) * (new.ndim - 1)
+                        )
+                        summed = jax.lax.psum(
+                            jnp.where(t, new, jnp.zeros((), new.dtype)), axis
+                        )
+                        ta = t_any.reshape((num_kg,) + (1,) * (new.ndim - 1))
+                        return jnp.where(ta, summed, orig)
+
+                    state_m = jax.tree_util.tree_map(merge, state_in, state2)
+                else:
+                    state_m = state2
+                if outputs is None:
+                    return state_m, None
+                ok = tuple_valid(st_l, en_l, nb)
+
+                def omerge(o):
+                    return jax.lax.psum(
+                        jnp.where(ok, o, jnp.zeros((), o.dtype)), axis
+                    )
+
+                return state_m, jax.tree_util.tree_map(omerge, outputs)
+
+            state_m, outputs = _shard_map(
+                shard,
+                mesh,
+                in_specs=(P(), P(axis), P(axis), P(axis), P(), P(), P()),
+                out_specs=P(),
+            )(state, kgs, starts, ends, keys, values, ts)
+            return state_m, outputs, None
+
+        entry[key] = jax.jit(call)
+    return entry[key]
+
+
+# --------------------------------------------------------------------------
+# Per-operator runtime state.
+# --------------------------------------------------------------------------
+
+
+class _OpState:
+    __slots__ = (
+        "op",
+        "spec",
+        "base",
+        "nkg",
+        "fields",
+        "has_tables",
+        "cols",
+        "caps",
+        "cnt_host",
+        "col_auth",
+        "value_names",
+        "out_dtype",
+        "out_names",
+        "seen_keys",
+    )
+
+    def __init__(self, op: int, spec, base: int) -> None:
+        self.op = op
+        self.spec = spec
+        self.base = base
+        self.nkg = spec.num_keygroups
+        self.fields: tuple[StateField, ...] = (
+            spec.state_schema.fields if spec.state_schema is not None else ()
+        )
+        self.has_tables = any(f.kind == "table" for f in self.fields)
+        self.caps: dict[str, int] = {}
+        self.cnt_host: dict[str, int] = {}
+        self.col_auth = np.zeros(self.nkg, dtype=bool)
+        cols = {}
+        for f in self.fields:
+            if f.kind == "scalar":
+                cols[f.name] = jnp.full(self.nkg, f.init, dtype=f.dtype)
+            else:
+                cap = _MIN_TABLE_CAP
+                self.caps[f.name] = cap
+                self.cnt_host[f.name] = 0
+                cols[f.name] = _empty_table(cap, f.dtype)
+        self.cols = cols
+        self.value_names = (
+            spec.schema.value.names if spec.schema is not None else None
+        )
+        out_schema = spec.out_schema
+        self.out_dtype = None if out_schema is None else out_schema.value
+        self.out_names = (
+            None if out_schema is None else out_schema.value.names
+        )
+        self.seen_keys: set = set()
+
+
+def _empty_table(cap: int, dtype) -> TableState:
+    return TableState(
+        codes=jnp.full(cap, EMPTY_CODE, dtype=jnp.int64),
+        vals=jnp.zeros(cap, dtype=dtype),
+        seq=jnp.zeros(cap, dtype=jnp.int64),
+        owner=jnp.zeros(cap, dtype=jnp.int32),
+        perm=jnp.arange(cap, dtype=jnp.int32),
+        cnt=jnp.zeros((), dtype=jnp.int32),
+        epoch=jnp.ones((), dtype=jnp.int64),
+    )
+
+
+class JitRuntime:
+    """Executes fn_jit operators over device state columns for one Engine."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        store,
+        metrics,
+        kg_op: np.ndarray,
+        *,
+        mesh=None,
+        mesh_axis: Optional[str] = None,
+    ) -> None:
+        self._store = store
+        self._metrics = metrics
+        self._kg_op = kg_op
+        self._mesh = mesh
+        if mesh is not None and mesh_axis is None:
+            mesh_axis = mesh.axis_names[0]
+        self._mesh_axis = mesh_axis
+        if mesh is not None:
+            d = int(mesh.shape[mesh_axis])
+            if d & (d - 1):
+                raise ValueError("jit mesh axis size must be a power of two")
+        self.compile_seconds = 0.0
+        self._by_op: dict[int, _OpState] = {}
+        for op, spec in enumerate(topology.operators):
+            if spec.fn_jit is not None:
+                self._by_op[op] = _OpState(op, spec, topology.kg_base(op))
+
+    # ------------------------------------------------------------ execution
+    def execute(self, op, kgs, starts, ends, keys, values, ts):
+        """Run one contiguous (node, operator) segment through the jit tier.
+
+        ``kgs`` are global key-group ids; ``starts``/``ends`` are bounds
+        relative to the ``keys``/``values``/``ts`` slice.  Returns
+        ``(outputs, out_counts)`` exactly like an ``fn_seg`` call.
+        """
+        ost = self._by_op[op]
+        n = len(keys)
+        r = len(kgs)
+        nb = _bucket(n, _MIN_TUPLE_BUCKET)
+        rb = _bucket(r, _MIN_RUN_BUCKET)
+        if self._mesh is not None:
+            rb = _bucket(rb, int(self._mesh.shape[self._mesh_axis]))
+        lkgs = np.asarray(kgs, dtype=np.int64) - ost.base
+        st_arr = np.asarray(starts, dtype=np.int64)
+        en_arr = np.asarray(ends, dtype=np.int64)
+        if ost.fields:
+            self._prepare_state(ost, lkgs, n)
+        # Fresh padded buffers per call: jax zero-copies numpy on CPU, so a
+        # reused scratch could be read after we overwrite it.
+        kg_pad = np.full(rb, ost.nkg, dtype=np.int64)
+        kg_pad[:r] = lkgs
+        s_pad = np.full(rb, n, dtype=np.int64)
+        s_pad[:r] = st_arr
+        e_pad = np.full(rb, n, dtype=np.int64)
+        e_pad[:r] = en_arr
+        key_pad = np.zeros(nb, dtype=keys.dtype)
+        key_pad[:n] = keys
+        ts_pad = np.zeros(nb, dtype=np.float64)
+        ts_pad[:n] = ts
+        if ost.value_names is None:
+            v_arg = np.zeros(nb, dtype=values.dtype)
+            v_arg[:n] = values
+        else:
+            v_arg = {}
+            for name in ost.value_names:
+                col = values[name]
+                pad = np.zeros(nb, dtype=col.dtype)
+                pad[:n] = col
+                v_arg[name] = pad
+        fn = ost.spec.fn_jit
+        use_shard = (
+            self._mesh is not None
+            and not ost.has_tables
+            and len(set(kgs)) == r
+        )
+        if use_shard:
+            # Run-sharding merges per-shard state by key-group ownership —
+            # sound for per-key-group columns, but flat keyed tables append
+            # to shared slab positions, so table ops stay on the plain call
+            # (key-group-sharded table state is the ROADMAP's next step).
+            # Duplicate key groups in one call (budget-leftover segments
+            # concatenated with a fresh batch) must not shard-split either:
+            # two shards would both update the kg from the same base and the
+            # merge would double-count it — fall back to the plain call.
+            jitted = _jitted_sharded(fn, self._mesh, self._mesh_axis)
+        else:
+            jitted = _jitted_plain(fn)
+        key = (nb, rb, tuple(sorted(ost.caps.items())), use_shard)
+        first = key not in ost.seen_keys
+        if first:
+            ost.seen_keys.add(key)
+            self._metrics.jit_compiles += 1
+            t0 = time.perf_counter()
+        result = jitted(ost.cols, kg_pad, s_pad, e_pad, key_pad, v_arg, ts_pad)
+        if first:
+            jax.block_until_ready(result)
+            self.compile_seconds += time.perf_counter() - t0
+        state_new, outputs, out_counts = result
+        ost.cols = state_new
+        for f in ost.fields:
+            if f.kind == "table":
+                ost.cnt_host[f.name] = int(state_new[f.name].cnt)
+        ost.col_auth[lkgs] = True
+        self._metrics.jit_calls += 1
+        self._metrics.jit_tuples += n
+        if outputs is None:
+            return None, None
+        ok, ov, ot = outputs
+        if out_counts is None:
+            total, lens = n, None
+        else:
+            lens_arr = np.asarray(out_counts)[:r]
+            total = int(lens_arr.sum())
+            lens = lens_arr.tolist()
+        ok_np = np.asarray(ok)[:total]
+        ot_np = np.asarray(ot)[:total]
+        if isinstance(ov, dict):
+            if ost.out_dtype is None:
+                raise ValueError(
+                    f"fn_jit of operator {ost.spec.name!r} returned record "
+                    "columns but the operator declares no out_schema"
+                )
+            ov_np = np.empty(total, dtype=ost.out_dtype)
+            for name in ost.out_names:
+                ov_np[name] = np.asarray(ov[name])[:total]
+        else:
+            ov_np = np.asarray(ov)[:total]
+        return (ok_np, ov_np, ot_np), lens
+
+    # ----------------------------------------------------- state coherence
+    def _prepare_state(self, ost: _OpState, lkgs: np.ndarray, n: int) -> None:
+        """Push dict-authoritative state, then size tables for this call."""
+        pend = lkgs[~ost.col_auth[lkgs]]
+        if len(pend):
+            self._push(ost, pend)
+        for f in ost.fields:
+            if f.kind != "table":
+                continue
+            # The segment can insert at most one entry per tuple.
+            need = ost.cnt_host[f.name] + n
+            if need > ost.caps[f.name]:
+                self._grow(ost, f, need)
+
+    def _grow(self, ost: _OpState, f: StateField, cap_needed: int) -> None:
+        """Extend the slab; the sorted view's EMPTY tail (ascending by slab
+        index) extends with the fresh indices — no re-sort needed."""
+        new_cap = _bucket(cap_needed, _MIN_TABLE_CAP)
+        t = ost.cols[f.name]
+        old = ost.caps[f.name]
+        pad = new_cap - old
+        codes = np.full(new_cap, EMPTY_CODE, dtype=np.int64)
+        codes[:old] = np.asarray(t.codes)
+        ost.cols[f.name] = TableState(
+            codes=jnp.asarray(codes),
+            vals=jnp.pad(t.vals, (0, pad)),
+            seq=jnp.pad(t.seq, (0, pad)),
+            owner=jnp.pad(t.owner, (0, pad)),
+            perm=jnp.concatenate(
+                [t.perm, jnp.arange(old, new_cap, dtype=t.perm.dtype)]
+            ),
+            cnt=t.cnt,
+            epoch=t.epoch,
+        )
+        ost.caps[f.name] = new_cap
+
+    def _push(self, ost: _OpState, pend: np.ndarray) -> None:
+        """Rebuild the columns with the pushed key groups' dict state.
+
+        Scalar fields scatter; table fields rebuild the packed slab host
+        side (stale entries of the pushed key groups drop, their dict
+        entries re-append with fresh sequence numbers above every kept
+        one, and the sorted view is a host argsort — stable, so the EMPTY
+        tail stays ascending by slab index).
+        """
+        store = self._store.raw()
+        m = len(pend)
+        for f in ost.fields:
+            if f.kind == "scalar":
+                rows = np.fromiter(
+                    (
+                        store[ost.base + int(lk)].get(f.name, f.init)
+                        for lk in pend
+                    ),
+                    dtype=f.dtype,
+                    count=m,
+                )
+                ost.cols[f.name] = (
+                    ost.cols[f.name].at[jnp.asarray(pend)].set(rows)
+                )
+                continue
+            t = ost.cols[f.name]
+            cnt = ost.cnt_host[f.name]
+            codes = np.asarray(t.codes)[:cnt]
+            vals = np.asarray(t.vals)[:cnt]
+            seq = np.asarray(t.seq)[:cnt]
+            owner = np.asarray(t.owner)[:cnt]
+            keep = ~np.isin(owner, pend)
+            new_c, new_v, new_o = [], [], []
+            enc = f.key_encode
+            for lk in pend:
+                d = store[ost.base + int(lk)].get(f.name, {})
+                for key, val in d.items():
+                    new_c.append(enc(key))
+                    new_v.append(val)
+                    new_o.append(lk)
+            n_keep = int(keep.sum())
+            total = n_keep + len(new_c)
+            cap = ost.caps[f.name]
+            if total > cap:
+                cap = _bucket(total, _MIN_TABLE_CAP)
+                ost.caps[f.name] = cap
+            pc = np.full(cap, EMPTY_CODE, dtype=np.int64)
+            pv = np.zeros(cap, dtype=f.dtype)
+            ps = np.zeros(cap, dtype=np.int64)
+            po = np.zeros(cap, dtype=np.int32)
+            pc[:n_keep] = codes[keep]
+            pv[:n_keep] = vals[keep]
+            ps[:n_keep] = seq[keep]
+            po[:n_keep] = owner[keep]
+            base_seq = int(ps[:n_keep].max()) + 1 if n_keep else 0
+            if new_c:
+                pc[n_keep:total] = new_c
+                pv[n_keep:total] = new_v
+                ps[n_keep:total] = base_seq + np.arange(len(new_c))
+                po[n_keep:total] = new_o
+            max_seq = int(ps[:total].max()) if total else 0
+            epoch = max(int(t.epoch), (max_seq >> 32) + 1)
+            ost.cols[f.name] = TableState(
+                codes=jnp.asarray(pc),
+                vals=jnp.asarray(pv),
+                seq=jnp.asarray(ps),
+                owner=jnp.asarray(po),
+                perm=jnp.asarray(
+                    np.argsort(pc, kind="stable").astype(np.int32)
+                ),
+                cnt=jnp.asarray(np.int32(total)),
+                epoch=jnp.asarray(np.int64(epoch)),
+            )
+            ost.cnt_host[f.name] = total
+        ost.col_auth[pend] = True
+
+    def _to_dict(self, ost: _OpState, lk: int, host: dict) -> dict:
+        """Materialize one key group's columns as the oracle state dict."""
+        out: dict = {}
+        for f in ost.fields:
+            if f.kind == "scalar":
+                out[f.name] = f.py(host[f.name][lk])
+            else:
+                codes, vals, seq, owner = host[f.name]
+                mine = np.flatnonzero(owner == lk)
+                order = mine[np.argsort(seq[mine], kind="stable")]
+                dec = f.key_decode
+                py = f.py
+                d = {}
+                for j in order.tolist():
+                    d[dec(int(codes[j]))] = py(vals[j])
+                out[f.name] = d
+        return out
+
+    def _host_cols(self, ost: _OpState) -> dict:
+        host = {}
+        for f in ost.fields:
+            if f.kind == "scalar":
+                host[f.name] = np.asarray(ost.cols[f.name])
+            else:
+                t = ost.cols[f.name]
+                cnt = ost.cnt_host[f.name]
+                host[f.name] = (
+                    np.asarray(t.codes)[:cnt],
+                    np.asarray(t.vals)[:cnt],
+                    np.asarray(t.seq)[:cnt],
+                    np.asarray(t.owner)[:cnt],
+                )
+        return host
+
+    def ensure_dict(self, kg: int) -> None:
+        """Make the python store dict authoritative for one key group.
+
+        Called by the engine before any per-run ``fn`` fallback or state
+        serialization touches a jit-tier operator's key group.
+        """
+        op = int(self._kg_op[kg])
+        ost = self._by_op.get(op)
+        if ost is None or not ost.fields:
+            return
+        lk = kg - ost.base
+        if not ost.col_auth[lk]:
+            return
+        self._store.raw()[kg] = self._to_dict(ost, lk, self._host_cols(ost))
+        ost.col_auth[lk] = False
+
+    def invalidate(self, kg: int) -> None:
+        """Dict state was externally replaced (migration install)."""
+        op = int(self._kg_op[kg])
+        ost = self._by_op.get(op)
+        if ost is not None and ost.fields:
+            ost.col_auth[kg - ost.base] = False
+
+    def sync_store(self) -> None:
+        """Refresh the store dicts of every column-authoritative key group
+        (columns stay authoritative — this is the read-only statistics /
+        conformance snapshot taken at ``end_period``)."""
+        store = self._store.raw()
+        for ost in self._by_op.values():
+            if not ost.fields:
+                continue
+            lks = np.flatnonzero(ost.col_auth)
+            if not len(lks):
+                continue
+            host = self._host_cols(ost)
+            for lk in lks.tolist():
+                store[ost.base + lk] = self._to_dict(ost, lk, host)

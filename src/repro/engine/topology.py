@@ -126,6 +126,88 @@ class Schema:
         return np.asarray(keys, dtype=self.key)
 
 
+# Compiled segment-level state transition (optional, the jit tier):
+#   fn_jit(state_cols, kgs, starts, ends, keys, values, ts)
+#       -> (state_cols', outputs, out_counts)
+# A *pure JAX* function over column arrays, compiled once per (operator,
+# padding bucket) by :mod:`repro.engine.jitexec` and executed as one
+# ``jax.jit`` call per (node, operator) contiguous segment.  ``state_cols``
+# is the operator's declared :class:`StateSchema` layout (per-key-group
+# device columns — scalar vectors and keyed tables — instead of the python
+# ``store`` dicts); ``kgs`` holds *local* key-group ids padded with the
+# operator's key-group count, ``starts``/``ends`` are padded with the real
+# tuple count (padding runs are empty), and ``values`` is a dict of native
+# column arrays on record schemas (a plain array on scalar schemas).  Tuple
+# validity is derived from the run bounds (``jitexec.tuple_valid``), never
+# from array lengths, so the same body runs under padding and under
+# ``shard_map`` run-sharding unchanged.  ``outputs`` is ``None`` or
+# ``(out_keys, out_values, out_ts)`` with ``out_values`` a column dict /
+# array in the operator's output layout; ``out_counts`` follows the fn_seg
+# contract (None = one output per input tuple).  Must be semantically
+# identical to ``fn_seg`` — bit-exact on integers and single float ops, with
+# XLA reduction-order divergence allowed *only* for multi-term float
+# reductions (running sums), see docs/operator_authoring.md.
+JitFn = Callable[..., tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class StateField:
+    """One declared per-key-group state column of a jit-tier operator.
+
+    ``kind="scalar"``: one ``dtype`` cell per key group (counters,
+    watermarks), materialized into the oracle state dict as
+    ``{name: py(cell)}``.
+
+    ``kind="table"``: a keyed accumulator — per key group a bounded table of
+    ``(int64 code, dtype value)`` entries plus insertion sequence numbers,
+    materialized as ``{name: {key_decode(code): float(value), ...}}`` in
+    insertion order (the order the per-run oracle would have inserted them).
+    ``key_encode``/``key_decode`` convert between the oracle's dict keys and
+    the int64 codes the device table stores; codes must be unique per dict
+    key and — because a table row belongs to one key group — equal codes
+    must always hash to the same key group (keying the table by the
+    operator's partition key guarantees this).  Capacity is managed by the
+    runtime (power-of-two growth; a growth step is a recompile bucket).
+    """
+
+    name: str
+    kind: str = "scalar"
+    dtype: object = np.int64
+    init: object = 0
+    py: Callable = int  # python scalar constructor used by to_dict
+    key_encode: Optional[Callable[[object], int]] = None
+    key_decode: Optional[Callable[[int], object]] = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("scalar", "table"):
+            raise ValueError(f"unknown StateField kind {self.kind!r}")
+        if self.kind == "table" and (
+            self.key_encode is None or self.key_decode is None
+        ):
+            raise ValueError(f"table field {self.name!r} needs key_encode/decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSchema:
+    """Declared array layout of a jit-tier operator's per-key-group state.
+
+    Field order is the contract: it must match the order the per-run ``fn``
+    first inserts the corresponding keys into its state dict, and every
+    field must be written by ``fn`` for every processed run (the standard
+    ``setdefault`` + update pattern satisfies both) — that is what lets the
+    runtime materialize device columns back into dicts that are equal to the
+    oracle's, including insertion order.
+    """
+
+    fields: tuple[StateField, ...]
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "fields", tuple(self.fields))
+        names = [f.name for f in self.fields]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate StateSchema field names")
+
+
 def _identity_key(k: object) -> object:
     return k
 
@@ -250,6 +332,8 @@ class OperatorSpec:
     schema: Optional[Schema] = None
     out_schema: Optional[Schema] = None
     key_by_value_col: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    fn_jit: Optional[JitFn] = None  # compiled tier (see JitFn / jitexec)
+    state_schema: Optional[StateSchema] = None
 
 
 class Topology:
@@ -443,6 +527,18 @@ class Topology:
                 raise ValueError(
                     f"{o.name!r} declares key_by_value_col without the scalar "
                     "key_by_value it must be elementwise identical to"
+                )
+            if o.fn_jit is not None:
+                if o.is_source:
+                    raise ValueError(f"source {o.name!r} cannot have fn_jit")
+                if o.schema is None:
+                    raise ValueError(
+                        f"{o.name!r} declares fn_jit without a Schema — the "
+                        "jit tier operates on native column arrays only"
+                    )
+            if o.state_schema is not None and o.fn_jit is None:
+                raise ValueError(
+                    f"{o.name!r} declares a StateSchema without fn_jit"
                 )
         # Schema mismatch across an edge is a construction-time error, not a
         # runtime surprise.  A declared consumer accepts either (a) producers

@@ -60,7 +60,10 @@ def _kernel(keys_ref, valid_ref, kg_ref, hist_ref, hist_scr, *, nkg: int, nblock
         jnp.int32, (block, nkg), 1
     )
     contrib = onehot.astype(jnp.int32) * valid_ref[...].reshape(block, 1)
-    hist_scr[...] += contrib.sum(axis=0, keepdims=True)
+    # dtype pinned: with jax x64 enabled (the jit tier flips it process-wide)
+    # an int32 sum would promote its accumulator to int64 and fail the swap
+    # into the int32 VMEM scratch.
+    hist_scr[...] += contrib.sum(axis=0, keepdims=True, dtype=jnp.int32)
 
     @pl.when(i == nblocks - 1)
     def _finalize():

@@ -1,0 +1,81 @@
+"""Deterministic pins for the stateful fuzz operators (window / accum).
+
+The hypothesis-driven fuzz suite draws these kinds too, but it skips when
+hypothesis is unavailable — these fixed specs keep the windowed and keyed
+accumulator operators exercised on every run, across both value families,
+schema mixes and migrations.
+"""
+
+import pytest
+
+from conformance import (
+    Scenario,
+    assert_equivalent,
+    fuzz_feeders,
+    make_fuzz_topology,
+    run_configs,
+)
+
+SPECS = {
+    "scalar-window-accum": {
+        "family": "scalar",
+        "key_dtype": "i8",
+        "source_schema": True,
+        "ops": [
+            {
+                "kind": "window",
+                "kgs": 8,
+                "schema": True,
+                "out_schema": True,
+                "key": "id",
+            },
+            {
+                "kind": "accum",
+                "kgs": 12,
+                "schema": False,
+                "out_schema": False,
+                "key": "mod",
+            },
+        ],
+        "edges": [[-1], [0]],
+    },
+    "record-window-accum": {
+        "family": "record",
+        "key_dtype": "i4",
+        "source_schema": True,
+        "ops": [
+            {
+                "kind": "accum",
+                "kgs": 8,
+                "schema": True,
+                "out_schema": False,
+                "key": "byval",
+            },
+            {
+                "kind": "window",
+                "kgs": 8,
+                "schema": False,
+                "out_schema": True,
+                "key": "id",
+            },
+        ],
+        "edges": [[-1], [0]],
+    },
+}
+
+
+@pytest.mark.parametrize("name", list(SPECS), ids=str)
+@pytest.mark.parametrize("migrate", [(), (3, 6)], ids=["steady", "migrate"])
+def test_stateful_fuzz_ops_conform(name, migrate):
+    spec = SPECS[name]
+    scenario = Scenario("stateful", ticks=10, drain_ticks=6, migrate_at=migrate)
+    results = run_configs(
+        lambda: make_fuzz_topology(spec), fuzz_feeders(spec), scenario
+    )
+    assert_equivalent(results)
+    seg = results["soa+seg+schema"]
+    assert seg["metrics"]["processed_tuples"] > 0
+    assert seg["seg_calls"] > 0
+    # The stateful bodies really accreted state (window buffers / keyed
+    # sums live in σ_k, so migrations moved them too).
+    assert any(s != ("dict", []) for s in seg["states"])

@@ -1,0 +1,92 @@
+"""The kg_tuple_rate growth projection feeds the MILP balance objective.
+
+PR 4 fed the leading-load signal into ALBIC's step-3 *target scoring*; this
+pins the next step (ROADMAP): ``solve_allocation(prev_rate=...)`` scales the
+gLoad vector itself by the clipped rate-growth ratios, so a surging key
+group changes the optimal allocation one period *before* its measured load
+does.
+"""
+
+import numpy as np
+
+from repro.core.milp import solve_allocation
+from repro.core.scaling import rate_growth
+from repro.core.stats import ClusterState
+
+
+def _state(kg_load, rates):
+    # Two nodes, four singleton key groups, two on each node.
+    return ClusterState.create(
+        2,
+        np.zeros(4, dtype=np.int64),
+        np.asarray(kg_load, dtype=np.float64),
+        np.array([0, 0, 1, 1]),
+        kg_state_bytes=np.full(4, 8.0),
+        kg_tuple_rate=np.asarray(rates, dtype=np.float64),
+    )
+
+
+# This period: loads are perfectly balanced (20 per node), but key group 0's
+# arrival rate tripled (5 → 15 tuples/tick).  Next period the surge
+# materializes as load (gLoad tracks arrivals on uniform-cost operators).
+BALANCED = _state([10.0, 10.0, 10.0, 10.0], [15.0, 5.0, 5.0, 5.0])
+PREV_RATE = np.array([5.0, 5.0, 5.0, 5.0])
+NEXT_PERIOD = _state([30.0, 10.0, 10.0, 10.0], [15.0, 5.0, 5.0, 5.0])
+
+
+def test_growth_ratios_clip_and_gate():
+    g = rate_growth(BALANCED, PREV_RATE)
+    assert g is not None
+    assert g.tolist() == [3.0, 1.0, 1.0, 1.0]
+    assert rate_growth(BALANCED, None) is None
+    # Quiet key groups (below min_rate) never project: their ratios are noise.
+    quiet = rate_growth(BALANCED, np.array([0.0, 5.0, 5.0, 5.0]))
+    assert quiet.tolist() == [1.0, 1.0, 1.0, 1.0]
+
+
+def test_surge_changes_allocation_one_period_early():
+    # Without the projection the measured loads are already balanced: the
+    # solver keeps every key group where it is.
+    plain = solve_allocation(BALANCED, time_limit=5.0)
+    assert plain.alloc.tolist() == [0, 0, 1, 1]
+    assert plain.num_migrations == 0
+
+    # With the projection, key group 0 weighs 30: node 0 is about to carry
+    # 40 vs node 1's 20, so the optimizer de-loads node 0 now.
+    early = solve_allocation(BALANCED, prev_rate=PREV_RATE, time_limit=5.0)
+    assert early.num_migrations > 0
+    moved_off_0 = {k for k, src, _ in early.migrations if src == 0}
+    assert moved_off_0, "projection should move load off the surging node"
+    # The surging key group's node ends up with strictly less company.
+    proj_load = np.array([30.0, 10.0, 10.0, 10.0])
+    node0 = float(proj_load[early.alloc == 0].sum())
+    node1 = float(proj_load[early.alloc == 1].sum())
+    assert abs(node0 - node1) < 40.0 - 20.0  # strictly better than no move
+
+    # "One period early": the plain solver reaches the same rebalancing only
+    # on the next snapshot, where the surge shows up in the measured loads.
+    late = solve_allocation(NEXT_PERIOD, time_limit=5.0)
+    assert late.num_migrations > 0
+    late_node0 = float(
+        np.asarray(NEXT_PERIOD.kg_load)[late.alloc == 0].sum()
+    )
+    late_node1 = float(
+        np.asarray(NEXT_PERIOD.kg_load)[late.alloc == 1].sum()
+    )
+    assert abs(late_node0 - late_node1) < 40.0 - 20.0
+
+
+def test_projection_none_is_identical():
+    """prev_rate=None (or missing kg_tuple_rate) is bit-identical to the
+    unprojected program — the signal is strictly opt-in."""
+    a = solve_allocation(BALANCED, time_limit=5.0)
+    state_no_rate = ClusterState.create(
+        2,
+        np.zeros(4, dtype=np.int64),
+        BALANCED.kg_load,
+        BALANCED.alloc,
+        kg_state_bytes=BALANCED.kg_state_bytes,
+    )
+    b = solve_allocation(state_no_rate, prev_rate=PREV_RATE, time_limit=5.0)
+    assert a.alloc.tolist() == b.alloc.tolist()
+    assert a.d == b.d

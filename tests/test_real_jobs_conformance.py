@@ -2,10 +2,11 @@
 be bit-identical to the per-run fn, and the SoA queue to the deque oracle,
 under every drive pattern.
 
-Each test runs one job through the four execution configurations
-(soa+seg+schema, soa+seg, soa+fn, deque+fn — see tests/conformance.py) and
-requires identical tuple flow, sink outputs, per-key-group state and SPL
-statistics:
+Each test runs one job through the five execution configurations
+(soa+seg+schema+jit, soa+seg+schema, soa+seg, soa+fn, deque+fn — see
+tests/conformance.py) and requires identical tuple flow, sink outputs,
+per-key-group state and SPL statistics (the jit configuration with the
+documented float tolerance on reduction-order-sensitive running sums):
 
 * ``steady``   — unconstrained budgets, pure data-plane equivalence;
 * ``migrate``  — three random mid-run migrations: tuples buffered in flight,
@@ -27,6 +28,12 @@ SCENARIOS = {
 }
 
 
+# Jobs with fn_jit-ported operators (job4 extends job3, so it inherits the
+# ported flight-delay operators): the +jit configuration must actually
+# exercise the compiled tier there (and never anywhere else).
+JIT_JOBS = {"job2", "job3", "job4", "pipeline"}
+
+
 @pytest.mark.parametrize("scenario", list(SCENARIOS), ids=str)
 @pytest.mark.parametrize("job", list(JOBS), ids=str)
 def test_job_conformance(job, scenario):
@@ -44,6 +51,16 @@ def test_job_conformance(job, scenario):
     assert results["deque+fn"]["seg_calls"] == 0
     assert results["deque+fn"]["typed_batches"] == 0
     assert results["soa+seg+schema"]["metrics"]["processed_tuples"] > 0
+    # Compiled tier: fires exactly on the +jit configuration of ported jobs,
+    # with compile counts bounded by padding buckets, not calls.
+    jit = results["soa+seg+schema+jit"]
+    if job in JIT_JOBS:
+        assert jit["jit_calls"] > 0
+        assert 0 < jit["jit_compiles"] < jit["jit_calls"]
+    else:
+        assert jit["jit_calls"] == 0
+    assert results["soa+seg+schema"]["jit_calls"] == 0
+    assert results["deque+fn"]["jit_calls"] == 0
 
 
 def test_jobs_produce_sink_output_and_state():
