@@ -10,10 +10,15 @@ rows, the record-pipeline columnar-vs-object row, and the schema-typed
 migration round-trip row) and whose baseline time clears ``--min-us`` —
 sub-50µs rows are noise, not signal.
 
+Rows measured best-of-N embed a ``spread=`` entry (best/worst across the
+repeats) in their derived column; the gate report prints it alongside each
+ratio so a noisy row is distinguishable from a real regression at a glance.
+
 To update the committed baseline after an intentional perf change::
 
     PYTHONPATH=src python -m benchmarks.run --quick \
-        --only solver_perf,engine_throughput --json benchmarks/baseline.json
+        --only solver_perf,engine_throughput,real_jobs \
+        --json benchmarks/baseline.json
 
 The baseline is machine-dependent: refresh it from the same class of runner
 the gate executes on (for GitHub Actions, a ubuntu-latest runner).
@@ -51,6 +56,23 @@ def load_rows(path: str) -> dict[str, float]:
     with open(path) as f:
         doc = json.load(f)
     return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
+
+
+def load_spreads(path: str) -> dict[str, float]:
+    """Per-row best-of-N spread (best/worst across a run's repeats), parsed
+    from the ``spread=`` entry benchmark modules embed in the derived
+    column.  Rows without one simply don't appear."""
+    with open(path) as f:
+        doc = json.load(f)
+    out: dict[str, float] = {}
+    for r in doc.get("rows", []):
+        for part in str(r.get("derived", "")).split(";"):
+            if part.startswith("spread="):
+                try:
+                    out[r["name"]] = float(part[len("spread="):])
+                except ValueError:
+                    pass
+    return out
 
 
 def compare(
@@ -100,12 +122,15 @@ def main(argv: list[str] | None = None) -> int:
     if not gated:
         print("perf gate: no comparable rows — check module names", file=sys.stderr)
         return 2
+    spreads = load_spreads(args.new)
     width = max(len(c.name) for c in gated)
-    print(f"{'row'.ljust(width)}  baseline_us   new_us     ratio")
+    print(f"{'row'.ljust(width)}  baseline_us   new_us     ratio  spread")
     for c in gated:
         flag = "  << REGRESSION" if c in regressions else ""
+        spread = spreads.get(c.name)
+        sp = f"{spread:6.2f}" if spread is not None else "     -"
         print(
-            f"{c.name.ljust(width)}  {c.base_us:11.1f}  {c.new_us:9.1f}  {c.ratio:7.2f}{flag}"
+            f"{c.name.ljust(width)}  {c.base_us:11.1f}  {c.new_us:9.1f}  {c.ratio:7.2f}  {sp}{flag}"
         )
     if regressions:
         print(

@@ -384,6 +384,24 @@ class SPLWindow:
         if self._pair_entries > self.compact_threshold:
             self._compact_pairs()
 
+    def record_send_counts(
+        self, src_kgs: np.ndarray, dst_kgs: np.ndarray, counts: np.ndarray
+    ) -> None:
+        """Batched :meth:`record_send` with explicit per-pair tuple counts.
+
+        Equivalent to :meth:`record_send_pairs` over ``counts[j]`` repeats of
+        each ``(src_kgs[j], dst_kgs[j])`` pair — the compaction sums weights,
+        and integer counts sum exactly in float64 — without materializing the
+        per-tuple attribution arrays (the fused superstep path only ever
+        knows per-edge counts).
+        """
+        self._pair_src.append(np.asarray(src_kgs, dtype=np.int64))
+        self._pair_dst.append(np.asarray(dst_kgs, dtype=np.int64))
+        self._pair_weights.append(np.asarray(counts, dtype=np.float64))
+        self._pair_entries += len(src_kgs)
+        if self._pair_entries > self.compact_threshold:
+            self._compact_pairs()
+
     def record_arrivals(self, base: int, hist: np.ndarray) -> None:
         """Add one operator's per-key-group tuple histogram (kernel output)."""
         self.kg_arrivals[base : base + len(hist)] += hist

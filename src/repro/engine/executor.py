@@ -154,6 +154,11 @@ class EngineMetrics:
     jit_calls: int = 0
     jit_tuples: int = 0
     jit_compiles: int = 0
+    # Host↔device boundary crossings of the compiled tier: one per
+    # per-operator jit call, one per fused superstep tick, one per
+    # run_supersteps(K) scan — the metric that proves the superstep path's
+    # O(1) crossings per K ticks against the per-operator tier's O(ops·K).
+    jit_host_syncs: int = 0
     # Materialized sink tuples; only populated when the engine was built with
     # ``collect_sinks=True`` (unbounded growth otherwise — benchmarks disable
     # it so they measure the data plane, not list appends).
@@ -223,6 +228,7 @@ class Engine:
         use_fn_seg: bool = True,
         use_schema: bool = True,
         use_fn_jit: bool = False,
+        superstep: bool = False,
         jit_mesh=None,
         jit_mesh_axis: Optional[str] = None,
     ) -> None:
@@ -275,12 +281,10 @@ class Engine:
         # repro.engine.jitexec (one jax.jit call per node/operator, state in
         # device columns); everything else — and every fallback path —
         # behaves exactly as without the flag.  The tier needs native column
-        # payloads and the SoA drain, hence the config requirements.
-        if use_fn_jit and (queue_impl != "soa" or not use_schema):
-            raise ValueError(
-                "use_fn_jit requires queue_impl='soa' and use_schema=True "
-                "(the jit tier executes native columns over SoA segments)"
-            )
+        # payloads and the SoA drain, hence the config requirements — but a
+        # topology with zero fn_jit operators skips jitexec setup entirely
+        # (no config constraint, no import, no process-wide x64 flip): the
+        # flag is then a no-op, not a cost.
         self.use_fn_jit = use_fn_jit
         self._op_fn_jit = [
             o.fn_jit if use_fn_jit else None for o in topology.operators
@@ -289,6 +293,11 @@ class Engine:
         self._jit_mesh = jit_mesh
         self._jit_mesh_axis = jit_mesh_axis
         self._jit_on = any(f is not None for f in self._op_fn_jit)
+        if self._jit_on and (queue_impl != "soa" or not use_schema):
+            raise ValueError(
+                "use_fn_jit requires queue_impl='soa' and use_schema=True "
+                "(the jit tier executes native columns over SoA segments)"
+            )
         if self._jit_on:
             # Importing jitexec enables jax x64 process-wide (the tier's f8
             # columns must not silently truncate).  Import it NOW, at engine
@@ -296,6 +305,29 @@ class Engine:
             # dtype-semantics flip happens at a predictable time instead of
             # whenever the first segment hits the compiled tier mid-run.
             from repro.engine import jitexec  # noqa: F401
+
+            # With jax already up, routing sorts go through the bucketed
+            # radix-sort dispatcher (Pallas kernel on TPU; the CPU reference
+            # is the bit-identical stable argsort numpy would have run).
+            from repro.kernels.radix_sort import bucket_argsort
+
+            self._bucket_argsort = bucket_argsort
+        else:
+            self._bucket_argsort = None
+        # superstep=True fuses whole ticks of an eligible linear fn_jit
+        # chain into single device programs (repro.engine.superstep); the
+        # runtime falls back to the classic tick whenever a tick is not
+        # fusible, so the flag never changes semantics — only the number of
+        # host↔device crossings (metrics.jit_host_syncs).
+        if superstep and not use_fn_jit:
+            raise ValueError(
+                "superstep=True requires use_fn_jit=True (the fused tick "
+                "compiles fn_jit bodies)"
+            )
+        # With zero fn_jit operators the flag degrades to a no-op — the
+        # engine must not import jax (same contract as use_fn_jit itself).
+        self.superstep = bool(superstep) and self._jit_on
+        self._superstep = None  # SuperstepRuntime, built on first tick
         # Deferred jit segments of the current tick: the drain collects
         # (accounting immediately, placeholder cells hold output order) and
         # one batched jax.jit call per operator executes at end of tick —
@@ -454,7 +486,17 @@ class Engine:
         if len(uniq) == 1:  # common fast case: no permutation needed
             skeys, svalues, sts = keys, values, ts
         else:
-            if self.num_nodes * nkg <= 32767:
+            # The composite fits int16 at benchmark scales, where the stable
+            # sort is radix over 2 bytes instead of 8.  With the jit tier on,
+            # the bucketed radix-sort dispatcher takes over (Pallas kernel on
+            # TPU, the identical stable argsort on CPU).
+            small = self.num_nodes * nkg <= 32767
+            if self._bucket_argsort is not None:
+                order = self._bucket_argsort(
+                    comp.astype(np.int16) if small else comp,
+                    self.num_nodes * nkg,
+                )
+            elif small:
                 order = np.argsort(comp.astype(np.int16), kind="stable")
             else:
                 order = np.argsort(comp, kind="stable")
@@ -537,6 +579,29 @@ class Engine:
                 )
             )
 
+    def _superstep_rt(self):
+        """Lazily build the fused-superstep runtime (imports jax paths)."""
+        rt = self._superstep
+        if rt is None:
+            from repro.engine.superstep import SuperstepRuntime
+
+            rt = self._superstep = SuperstepRuntime(self)
+        return rt
+
+    def run_supersteps(self, batches) -> int:
+        """Run K source batches as one ``lax.scan`` over fused supersteps.
+
+        Steady-state throughput mode (one host↔device crossing for all K
+        ticks); requires ``superstep=True`` and drained queues — see
+        :meth:`repro.engine.superstep.SuperstepRuntime.run_supersteps` for
+        the exact contract and which statistics it records.
+        """
+        if not self.superstep:
+            raise RuntimeError(
+                "run_supersteps requires Engine(..., superstep=True)"
+            )
+        return self._superstep_rt().run_supersteps(batches)
+
     def _record_admission(self, node: int, admitted: int) -> None:
         """Queueing-latency estimate at admission: work ahead / service speed."""
         budget = self.service_rate * self._capacity_list[node]
@@ -550,7 +615,16 @@ class Engine:
         are routed once per downstream operator at the end of the tick, so
         each (op, key group) receives at most one segment push per tick.  CPU
         charges for the drained runs are scattered once, at the end.
+
+        With ``superstep=True`` the fused runtime first attempts to run the
+        whole tick as one device program; any tick it cannot express falls
+        back here after materializing its device-pending columns.
         """
+        if self.superstep:
+            rt = self._superstep_rt()
+            if rt.try_fused_tick():
+                return
+            rt.flush_to_host()
         self.metrics.ticks += 1
         self._ticks_this_period += 1
         drained_kgs: list[int] = []
@@ -1137,6 +1211,10 @@ class Engine:
         anything the router buffered during the migration, so the key
         group's outstanding tuples resume at the destination in FIFO order.
         """
+        if self._superstep is not None:
+            # Shadow segments hold no arrays to extract: materialize the
+            # fused runtime's device pendings before touching the queues.
+            self._superstep.flush_to_host()
         src = self.router.node_of(keygroup)
         self.router.redirect(keygroup, dst)
         batches, _removed = self._queues[src].extract_keygroup(keygroup)
@@ -1144,6 +1222,11 @@ class Engine:
             self._backlog.setdefault(keygroup, []).extend(batches)
 
     def serialize(self, keygroup: int) -> bytes:
+        if self._superstep is not None:
+            # The key group's backlog may reference device-pending columns;
+            # flushing first keeps the envelope byte-identical to the
+            # interpreted oracle's at any superstep boundary.
+            self._superstep.flush_to_host()
         if self._jit is not None:
             # σ_k may live in jit-tier device columns: materialize the dict
             # (insertion order included) so the blob is the oracle's pickle.
@@ -1191,6 +1274,10 @@ class Engine:
         Returns the orphaned key groups; the controller reallocates them (their
         state is recovered from the last checkpoint — see repro.checkpoint).
         """
+        if self._superstep is not None:
+            # clear() below must see real segments, and surviving nodes'
+            # shadow segments must not dangle on dropped device pendings.
+            self._superstep.flush_to_host()
         self.alive[node] = False
         self._queues[node].clear()
         return self.router.keygroups_on(node)

@@ -105,6 +105,21 @@ class TableState(NamedTuple):
     epoch: jax.Array  # () int64 call counter (seq high bits)
 
 
+class VectorState(NamedTuple):
+    """One bounded-window state field: a per-key-group ring of cells.
+
+    ``data[k, :cnt[k]]`` holds key group ``k``'s window oldest-first — the
+    exact list the per-run oracle keeps (``{name: [..]}``), so
+    materialization is a slice, not a reconstruction.  Bodies shift the
+    window with gathers (see the conformance suite's sliding-count-window
+    port); under key-group-sharded ``shard_map`` both leaves carry the
+    key-group leading axis and merge by the touched mask like scalars.
+    """
+
+    data: jax.Array  # (K, length) value dtype, oldest-first per key group
+    cnt: jax.Array  # (K,) int32 occupancy
+
+
 # --------------------------------------------------------------------------
 # fn_jit authoring helpers (pure JAX; shape-polymorphic over padding and
 # shard_map run-slices — validity always derives from the run bounds).
@@ -146,6 +161,7 @@ def keyed_running_sum(
     kg: jax.Array,
     addends: jax.Array,
     valid: jax.Array,
+    order: Optional[jax.Array] = None,
 ) -> tuple[TableState, jax.Array]:
     """Grouped running sums over one segment, against the keyed table.
 
@@ -166,11 +182,20 @@ def keyed_running_sum(
     diverge from the oracle's left-to-right association (module docstring's
     tolerance policy); group heads take ``base + addend`` directly, so
     singleton groups (mostly-unique keys) stay bit-exact end to end.
+
+    ``order`` is the *pre-sorted order handoff*: the caller may pass the
+    stable argsort of ``where(valid, codes, EMPTY_CODE)`` computed outside
+    the trace (on CPU, numpy's radix argsort via
+    ``repro.kernels.radix_sort.bucket_argsort`` beats XLA's comparison
+    sort), and the kernel skips its own sort.  The permutation must be
+    exactly the stable argsort — stability defines it uniquely, so any
+    conforming producer yields bit-identical results.
     """
     nb = codes.shape[0]
     cap = table.codes.shape[0]
     mcodes = jnp.where(valid, codes, EMPTY_CODE)
-    order = jnp.argsort(mcodes)  # stable: ties keep original tuple order
+    if order is None:
+        order = jnp.argsort(mcodes)  # stable: ties keep original tuple order
     sc = mcodes[order]
     real = sc != EMPTY_CODE
     sk = jnp.where(real, kg[order], 0)
@@ -345,6 +370,107 @@ def _jitted_sharded(fn, mesh, axis):
     return entry[key]
 
 
+def _jitted_sharded_tables(fn, mesh, axis, table_names):
+    """Run-sharded execution for keyed-table operators.
+
+    Tables are **key-group-sharded**: every :class:`TableState` leaf
+    carries a leading shard axis ``(d, ...)`` and shard ``s`` owns exactly
+    the key groups ``{k : k*d // nkg == s}``.  The host lays the run
+    arrays out shard-major (each shard's runs tile a contiguous tuple
+    block), so a shard updates only its own sub-table — no cross-shard
+    merge is needed for tables, ownership *is* the merge.  Scalar columns
+    and outputs merge exactly like :func:`_jitted_sharded` (psum of
+    touched/valid-masked selects); a key group's runs land on one shard
+    only, so the duplicate-key-group hazard of plain run-sharding cannot
+    occur here.
+    """
+    entry = _JITTED.setdefault(fn, {})
+    key = ("shard_tab", id(mesh), axis, table_names)
+    if key not in entry:
+        from jax.sharding import PartitionSpec as P
+
+        def call(state, kgs, starts, ends, keys, values, ts):
+            state_spec = {
+                name: (
+                    TableState(*([P(axis)] * 7))
+                    if name in table_names
+                    else P()
+                )
+                for name in state
+            }
+
+            def shard(state_in, kgs_l, st_l, en_l, keys_r, values_r, ts_r):
+                nb = keys_r.shape[0]
+                st_loc = {
+                    name: (
+                        TableState(*(x[0] for x in v))
+                        if name in table_names
+                        else v
+                    )
+                    for name, v in state_in.items()
+                }
+                state2, outputs, out_counts = fn(
+                    st_loc, kgs_l, st_l, en_l, keys_r, values_r, ts_r
+                )
+                if out_counts is not None:
+                    raise ValueError(
+                        "shard_map execution requires 1:1 (or output-free) "
+                        "fn_jit bodies — out_counts must be None"
+                    )
+                touched = None
+                t_any = None
+                out_state = {}
+                for name, new in state2.items():
+                    if name in table_names:
+                        out_state[name] = TableState(*(x[None] for x in new))
+                        continue
+                    orig = state_in[name]
+                    leaves_o = jax.tree_util.tree_leaves(orig)
+                    num_kg = leaves_o[0].shape[0]
+                    if touched is None:
+                        touched = (
+                            jnp.zeros(num_kg, bool)
+                            .at[kgs_l]
+                            .set(True, mode="drop")
+                        )
+                        t_any = (
+                            jax.lax.psum(touched.astype(jnp.int32), axis) > 0
+                        )
+
+                    def merge(o, nw):
+                        t = touched.reshape(
+                            (num_kg,) + (1,) * (nw.ndim - 1)
+                        )
+                        summed = jax.lax.psum(
+                            jnp.where(t, nw, jnp.zeros((), nw.dtype)), axis
+                        )
+                        ta = t_any.reshape((num_kg,) + (1,) * (nw.ndim - 1))
+                        return jnp.where(ta, summed, o)
+
+                    out_state[name] = jax.tree_util.tree_map(merge, orig, new)
+                if outputs is None:
+                    return out_state, None
+                ok = tuple_valid(st_l, en_l, nb)
+
+                def omerge(o):
+                    return jax.lax.psum(
+                        jnp.where(ok, o, jnp.zeros((), o.dtype)), axis
+                    )
+
+                return out_state, jax.tree_util.tree_map(omerge, outputs)
+
+            state_m, outputs = _shard_map(
+                shard,
+                mesh,
+                in_specs=(state_spec, P(axis), P(axis), P(axis), P(), P(), P()),
+                out_specs=(state_spec, P()),
+            )(state, kgs, starts, ends, keys, values, ts)
+            return state_m, outputs, None
+
+        entry[key] = jax.jit(call)
+    return entry[key]
+
+
 # --------------------------------------------------------------------------
 # Per-operator runtime state.
 # --------------------------------------------------------------------------
@@ -358,6 +484,8 @@ class _OpState:
         "nkg",
         "fields",
         "has_tables",
+        "has_vectors",
+        "shards",
         "cols",
         "caps",
         "cnt_host",
@@ -368,7 +496,7 @@ class _OpState:
         "seen_keys",
     )
 
-    def __init__(self, op: int, spec, base: int) -> None:
+    def __init__(self, op: int, spec, base: int, shards: int = 0) -> None:
         self.op = op
         self.spec = spec
         self.base = base
@@ -377,18 +505,33 @@ class _OpState:
             spec.state_schema.fields if spec.state_schema is not None else ()
         )
         self.has_tables = any(f.kind == "table" for f in self.fields)
+        self.has_vectors = any(f.kind == "vector" for f in self.fields)
+        # > 0 ⇒ keyed tables live key-group-sharded: every TableState leaf
+        # carries a leading (shards,) axis and cnt_host tracks per shard.
+        self.shards = shards if self.has_tables else 0
         self.caps: dict[str, int] = {}
-        self.cnt_host: dict[str, int] = {}
+        self.cnt_host: dict[str, object] = {}
         self.col_auth = np.zeros(self.nkg, dtype=bool)
         cols = {}
         for f in self.fields:
             if f.kind == "scalar":
                 cols[f.name] = jnp.full(self.nkg, f.init, dtype=f.dtype)
+            elif f.kind == "vector":
+                cols[f.name] = VectorState(
+                    data=jnp.zeros((self.nkg, f.length), dtype=f.dtype),
+                    cnt=jnp.zeros(self.nkg, dtype=jnp.int32),
+                )
             else:
                 cap = _MIN_TABLE_CAP
                 self.caps[f.name] = cap
-                self.cnt_host[f.name] = 0
-                cols[f.name] = _empty_table(cap, f.dtype)
+                if self.shards:
+                    self.cnt_host[f.name] = np.zeros(self.shards, np.int64)
+                    cols[f.name] = _stack_tables(
+                        [_empty_table(cap, f.dtype)] * self.shards
+                    )
+                else:
+                    self.cnt_host[f.name] = 0
+                    cols[f.name] = _empty_table(cap, f.dtype)
         self.cols = cols
         self.value_names = (
             spec.schema.value.names if spec.schema is not None else None
@@ -400,6 +543,10 @@ class _OpState:
         )
         self.seen_keys: set = set()
 
+    def shard_of(self, lkgs: np.ndarray) -> np.ndarray:
+        """Owning shard per local key group (monotone in the key group)."""
+        return (np.asarray(lkgs, dtype=np.int64) * self.shards) // self.nkg
+
 
 def _empty_table(cap: int, dtype) -> TableState:
     return TableState(
@@ -410,6 +557,13 @@ def _empty_table(cap: int, dtype) -> TableState:
         perm=jnp.arange(cap, dtype=jnp.int32),
         cnt=jnp.zeros((), dtype=jnp.int32),
         epoch=jnp.ones((), dtype=jnp.int64),
+    )
+
+
+def _stack_tables(tables: list[TableState]) -> TableState:
+    """Stack per-shard sub-tables along a new leading shard axis."""
+    return TableState(
+        *(jnp.stack(leaf) for leaf in zip(*tables))
     )
 
 
@@ -438,10 +592,13 @@ class JitRuntime:
             if d & (d - 1):
                 raise ValueError("jit mesh axis size must be a power of two")
         self.compile_seconds = 0.0
+        shards = 0 if mesh is None else int(mesh.shape[mesh_axis])
         self._by_op: dict[int, _OpState] = {}
         for op, spec in enumerate(topology.operators):
             if spec.fn_jit is not None:
-                self._by_op[op] = _OpState(op, spec, topology.kg_base(op))
+                self._by_op[op] = _OpState(
+                    op, spec, topology.kg_base(op), shards=shards
+                )
 
     # ------------------------------------------------------------ execution
     def execute(self, op, kgs, starts, ends, keys, values, ts):
@@ -454,6 +611,27 @@ class JitRuntime:
         ost = self._by_op[op]
         n = len(keys)
         r = len(kgs)
+        # One host↔device boundary per call (dispatch + output fetch).
+        self._metrics.jit_host_syncs += 1
+        if ost.has_vectors and len(set(kgs)) != r:
+            # Window rings read pre-call occupancy per key group, so a call
+            # with duplicate key groups (a budget-leftover segment
+            # concatenated with a fresh one after a migration replay) would
+            # shift from a stale ring.  Fall back to the numpy fn_seg tier
+            # on the oracle dicts for this call.
+            if ost.spec.fn_seg is None:
+                raise ValueError(
+                    f"operator {ost.spec.name!r} declares vector state but "
+                    "no fn_seg fallback for duplicate-key-group segments"
+                )
+            for kg in set(int(k) for k in kgs):
+                self.ensure_dict(kg)
+            self._metrics.seg_calls += 1
+            self._metrics.seg_tuples += n
+            return ost.spec.fn_seg(
+                self._store.raw(), list(kgs), list(starts), list(ends),
+                keys, values, ts,
+            )
         nb = _bucket(n, _MIN_TUPLE_BUCKET)
         rb = _bucket(r, _MIN_RUN_BUCKET)
         if self._mesh is not None:
@@ -463,6 +641,10 @@ class JitRuntime:
         en_arr = np.asarray(ends, dtype=np.int64)
         if ost.fields:
             self._prepare_state(ost, lkgs, n)
+        if ost.shards:
+            return self._execute_sharded_tables(
+                ost, lkgs, st_arr, en_arr, keys, values, ts, n, r
+            )
         # Fresh padded buffers per call: jax zero-copies numpy on CPU, so a
         # reused scratch could be read after we overwrite it.
         kg_pad = np.full(rb, ost.nkg, dtype=np.int64)
@@ -492,14 +674,13 @@ class JitRuntime:
             and len(set(kgs)) == r
         )
         if use_shard:
-            # Run-sharding merges per-shard state by key-group ownership —
-            # sound for per-key-group columns, but flat keyed tables append
-            # to shared slab positions, so table ops stay on the plain call
-            # (key-group-sharded table state is the ROADMAP's next step).
-            # Duplicate key groups in one call (budget-leftover segments
-            # concatenated with a fresh batch) must not shard-split either:
-            # two shards would both update the kg from the same base and the
-            # merge would double-count it — fall back to the plain call.
+            # Plain run-sharding merges per-shard state by key-group
+            # ownership — sound for per-key-group columns (table operators
+            # take the key-group-sharded path above instead).  Duplicate key
+            # groups in one call (budget-leftover segments concatenated with
+            # a fresh batch) must not shard-split: two shards would both
+            # update the kg from the same base and the merge would
+            # double-count it — fall back to the plain call.
             jitted = _jitted_sharded(fn, self._mesh, self._mesh_axis)
         else:
             jitted = _jitted_plain(fn)
@@ -545,6 +726,120 @@ class JitRuntime:
             ov_np = np.asarray(ov)[:total]
         return (ok_np, ov_np, ot_np), lens
 
+    def _execute_sharded_tables(
+        self, ost, lkgs, st_arr, en_arr, keys, values, ts, n, r
+    ):
+        """Key-group-sharded execution of a keyed-table operator.
+
+        The host lays the call out shard-major: runs stable-sorted by their
+        owning shard, tuples gathered run-major so every shard's runs tile
+        a contiguous block, each shard padded to a common run bucket.  Per
+        key group, run order and within-run tuple order are preserved
+        (stable sort; a key group lives wholly on one shard), and equal
+        codes share a key group — so the per-code tie-break order inside
+        :func:`keyed_running_sum` is unchanged and the result is
+        bit-identical to the plain call, modulo the documented cumsum
+        float policy.  Outputs come back positionally over the permuted
+        tuples and are ungathered on the host (1:1 bodies only).
+        """
+        d = ost.shards
+        shard_ids = ost.shard_of(lkgs)
+        order_runs = np.argsort(shard_ids, kind="stable")
+        lens = en_arr - st_arr
+        if r:
+            perm = np.concatenate(
+                [np.arange(st_arr[i], en_arr[i]) for i in order_runs]
+            )
+        else:
+            perm = np.empty(0, np.int64)
+        rs_per = np.bincount(shard_ids, minlength=d)
+        rbs = _bucket(int(rs_per.max()) if r else 1, _MIN_RUN_BUCKET)
+        nb = _bucket(n, _MIN_TUPLE_BUCKET)
+        new_lens = lens[order_runs]
+        new_ends = np.cumsum(new_lens)
+        new_starts = new_ends - new_lens
+        kg_pad = np.full(d * rbs, ost.nkg, dtype=np.int64)
+        s_pad = np.empty(d * rbs, dtype=np.int64)
+        e_pad = np.empty(d * rbs, dtype=np.int64)
+        pos = 0
+        off = 0
+        for s in range(d):
+            cnt_s = int(rs_per[s])
+            blk_end = int(new_ends[pos + cnt_s - 1]) if cnt_s else off
+            base_i = s * rbs
+            s_pad[base_i : base_i + rbs] = blk_end
+            e_pad[base_i : base_i + rbs] = blk_end
+            if cnt_s:
+                kg_pad[base_i : base_i + cnt_s] = lkgs[
+                    order_runs[pos : pos + cnt_s]
+                ]
+                s_pad[base_i : base_i + cnt_s] = new_starts[pos : pos + cnt_s]
+                e_pad[base_i : base_i + cnt_s] = new_ends[pos : pos + cnt_s]
+            pos += cnt_s
+            off = blk_end
+        key_pad = np.zeros(nb, dtype=keys.dtype)
+        key_pad[:n] = np.asarray(keys)[perm]
+        ts_pad = np.zeros(nb, dtype=np.float64)
+        ts_pad[:n] = np.asarray(ts)[perm]
+        if ost.value_names is None:
+            v_arg = np.zeros(nb, dtype=values.dtype)
+            v_arg[:n] = np.asarray(values)[perm]
+        else:
+            v_arg = {}
+            for name in ost.value_names:
+                col = values[name]
+                pad = np.zeros(nb, dtype=col.dtype)
+                pad[:n] = np.asarray(col)[perm]
+                v_arg[name] = pad
+        fn = ost.spec.fn_jit
+        table_names = tuple(
+            sorted(f.name for f in ost.fields if f.kind == "table")
+        )
+        jitted = _jitted_sharded_tables(
+            fn, self._mesh, self._mesh_axis, table_names
+        )
+        cache_key = (
+            nb, rbs, tuple(sorted(ost.caps.items())), "shard_tab"
+        )
+        first = cache_key not in ost.seen_keys
+        if first:
+            ost.seen_keys.add(cache_key)
+            self._metrics.jit_compiles += 1
+            t0 = time.perf_counter()
+        result = jitted(ost.cols, kg_pad, s_pad, e_pad, key_pad, v_arg, ts_pad)
+        if first:
+            jax.block_until_ready(result)
+            self.compile_seconds += time.perf_counter() - t0
+        state_new, outputs, _ = result
+        ost.cols = state_new
+        for f in ost.fields:
+            if f.kind == "table":
+                ost.cnt_host[f.name] = np.asarray(
+                    state_new[f.name].cnt, dtype=np.int64
+                )
+        ost.col_auth[lkgs] = True
+        self._metrics.jit_calls += 1
+        self._metrics.jit_tuples += n
+        if outputs is None:
+            return None, None
+        ok, ov, ot = outputs
+        inv = np.empty(n, dtype=np.int64)
+        inv[perm] = np.arange(n)
+        ok_np = np.asarray(ok)[:n][inv]
+        ot_np = np.asarray(ot)[:n][inv]
+        if isinstance(ov, dict):
+            if ost.out_dtype is None:
+                raise ValueError(
+                    f"fn_jit of operator {ost.spec.name!r} returned record "
+                    "columns but the operator declares no out_schema"
+                )
+            ov_np = np.empty(n, dtype=ost.out_dtype)
+            for name in ost.out_names:
+                ov_np[name] = np.asarray(ov[name])[:n][inv]
+        else:
+            ov_np = np.asarray(ov)[:n][inv]
+        return (ok_np, ov_np, ot_np), None
+
     # ----------------------------------------------------- state coherence
     def _prepare_state(self, ost: _OpState, lkgs: np.ndarray, n: int) -> None:
         """Push dict-authoritative state, then size tables for this call."""
@@ -554,8 +849,10 @@ class JitRuntime:
         for f in ost.fields:
             if f.kind != "table":
                 continue
-            # The segment can insert at most one entry per tuple.
-            need = ost.cnt_host[f.name] + n
+            # The segment can insert at most one entry per tuple (per
+            # shard, when sharded — every shard sizes for the worst case).
+            cnt = ost.cnt_host[f.name]
+            need = (int(np.max(cnt)) if ost.shards else cnt) + n
             if need > ost.caps[f.name]:
                 self._grow(ost, f, need)
 
@@ -566,6 +863,24 @@ class JitRuntime:
         t = ost.cols[f.name]
         old = ost.caps[f.name]
         pad = new_cap - old
+        if ost.shards:
+            d = ost.shards
+            codes = np.full((d, new_cap), EMPTY_CODE, dtype=np.int64)
+            codes[:, :old] = np.asarray(t.codes)
+            tail = jnp.broadcast_to(
+                jnp.arange(old, new_cap, dtype=t.perm.dtype), (d, pad)
+            )
+            ost.cols[f.name] = TableState(
+                codes=jnp.asarray(codes),
+                vals=jnp.pad(t.vals, ((0, 0), (0, pad))),
+                seq=jnp.pad(t.seq, ((0, 0), (0, pad))),
+                owner=jnp.pad(t.owner, ((0, 0), (0, pad))),
+                perm=jnp.concatenate([t.perm, tail], axis=1),
+                cnt=t.cnt,
+                epoch=t.epoch,
+            )
+            ost.caps[f.name] = new_cap
+            return
         codes = np.full(new_cap, EMPTY_CODE, dtype=np.int64)
         codes[:old] = np.asarray(t.codes)
         ost.cols[f.name] = TableState(
@@ -605,6 +920,23 @@ class JitRuntime:
                 ost.cols[f.name] = (
                     ost.cols[f.name].at[jnp.asarray(pend)].set(rows)
                 )
+                continue
+            if f.kind == "vector":
+                v = ost.cols[f.name]
+                data = np.zeros((m, f.length), dtype=f.dtype)
+                cnt = np.zeros(m, dtype=np.int32)
+                for j, lk in enumerate(pend):
+                    ring = store[ost.base + int(lk)].get(f.name, [])
+                    cnt[j] = len(ring)
+                    data[j, : len(ring)] = ring
+                idx = jnp.asarray(pend)
+                ost.cols[f.name] = VectorState(
+                    data=v.data.at[idx].set(data),
+                    cnt=v.cnt.at[idx].set(cnt),
+                )
+                continue
+            if ost.shards:
+                self._push_sharded_table(ost, f, pend)
                 continue
             t = ost.cols[f.name]
             cnt = ost.cnt_host[f.name]
@@ -657,12 +989,95 @@ class JitRuntime:
             ost.cnt_host[f.name] = total
         ost.col_auth[pend] = True
 
+    def _push_sharded_table(
+        self, ost: _OpState, f: StateField, pend: np.ndarray
+    ) -> None:
+        """Per-shard restatement of the flat table rebuild: only the shards
+        owning pushed key groups are rebuilt; the rest copy through (their
+        EMPTY perm tail extends with fresh indices on a capacity bump)."""
+        store = self._store.raw()
+        d = ost.shards
+        t = ost.cols[f.name]
+        cnt_arr = np.asarray(ost.cnt_host[f.name], dtype=np.int64).copy()
+        codes_h = np.asarray(t.codes)
+        vals_h = np.asarray(t.vals)
+        seq_h = np.asarray(t.seq)
+        owner_h = np.asarray(t.owner)
+        perm_h = np.asarray(t.perm)
+        epoch_h = np.asarray(t.epoch).copy()
+        shard_ids = ost.shard_of(pend)
+        old_cap = codes_h.shape[1]
+        cap = ost.caps[f.name]
+        enc = f.key_encode
+        per_shard = {}
+        for s in sorted(set(shard_ids.tolist())):
+            kgs_s = pend[shard_ids == s]
+            cnt = int(cnt_arr[s])
+            keep = ~np.isin(owner_h[s, :cnt], kgs_s)
+            new_c, new_v, new_o = [], [], []
+            for lk in kgs_s:
+                dct = store[ost.base + int(lk)].get(f.name, {})
+                for key, val in dct.items():
+                    new_c.append(enc(key))
+                    new_v.append(val)
+                    new_o.append(lk)
+            total = int(keep.sum()) + len(new_c)
+            per_shard[s] = (cnt, keep, new_c, new_v, new_o, total)
+            if total > cap:
+                cap = _bucket(total, _MIN_TABLE_CAP)
+        ost.caps[f.name] = cap
+        pc = np.full((d, cap), EMPTY_CODE, dtype=np.int64)
+        pv = np.zeros((d, cap), dtype=f.dtype)
+        ps = np.zeros((d, cap), dtype=np.int64)
+        po = np.zeros((d, cap), dtype=np.int32)
+        pp = np.zeros((d, cap), dtype=np.int32)
+        for s in range(d):
+            if s not in per_shard:
+                pc[s, :old_cap] = codes_h[s]
+                pv[s, :old_cap] = vals_h[s]
+                ps[s, :old_cap] = seq_h[s]
+                po[s, :old_cap] = owner_h[s]
+                pp[s, :old_cap] = perm_h[s]
+                pp[s, old_cap:] = np.arange(old_cap, cap)
+                continue
+            cnt, keep, new_c, new_v, new_o, total = per_shard[s]
+            n_keep = int(keep.sum())
+            pc[s, :n_keep] = codes_h[s, :cnt][keep]
+            pv[s, :n_keep] = vals_h[s, :cnt][keep]
+            ps[s, :n_keep] = seq_h[s, :cnt][keep]
+            po[s, :n_keep] = owner_h[s, :cnt][keep]
+            base_seq = int(ps[s, :n_keep].max()) + 1 if n_keep else 0
+            if new_c:
+                pc[s, n_keep:total] = new_c
+                pv[s, n_keep:total] = new_v
+                ps[s, n_keep:total] = base_seq + np.arange(len(new_c))
+                po[s, n_keep:total] = new_o
+            pp[s] = np.argsort(pc[s], kind="stable").astype(np.int32)
+            max_seq = int(ps[s, :total].max()) if total else 0
+            epoch_h[s] = max(int(epoch_h[s]), (max_seq >> 32) + 1)
+            cnt_arr[s] = total
+        ost.cols[f.name] = TableState(
+            codes=jnp.asarray(pc),
+            vals=jnp.asarray(pv),
+            seq=jnp.asarray(ps),
+            owner=jnp.asarray(po),
+            perm=jnp.asarray(pp),
+            cnt=jnp.asarray(cnt_arr.astype(np.int32)),
+            epoch=jnp.asarray(epoch_h),
+        )
+        ost.cnt_host[f.name] = cnt_arr
+
     def _to_dict(self, ost: _OpState, lk: int, host: dict) -> dict:
         """Materialize one key group's columns as the oracle state dict."""
         out: dict = {}
         for f in ost.fields:
             if f.kind == "scalar":
                 out[f.name] = f.py(host[f.name][lk])
+            elif f.kind == "vector":
+                data, cnt = host[f.name]
+                out[f.name] = [
+                    f.py(x) for x in data[lk][: int(cnt[lk])]
+                ]
             else:
                 codes, vals, seq, owner = host[f.name]
                 mine = np.flatnonzero(owner == lk)
@@ -680,6 +1095,25 @@ class JitRuntime:
         for f in ost.fields:
             if f.kind == "scalar":
                 host[f.name] = np.asarray(ost.cols[f.name])
+            elif f.kind == "vector":
+                v = ost.cols[f.name]
+                host[f.name] = (np.asarray(v.data), np.asarray(v.cnt))
+            elif ost.shards:
+                # Flatten the per-shard slabs into one valid-entry view; a
+                # key group's entries live wholly in its owning shard, so
+                # the per-key-group seq order is preserved.
+                t = ost.cols[f.name]
+                cnt = ost.cnt_host[f.name]
+                codes_h = np.asarray(t.codes)
+                vals_h = np.asarray(t.vals)
+                seq_h = np.asarray(t.seq)
+                owner_h = np.asarray(t.owner)
+                host[f.name] = tuple(
+                    np.concatenate(
+                        [arr[s, : int(cnt[s])] for s in range(ost.shards)]
+                    )
+                    for arr in (codes_h, vals_h, seq_h, owner_h)
+                )
             else:
                 t = ost.cols[f.name]
                 cnt = ost.cnt_host[f.name]

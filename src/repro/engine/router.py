@@ -23,6 +23,11 @@ class Router:
         if len(initial_alloc) != num_keygroups:
             raise ValueError("alloc length mismatch")
         self.table = np.asarray(initial_alloc, dtype=np.int64).copy()
+        # Bumped on every table mutation — consumers that cache a derived
+        # view of the table (the superstep runtime keeps device-resident
+        # copies) re-read when the version moves; this is the per-superstep
+        # reconfiguration hook.
+        self.version = 0
         self._buffers: dict[int, list[Batch]] = {}
         self._in_flight: set[int] = set()
         self._in_flight_arr = np.empty(0, dtype=np.int64)  # sorted cache
@@ -52,6 +57,7 @@ class Router:
     # -- migration protocol ----------------------------------------------------
     def redirect(self, kg: int, dst: int) -> None:
         self.table[kg] = dst
+        self.version += 1
         self._in_flight.add(kg)
         self._in_flight_arr = np.fromiter(self._in_flight, dtype=np.int64)
         self._buffers.setdefault(kg, [])

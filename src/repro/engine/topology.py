@@ -168,6 +168,11 @@ class StateField:
     must always hash to the same key group (keying the table by the
     operator's partition key guarantees this).  Capacity is managed by the
     runtime (power-of-two growth; a growth step is a recompile bucket).
+
+    ``kind="vector"``: a bounded per-key-group ring of ``length`` ``dtype``
+    cells plus an occupancy count (sliding windows), materialized as
+    ``{name: [py(x) for x in cells[:count]]}`` oldest-first — exactly the
+    list the per-run oracle keeps.
     """
 
     name: str
@@ -177,14 +182,17 @@ class StateField:
     py: Callable = int  # python scalar constructor used by to_dict
     key_encode: Optional[Callable[[object], int]] = None
     key_decode: Optional[Callable[[int], object]] = None
+    length: int = 0  # vector kind: bounded window capacity
 
     def __post_init__(self) -> None:
-        if self.kind not in ("scalar", "table"):
+        if self.kind not in ("scalar", "table", "vector"):
             raise ValueError(f"unknown StateField kind {self.kind!r}")
         if self.kind == "table" and (
             self.key_encode is None or self.key_decode is None
         ):
             raise ValueError(f"table field {self.name!r} needs key_encode/decode")
+        if self.kind == "vector" and self.length <= 0:
+            raise ValueError(f"vector field {self.name!r} needs length > 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -318,6 +326,26 @@ class OperatorSpec:
         (sources forward their input, so their out schema is ``schema``).
         Validated against every downstream operator's declared input schema
         at construction time.
+      jit_fusible: the author's claim that ``fn_jit`` is eligible for the
+        fused device superstep: strictly 1:1 (``out_counts is None`` and one
+        output per input tuple), state updates are pure per-run scatters
+        (insensitive to run order and to empty runs), and — for
+        non-terminal operators — ``out_schema`` is declared so the device
+        can route outputs without a host conform step.  The superstep
+        runtime additionally checks the structural conditions (linear
+        chain, identity key_fn, integer keys, scalar-only state) and falls
+        back to the per-operator jit tick when any fail.
+      jit_key_map: optional host-evaluable key transform: the author's claim
+        that ``fn_jit`` emits keys equal to ``jit_key_map(input_keys)``
+        element-wise, in input order (pass ``lambda keys: keys`` for
+        pass-through operators).  When every non-terminal fused operator
+        declares one, the superstep scheduler can evaluate the whole routing
+        schedule (hashes, stable radix permutations, per-edge count
+        matrices) on the host ahead of the K-tick scan, leaving the scan
+        body sort-free; chains with an undeclared map still fuse but sort
+        on-device.  Must be wrap-consistent with the device body (numpy and
+        jax integer arithmetic overflow identically, so plain column math
+        qualifies).
     """
 
     name: str
@@ -334,6 +362,8 @@ class OperatorSpec:
     key_by_value_col: Optional[Callable[[np.ndarray], np.ndarray]] = None
     fn_jit: Optional[JitFn] = None  # compiled tier (see JitFn / jitexec)
     state_schema: Optional[StateSchema] = None
+    jit_fusible: bool = False  # superstep-fusible fn_jit (see above)
+    jit_key_map: Optional[Callable[[np.ndarray], np.ndarray]] = None
 
 
 class Topology:

@@ -28,6 +28,16 @@ Queues are representation-agnostic: a segment's key/value arrays are
 whatever the routed batch carried — native structured records on
 schema-typed edges (slicing stays a fixed-width view, no per-element
 refcounting) or object arrays on undeclared ones.
+
+The fused superstep runtime (:mod:`repro.engine.superstep`) additionally
+pushes *shadow segments*: run metadata (kgs/starts/ends/costs, with bounds
+absolute into the routed arrays) whose key/value/ts slots are ``None``
+because the routed tuples stayed resident on the device.  Shadow segments
+carry exact cost accounting — backpressure, budgets and queue-cost
+trajectories are bit-identical to real segments — but cannot be sliced;
+every engine path that touches segment arrays (``extract_keygroup``,
+``clear`` on migration/failure, any classic drain) runs only after
+``SuperstepRuntime.flush_to_host()`` fills the ``None`` slots in place.
 """
 
 from __future__ import annotations

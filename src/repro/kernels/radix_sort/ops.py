@@ -1,0 +1,55 @@
+"""Dispatching wrappers for the bucketed radix argsort.
+
+Two entry points, matching the two places the engine sorts routing codes:
+
+* :func:`bucket_argsort` — host-side (numpy in, numpy out).  On CPU this is
+  the *pre-sorted order handoff*: numpy's radix argsort is the fastest
+  stable sort at these ranges, so the host computes the permutation and
+  hands it to the device (``keyed_running_sum(order=...)``).  On TPU the
+  Pallas kernel runs instead.
+
+* :func:`bucket_argsort_jax` — traceable, for use **inside** a jit region
+  (the fused superstep's routing step, where no host is reachable).  TPU →
+  Pallas counting sort; other backends → XLA's stable argsort.
+
+Both produce the permutation ``np.argsort(codes, kind="stable")`` would.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.radix_sort.radix_sort import bucket_argsort_pallas
+from repro.kernels.radix_sort.ref import bucket_argsort_ref
+
+
+def bucket_argsort(
+    codes: np.ndarray,
+    num_buckets: int,
+    *,
+    force_pallas: bool = False,
+) -> np.ndarray:
+    """Stable argsort of host codes in ``[0, num_buckets)`` → int64 order."""
+    codes = np.asarray(codes)
+    if codes.size == 0:
+        return np.empty(0, dtype=np.int64)
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        order = bucket_argsort_pallas(
+            jnp.asarray(codes, jnp.int32),
+            num_buckets=num_buckets,
+            interpret=not on_tpu,
+        )
+        return np.asarray(order, dtype=np.int64)
+    return bucket_argsort_ref(codes).astype(np.int64)
+
+
+def bucket_argsort_jax(codes: jax.Array, num_buckets: int) -> jax.Array:
+    """Traceable stable argsort for codes in ``[0, num_buckets)``."""
+    if jax.default_backend() == "tpu":
+        return bucket_argsort_pallas(
+            codes.astype(jnp.int32), num_buckets=num_buckets
+        )
+    return jnp.argsort(codes, stable=True)

@@ -1,0 +1,127 @@
+"""Stable bucketed counting argsort for small-range int keys (Pallas TPU).
+
+The engine's routing hot path sorts composite codes ``node*nkg + local_kg``
+(bounded by ``num_nodes × num_keygroups``, a few thousand at paper scale) to
+group a routed batch into contiguous (node, key-group) runs.  XLA's generic
+comparison sort is ~20× slower than a counting sort at these ranges, so this
+kernel restates numpy's stable radix argsort as two Pallas passes:
+
+1. **histogram** — grid over row blocks; each step writes its block's
+   per-bucket tuple counts (one row of a ``(rows, nbuckets)`` table).
+2. **rank** — after a cheap jnp prefix-sum turns the histogram table into
+   per-block bucket base offsets, a second grid pass computes each element's
+   destination rank: ``base[block, bucket] + exclusive-cumsum`` of the
+   block-local one-hot, i.e. elements of equal code keep their input order.
+
+Stability is structural: bases are accumulated in block order and the
+within-block cumsum runs in element order, so the produced permutation is
+bit-identical to ``np.argsort(codes, kind="stable")`` — the CPU data plane's
+radix argsort — at every shape.  Padding rides a dedicated overflow bucket
+(``nbuckets``) appended by the wrapper so it sinks to the tail of the
+permutation without disturbing valid ranks.
+
+The one-hot compare costs ``block × nbuckets`` int32 lanes per step, the
+same VMEM budget shape as keygroup_partition's histogram tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(codes_ref, hist_ref, *, nbk: int):
+    c = codes_ref[...]  # (1, block) int32, padding pre-mapped to nbk-1
+    block = c.shape[-1]
+    onehot = c.reshape(block, 1) == jax.lax.broadcasted_iota(
+        jnp.int32, (block, nbk), 1
+    )
+    # dtype pinned: the jit tier flips x64 process-wide; an un-pinned sum
+    # would promote to int64 and fail the swap into the int32 output tile.
+    hist_ref[...] = onehot.astype(jnp.int32).sum(
+        axis=0, keepdims=True, dtype=jnp.int32
+    )
+
+
+def _rank_kernel(codes_ref, base_ref, ranks_ref, *, nbk: int):
+    c = codes_ref[...]  # (1, block) int32
+    block = c.shape[-1]
+    onehot = (
+        c.reshape(block, 1)
+        == jax.lax.broadcasted_iota(jnp.int32, (block, nbk), 1)
+    ).astype(jnp.int32)
+    # Exclusive cumsum in element order == "how many equal codes before me
+    # in this block" — the stability guarantee.
+    within = jnp.cumsum(onehot, axis=0, dtype=jnp.int32) - onehot
+    own_off = (within * onehot).sum(axis=1, dtype=jnp.int32)
+    own_base = (base_ref[...].reshape(1, nbk) * onehot).sum(
+        axis=1, dtype=jnp.int32
+    )
+    ranks_ref[...] = (own_base + own_off).reshape(1, block)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_buckets", "block", "interpret")
+)
+def bucket_argsort_pallas(
+    codes: jax.Array,  # (n,) int32 in [0, num_buckets)
+    *,
+    num_buckets: int,
+    block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stable argsort of small-range codes; returns the (n,) int32 order.
+
+    ``codes[order]`` is sorted ascending and equal codes keep input order —
+    bit-identical to ``np.argsort(codes, kind="stable")``.
+    """
+    n = codes.shape[0]
+    nbk = num_buckets + 1  # +1 overflow bucket for padding
+    pad = (-n) % block
+    if pad:
+        codes = jnp.concatenate(
+            [codes, jnp.full(pad, num_buckets, jnp.int32)]
+        )
+    npad = n + pad
+    rows = npad // block
+
+    hist = pl.pallas_call(
+        functools.partial(_hist_kernel, nbk=nbk),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, nbk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, nbk), jnp.int32),
+        interpret=interpret,
+    )(codes.reshape(rows, block))
+
+    # Per-block bucket bases: global bucket start (exclusive cumsum over
+    # buckets of the totals) + count of this bucket in earlier blocks
+    # (exclusive cumsum over blocks).  (rows, nbk) ints — cheap on-device.
+    totals = hist.sum(axis=0, dtype=jnp.int32)
+    global_start = jnp.cumsum(totals, dtype=jnp.int32) - totals
+    block_excl = jnp.cumsum(hist, axis=0, dtype=jnp.int32) - hist
+    base = global_start[None, :] + block_excl
+
+    ranks = pl.pallas_call(
+        functools.partial(_rank_kernel, nbk=nbk),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, nbk), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, block), jnp.int32),
+        interpret=interpret,
+    )(codes.reshape(rows, block), base)
+
+    ranks = ranks.reshape(-1)
+    # Invert ranks → order.  Valid elements occupy ranks [0, n) (padding
+    # sank into the overflow bucket), so the first n entries are the
+    # stable argsort of the unpadded input.
+    order = jnp.zeros(npad, jnp.int32).at[ranks].set(
+        jnp.arange(npad, dtype=jnp.int32)
+    )
+    return order[:n]

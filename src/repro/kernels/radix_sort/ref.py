@@ -1,0 +1,23 @@
+"""Oracles for the bucketed radix argsort.
+
+The ultimate reference is numpy's stable (radix) argsort — the exact
+permutation the CPU data plane's routing step produces — so the Pallas
+kernel is pinned **bit-identical** against it, not merely allclose.  A jnp
+restatement is provided for asserting inside traced code at any shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bucket_argsort_ref(codes: np.ndarray) -> np.ndarray:
+    """numpy stable argsort — the engine's host routing permutation."""
+    return np.argsort(np.asarray(codes), kind="stable")
+
+
+def bucket_argsort_jnp(codes: jax.Array) -> jax.Array:
+    """jnp stable argsort (XLA comparison sort) — traceable oracle."""
+    return jnp.argsort(codes, stable=True)

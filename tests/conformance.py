@@ -9,6 +9,12 @@ backpressure — is driven through every execution configuration:
   ``fn_jit`` execute contiguous segments as jitted programs over device
   state columns (``repro.engine.jitexec``); operators without ``fn_jit``
   fall back bit-identically to the numpy ``fn_seg``;
+* ``soa+seg+schema+jit+superstep`` — same plus ``Engine(superstep=True)``:
+  eligible whole ticks fuse route → drain → ``fn_jit`` into one device
+  program (``repro.engine.superstep``), falling back to the classic tick —
+  after materializing device-pending columns — whenever a tick is not
+  fusible, so every pinned field (including migration blobs) must still
+  match;
 * ``soa+seg``   — schemas stripped (``use_schema=False``): every edge
   carries the object-array representation;
 * ``soa+fn``    — SoA queues with ``fn_seg`` also stripped (every run takes
@@ -67,13 +73,14 @@ from repro.engine.topology import (
     Topology,
 )
 
-# (queue_impl, use_fn_seg, use_schema, use_fn_jit)
+# (queue_impl, use_fn_seg, use_schema, use_fn_jit, superstep)
 CONFIGS = (
-    ("soa", True, True, False),
-    ("soa", True, False, False),
-    ("soa", False, False, False),
-    ("deque", False, False, False),
-    ("soa", True, True, True),
+    ("soa", True, True, False, False),
+    ("soa", True, False, False, False),
+    ("soa", False, False, False, False),
+    ("deque", False, False, False, False),
+    ("soa", True, True, True, False),
+    ("soa", True, True, True, True),
 )
 
 # The documented XLA reduction-order tolerance (see module docstring): only
@@ -136,6 +143,7 @@ def run_scenario(
     use_fn_seg,
     use_schema=False,
     use_fn_jit=False,
+    superstep=False,
 ):
     """Drive one engine configuration through the scenario; return a result
     dict of everything the equivalence contract pins."""
@@ -149,6 +157,7 @@ def run_scenario(
         use_fn_seg=use_fn_seg,
         use_schema=use_schema,
         use_fn_jit=use_fn_jit,
+        superstep=superstep,
     )
     feeds = feeder_factory()
     rng = np.random.default_rng(scenario.seed + 1)
@@ -191,20 +200,24 @@ def run_scenario(
         "typed_batches": eng.metrics.typed_batches,
         "jit_calls": eng.metrics.jit_calls,
         "jit_compiles": eng.metrics.jit_compiles,
+        "jit_host_syncs": eng.metrics.jit_host_syncs,
     }
 
 
-def _config_name(impl: str, seg: bool, schema: bool, jit: bool = False) -> str:
+def _config_name(
+    impl: str, seg: bool, schema: bool, jit: bool = False, sstep: bool = False
+) -> str:
     return (
         f"{impl}+{'seg' if seg else 'fn'}"
         f"{'+schema' if schema else ''}{'+jit' if jit else ''}"
+        f"{'+superstep' if sstep else ''}"
     )
 
 
 def run_configs(topo_factory, feeder_factory, scenario):
     """Run every execution configuration; returns {config name: result}."""
     return {
-        _config_name(impl, seg, schema, jit): run_scenario(
+        _config_name(impl, seg, schema, jit, sstep): run_scenario(
             topo_factory,
             feeder_factory,
             scenario,
@@ -212,8 +225,9 @@ def run_configs(topo_factory, feeder_factory, scenario):
             use_fn_seg=seg,
             use_schema=schema,
             use_fn_jit=jit,
+            superstep=sstep,
         )
-        for impl, seg, schema, jit in CONFIGS
+        for impl, seg, schema, jit, sstep in CONFIGS
     }
 
 
@@ -244,7 +258,7 @@ def assert_equivalent(results: dict[str, dict]) -> None:
     base_name, base = names[0], results[names[0]]
     for name in names[1:]:
         other = results[name]
-        tol = name.endswith("+jit")
+        tol = "+jit" in name
         for field, expect in base.items():
             if field in (
                 "seg_calls",
@@ -252,6 +266,7 @@ def assert_equivalent(results: dict[str, dict]) -> None:
                 "typed_batches",
                 "jit_calls",
                 "jit_compiles",
+                "jit_host_syncs",
             ):
                 continue  # differs by construction across configurations
             got = other[field]
@@ -379,6 +394,7 @@ def make_pipeline_topo(kgs: int = 16) -> Topology:
             num_keygroups=kgs,
             fn_seg=mid_seg,
             fn_jit=_pipe_mid_jit,
+            jit_fusible=True,
             state_schema=_PIPE_STATE,
             schema=scalar,
             out_schema=scalar,
@@ -392,6 +408,7 @@ def make_pipeline_topo(kgs: int = 16) -> Topology:
             is_sink=True,
             fn_seg=sink_seg,
             fn_jit=_pipe_sink_jit,
+            jit_fusible=True,
             state_schema=_PIPE_STATE,
             schema=scalar,
             out_schema=scalar,
@@ -436,7 +453,11 @@ JOBS = {
 #
 # Every operator implements fn + fn_seg, and each fn_seg handles both value
 # representations, so any schema/no-schema mix along any DAG must stay
-# bit-identical across the full CONFIGS matrix.
+# bit-identical across the full CONFIGS matrix.  All kinds except the
+# keyed-table ``accum`` also carry an fn_jit port (attached whenever the
+# declared schemas allow the jit tier to run them — see
+# :func:`_fuzz_jit_bodies`), so the same DAGs exercise the compiled tier
+# and, on eligible linear chains, the fused superstep.
 # ---------------------------------------------------------------------------
 
 FUZZ_RECORD_DTYPE = np.dtype([("a", "i8"), ("b", "f8")])
@@ -625,6 +646,155 @@ def _fuzz_bodies(kind: str, family: str):
     return fn, seg
 
 
+_FUZZ_JIT_STATE = StateSchema(
+    (StateField("n", "scalar", dtype=np.int64, py=int),)
+)
+_FUZZ_WINDOW_STATE = StateSchema(
+    (
+        StateField(
+            "buf", "vector", dtype=np.float64, py=float, length=_FUZZ_WINDOW
+        ),
+    )
+)
+
+
+def _fuzz_jit_bodies(kind: str, family: str):
+    """(fn_jit, state_schema) port of one generic fuzz operator.
+
+    ``accum`` (keyed-table state) stays on the numpy tiers → ``(None,
+    None)``.  The ports follow the fn_jit contract end to end: run bounds
+    may be padded (``kgs`` with the key-group count, ``starts``/``ends``
+    with the tuple count), scatters use ``mode="drop"``, and the 1:1 ops'
+    state updates are run-order-insensitive scatter-adds.  ``filter``
+    compacts with a stable partition (kept tuples keep the oracle's global
+    order) and returns per-run ``out_counts``; ``window`` mirrors the
+    oracle's left-fold window sum over a :class:`repro.engine.jitexec.
+    VectorState` ring, so its floats stay bit-identical, not merely within
+    the jit tolerance.
+    """
+    rec = family == "record"
+    if kind == "accum":
+        return None, None
+
+    if kind == "rekey":
+
+        def fn_jit(state, kgs, starts, ends, keys, values, ts):
+            from repro.engine import jitexec as jx
+
+            return (
+                {"n": jx.count_runs(state["n"], kgs, starts, ends)},
+                (keys + 7, values, ts),
+                None,
+            )
+
+        return fn_jit, _FUZZ_JIT_STATE
+
+    if kind == "vshift":
+
+        def fn_jit(state, kgs, starts, ends, keys, values, ts):
+            from repro.engine import jitexec as jx
+
+            return (
+                {"n": jx.count_runs(state["n"], kgs, starts, ends)},
+                (keys, values + 0.5, ts),
+                None,
+            )
+
+        return fn_jit, _FUZZ_JIT_STATE
+
+    if kind == "project":
+
+        def fn_jit(state, kgs, starts, ends, keys, values, ts):
+            from repro.engine import jitexec as jx
+
+            return (
+                {"n": jx.count_runs(state["n"], kgs, starts, ends)},
+                (keys, {"a": values["a"], "b": values["b"] + values["a"]}, ts),
+                None,
+            )
+
+        return fn_jit, _FUZZ_JIT_STATE
+
+    if kind == "filter":
+
+        def fn_jit(state, kgs, starts, ends, keys, values, ts):
+            import jax.numpy as jnp
+
+            from repro.engine import jitexec as jx
+
+            n = keys.shape[0]
+            new = {"n": jx.count_runs(state["n"], kgs, starts, ends)}
+            keep = (values["a"] % 3 != 0) if rec else (keys % 3 != 0)
+            keepv = jx.tuple_valid(starts, ends, n) & keep
+            # Stable partition: kept tuples first, in run-major order — the
+            # compacted layout the engine splits back by out_counts.
+            order = jnp.argsort(jnp.where(keepv, 0, 1), stable=True)
+            if rec:
+                ov = {nm: col[order] for nm, col in values.items()}
+            else:
+                ov = values[order]
+            oc = (
+                jnp.zeros(kgs.shape[0], jnp.int64)
+                .at[jx.run_of_tuples(ends, n)]
+                .add(keepv.astype(jnp.int64))
+            )
+            return new, (keys[order], ov, ts[order]), oc
+
+        return fn_jit, _FUZZ_JIT_STATE
+
+    # window: sliding count window over a fixed-length VectorState ring.
+    def fn_jit(state, kgs, starts, ends, keys, values, ts):
+        import jax.numpy as jnp
+
+        from repro.engine import jitexec as jx
+
+        W = _FUZZ_WINDOW
+        data, cnt = state["buf"].data, state["buf"].cnt
+        nkg = data.shape[0]
+        n = keys.shape[0]
+        payload = values["b"] if rec else values
+        # Per-tuple window sum: tuple at position p (its run's m-th payload,
+        # ring count c before the run) sums the last min(W, c+m) of
+        # ring ++ payload[start..p], oldest first — the oracle's left fold.
+        ridx = jx.run_of_tuples(ends, n)
+        kg_t = jnp.clip(kgs[ridx], 0, nkg - 1)
+        c_t = cnt[kg_t].astype(jnp.int64)
+        pos = jnp.arange(n)
+        m = pos - starts[ridx] + 1
+        s = jnp.zeros(n, jnp.float64)
+        for d in range(W - 1, -1, -1):  # back-offset from the newest element
+            pay = payload[jnp.clip(pos - d, 0, n - 1)]
+            ring = data[kg_t, jnp.clip(c_t + m - 1 - d, 0, W - 1)]
+            s = jnp.where(d < c_t + m, s + jnp.where(d < m, pay, ring), s)
+        # New ring per run: the last min(W, c+L) elements of ring ++ payload,
+        # re-packed oldest-first into slots [0, new_cnt).
+        L = ends - starts
+        kg_r = jnp.clip(kgs, 0, nkg - 1)
+        c_r = cnt[kg_r].astype(jnp.int64)
+        new_cnt = jnp.minimum(c_r + L, W)
+        j = jnp.arange(W)[None, :]
+        s_idx = (c_r + L - new_cnt)[:, None] + j
+        from_pay = s_idx >= c_r[:, None]
+        pay_idx = starts[:, None] + (s_idx - c_r[:, None])
+        row = jnp.where(
+            j < new_cnt[:, None],
+            jnp.where(
+                from_pay,
+                payload[jnp.clip(pay_idx, 0, n - 1)],
+                data[kg_r[:, None], jnp.clip(s_idx, 0, W - 1)],
+            ),
+            0.0,
+        )
+        new_vst = jx.VectorState(
+            data.at[kgs].set(row, mode="drop"),
+            cnt.at[kgs].set(new_cnt.astype(cnt.dtype), mode="drop"),
+        )
+        out_v = {"a": values["a"], "b": s} if rec else s
+        return {"buf": new_vst}, (keys, out_v, ts), None
+
+    return fn_jit, _FUZZ_WINDOW_STATE
+
+
 def make_fuzz_topology(spec: dict) -> Topology:
     """Build the randomized DAG a fuzz spec describes (deterministic)."""
     family = spec["family"]
@@ -651,6 +821,21 @@ def make_fuzz_topology(spec: dict) -> Topology:
         elif op["key"] == "byval" and family == "record":
             kw["key_by_value"] = lambda v: v[0] % 11
             kw["key_by_value_col"] = lambda v: v["a"] % np.int64(11)
+        fj, st = _fuzz_jit_bodies(op["kind"], family)
+        # The jit tier needs native input columns (declared input schema)
+        # and, for record-family dict outputs, a declared out_schema to
+        # assemble the structured output array.
+        if fj is not None and op["schema"] and (
+            family == "scalar" or op["out_schema"]
+        ):
+            kw["fn_jit"] = fj
+            kw["state_schema"] = st
+            # Fusible = strictly 1:1 with run-order-insensitive scalar
+            # state and an unmapped partition key (superstep contract).
+            kw["jit_fusible"] = (
+                op["kind"] in ("rekey", "vshift", "project")
+                and op["key"] == "id"
+            )
         t.add_operator(
             OperatorSpec(
                 f"op{i}",

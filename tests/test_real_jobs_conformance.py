@@ -2,9 +2,10 @@
 be bit-identical to the per-run fn, and the SoA queue to the deque oracle,
 under every drive pattern.
 
-Each test runs one job through the five execution configurations
-(soa+seg+schema+jit, soa+seg+schema, soa+seg, soa+fn, deque+fn — see
-tests/conformance.py) and requires identical tuple flow, sink outputs,
+Each test runs one job through the six execution configurations
+(soa+seg+schema+jit+superstep, soa+seg+schema+jit, soa+seg+schema, soa+seg,
+soa+fn, deque+fn — see tests/conformance.py) and requires identical tuple
+flow, sink outputs,
 per-key-group state and SPL statistics (the jit configuration with the
 documented float tolerance on reduction-order-sensitive running sums):
 
