@@ -9,11 +9,11 @@ the same shape over structured record payloads twice — schema-typed
 (columnar structured-array edges) versus the object path — so the columnar
 win past the object-array boundary is pinned by its own number.  The
 ``pipeline_rec_jit`` row additionally runs the schema-typed shape through
-the compiled tier (``use_fn_jit=True``, one batched jax.jit call per
+the compiled tier (``ExecutionConfig.jit()``, one batched jax.jit call per
 operator per tick): steady-state throughput is measured after a full
 warm-up pass, with first-call trace+compile seconds reported separately in
 the derived column.  The ``superstep_jit`` row runs the identical shape
-through ``Engine(superstep=True).run_supersteps`` — route → drain → fn_jit
+through ``ExecutionConfig.superstep()`` + ``run_supersteps`` — route → drain → fn_jit
 fused into a K-tick ``lax.scan``, one host crossing per scan — and derives
 ``vs_jit`` against the per-operator tier; ``radix_sort`` pins the routing
 hot-path sort in isolation.  Repeated rows carry a ``spread=`` entry
@@ -34,7 +34,7 @@ import numpy as np
 
 from benchmarks.common import csv_row, synthetic_cluster
 from repro.core import solve_allocation
-from repro.engine import Engine
+from repro.engine import Engine, ExecutionConfig, make_engine
 from repro.engine.topology import (
     OperatorSpec,
     Schema,
@@ -215,7 +215,7 @@ def _best_and_spread(rates: list[float]) -> tuple[float, float]:
 def make_record_pipeline_job(*, num_keygroups: int = 64, depth: int = 3) -> Topology:
     """source → depth−1 record stages → counting sink, schema-declared.
 
-    Every stage implements all three protocols; ``Engine(use_fn_jit=...)``
+    Every stage implements all three protocols; ``ExecutionConfig.jit()``
     selects whether the compiled tier runs them.
     """
     t = Topology()
@@ -289,7 +289,7 @@ def measure_record_pipeline(
                 service_rate=1e12,
                 seed=0,
                 collect_sinks=False,
-                use_schema=use_schema,
+                config=ExecutionConfig(use_schema=use_schema),
             )
             eng.push_source("src", keys, values, ts)
             eng.tick()
@@ -344,7 +344,7 @@ def measure_record_pipeline_jit(
                 service_rate=1e12,
                 seed=0,
                 collect_sinks=False,
-                use_fn_jit=use_jit,
+                config=ExecutionConfig.jit() if use_jit else ExecutionConfig.typed(),
             )
             for tick in range(ticks):  # warm-up: compiles + allocation
                 eng.push_source("src", keys, values, ts + float(tick))
@@ -402,8 +402,7 @@ def measure_superstep_jit(
             service_rate=1e12,
             seed=0,
             collect_sinks=False,
-            use_fn_jit=True,
-            superstep=True,
+            config=ExecutionConfig.superstep(),
         )
         eng.run_supersteps(batches)  # warm-up scan: compiles
         while any(bool(q) for q in eng._queues):
@@ -513,6 +512,92 @@ def measure_push_source_ingest(
     return out
 
 
+def measure_multiworker(
+    *,
+    batch: int = 4096,
+    ticks: int = 12,
+    workers: tuple = (2, 4),
+    num_keygroups: int = 64,
+    depth: int = 4,
+    repeats: int = 2,
+) -> dict[str, float]:
+    """Multi-worker host runtime vs the single-process typed engine.
+
+    The identical schema-declared record pipeline streams the same batches
+    through ``ExecutionConfig.typed()`` (lockstep push + tick) and through
+    ``make_engine(..., ExecutionConfig.workers(n)).run_stream`` (pipelined
+    ingestion over real OS worker processes).  Tuples/sec is end to end —
+    ingest through full drain — so worker forking aside, the coordinator
+    exchange, the report merge and the credit loop all sit inside the
+    measurement.  ``w{n}_vs_single`` is the headline: >1 means the extra
+    processes beat the serialization they pay for on this host.
+    """
+    rng = np.random.default_rng(0)
+    values = np.empty(batch, dtype=_REC_SCHEMA.value)
+    values["a"] = rng.integers(0, 1_000, size=batch)
+    values["b"] = rng.random(batch)
+    batches = [
+        (
+            rng.integers(0, 1_000_000, size=batch).astype(np.int64),
+            values,
+            np.full(batch, float(t)),
+        )
+        for t in range(ticks)
+    ]
+    total = batch * ticks
+
+    def single() -> float:
+        eng = make_engine(
+            make_record_pipeline_job(num_keygroups=num_keygroups, depth=depth),
+            8,
+            config=ExecutionConfig.typed(),
+            service_rate=1e12,
+            seed=0,
+            collect_sinks=False,
+        )
+        eng.push_source("src", *batches[0])  # warm-up: store/window alloc
+        eng.tick()
+        t0 = time.perf_counter()
+        for b in batches:
+            eng.push_source("src", *b)
+            eng.tick()
+        while any(bool(q) for q in eng._queues):
+            eng.tick()
+        return total / (time.perf_counter() - t0)
+
+    def multi(n: int) -> float:
+        eng = make_engine(
+            make_record_pipeline_job(num_keygroups=num_keygroups, depth=depth),
+            8,
+            config=ExecutionConfig.workers(n),
+            service_rate=1e12,
+            seed=0,
+            collect_sinks=False,
+        )
+        try:
+            eng.run_stream("src", batches[:1], window=2 * n)  # warm-up
+            while eng.worst_queue_cost() > 0.0:
+                eng.tick()
+            t0 = time.perf_counter()
+            eng.run_stream("src", batches, window=2 * n)
+            while eng.worst_queue_cost() > 0.0:
+                eng.tick()
+            return total / (time.perf_counter() - t0)
+        finally:
+            eng.close()
+
+    out: dict[str, float] = {}
+    single_rates = [single() for _ in range(max(repeats, 1))]
+    out["single"], out["spread"] = _best_and_spread(single_rates)
+    for n in workers:
+        out[f"w{n}"] = max(multi(n) for _ in range(max(repeats, 1)))
+        out[f"w{n}_vs_single"] = out[f"w{n}"] / max(out["single"], 1e-9)
+    # Primary gate metric: µs per tick of the first multi-worker variant,
+    # end to end (total tuples / its tuples-per-second, per tick).
+    out["us_per_tick"] = total / max(out[f"w{workers[0]}"], 1e-9) / ticks * 1e6
+    return out
+
+
 def measure_milp_assembly(
     *, nodes: int = 60, kgs: int = 1200, ops: int = 30, time_limit: float = 1.0
 ) -> tuple[float, float, str]:
@@ -592,6 +677,21 @@ def run(quick: bool = False) -> list[str]:
             f"tuples_per_sec={ing['typed']:.0f}"
             f";boxed_tuples_per_sec={ing['boxed']:.0f}"
             f";typed_vs_boxed={ing['speedup']:.2f}",
+        )
+    )
+    mw = measure_multiworker(
+        batch=2048 if quick else 4096, ticks=8 if quick else 12
+    )
+    rows.append(
+        csv_row(
+            "engine_throughput/multiworker",
+            mw["us_per_tick"],
+            f"single_tuples_per_sec={mw['single']:.0f}"
+            f";w2_tuples_per_sec={mw['w2']:.0f}"
+            f";w4_tuples_per_sec={mw['w4']:.0f}"
+            f";w2_vs_single={mw['w2_vs_single']:.2f}"
+            f";w4_vs_single={mw['w4_vs_single']:.2f}"
+            f";spread={mw['spread']:.2f}",
         )
     )
     assembly, solve, status = measure_milp_assembly(time_limit=0.5 if quick else 1.0)

@@ -33,7 +33,7 @@ from repro.core.baselines import cola_allocate
 from repro.data import airline_stream, real_job_2, real_job_3, real_job_4
 from repro.data.jobs import make_real_job_1
 from repro.data.synthetic import StreamSpec, weather_stream, wiki_edit_stream
-from repro.engine import Controller, ControllerConfig, Engine
+from repro.engine import Controller, ControllerConfig, Engine, ExecutionConfig
 
 JOBS = {
     "job2_fig12": (real_job_2, ("airline",)),
@@ -322,8 +322,7 @@ def _run_once(
         service_rate=1e12,
         seed=0,
         collect_sinks=False,
-        use_fn_seg=use_fn_seg,
-        use_schema=use_schema,
+        config=ExecutionConfig(use_fn_seg=use_fn_seg, use_schema=use_schema),
     )
     # Warm-up tick: store/window allocation outside the timed region.
     for op, keys, values, ts in batches[0]:
@@ -412,7 +411,7 @@ def measure_job_jit(
                 service_rate=1e12,
                 seed=0,
                 collect_sinks=False,
-                use_fn_jit=use_jit,
+                config=ExecutionConfig.jit() if use_jit else ExecutionConfig.typed(),
             )
             for tick_batches in batches:  # warm-up pass: compiles, tables
                 for op, keys, values, ts in tick_batches:
@@ -463,7 +462,7 @@ def measure_migration_roundtrip(
                 service_rate=1e12,
                 seed=0,
                 collect_sinks=False,
-                use_schema=use_schema,
+                config=ExecutionConfig(use_schema=use_schema),
             )
             for k, v, ts in warm:  # accumulate real sumdelay state
                 eng.push_source("airline", k, v, ts)

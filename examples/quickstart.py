@@ -10,7 +10,7 @@ ALBIC, Algorithm 1) rebalance and collocate it live.
 import numpy as np
 
 from repro.core import AdaptationFramework, AlbicParams
-from repro.engine import Controller, ControllerConfig, Engine
+from repro.engine import Controller, ControllerConfig, Engine, ExecutionConfig
 from repro.engine.topology import OperatorSpec, Topology
 
 
@@ -47,7 +47,14 @@ def main() -> None:
     topo.connect("lines", "tokenize")
     topo.connect("tokenize", "count")
 
-    engine = Engine(topo, num_nodes=4, ser_cost=0.5, service_rate=1500.0, seed=0)
+    engine = Engine(
+        topo,
+        num_nodes=4,
+        config=ExecutionConfig.typed(),  # the default execution tier, spelled out
+        ser_cost=0.5,
+        service_rate=1500.0,
+        seed=0,
+    )
 
     rng = np.random.default_rng(0)
     vocab = ["stream", "engine", "balance", "migrate", "collocate", "scale"]

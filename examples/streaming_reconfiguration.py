@@ -13,7 +13,7 @@ import numpy as np
 from repro.core import AdaptationFramework, AlbicParams
 from repro.data import airline_stream, real_job_2
 from repro.data.synthetic import StreamSpec
-from repro.engine import Controller, ControllerConfig, Engine
+from repro.engine import Controller, ControllerConfig, Engine, ExecutionConfig
 
 
 def main() -> None:
@@ -28,7 +28,12 @@ def main() -> None:
     alloc[2 * kgs :] = (np.arange(kgs) + nodes // 2) % nodes
 
     engine = Engine(
-        topo, nodes, initial_alloc=alloc, ser_cost=0.75, service_rate=2500.0
+        topo,
+        nodes,
+        config=ExecutionConfig.typed(),
+        initial_alloc=alloc,
+        ser_cost=0.75,
+        service_rate=2500.0,
     )
     stream = airline_stream(StreamSpec(rate=260.0, seed=1))
 

@@ -5,8 +5,22 @@ The engine executes real operator logic (JAX/numpy) over key-group-partitioned
 state on a set of *logical nodes* (device shards on TPU; timeshared on CPU),
 maintains SPL statistics, and exposes direct state migration — everything
 :mod:`repro.core` needs to run Algorithm 1 against a live job.
+
+How a topology executes is one value — :class:`ExecutionConfig` — and
+:func:`make_engine` dispatches it: ``num_workers == 1`` builds the
+single-process :class:`Engine`, ``num_workers > 1`` the multi-worker
+:class:`repro.engine.cluster.ClusterEngine` (real OS worker processes,
+imported lazily).
 """
 
+from typing import Optional
+
+from repro.engine.config import ExecutionConfig
+from repro.engine.controller import Controller, ControllerConfig
+from repro.engine.executor import Engine, EngineMetrics
+from repro.engine.router import Router
+from repro.engine.serde import Envelope
+from repro.engine.state import KeyedStore
 from repro.engine.topology import (
     OperatorSpec,
     Schema,
@@ -14,11 +28,28 @@ from repro.engine.topology import (
     StateSchema,
     Topology,
 )
-from repro.engine.state import KeyedStore
-from repro.engine.router import Router
-from repro.engine.executor import Engine, EngineMetrics
-from repro.engine.controller import Controller, ControllerConfig
 from repro.engine.workqueue import DequeWorkQueue, SoAWorkQueue
+
+
+def make_engine(
+    topology: Topology,
+    num_nodes: int,
+    *,
+    config: Optional[ExecutionConfig] = None,
+    **kwargs,
+):
+    """Build the engine an :class:`ExecutionConfig` selects.
+
+    The one construction path that covers every execution tier including
+    ``ExecutionConfig.workers(n)`` — the multi-worker runtime is imported
+    only when asked for (it forks worker processes at construction).
+    """
+    if config is not None and config.num_workers > 1:
+        from repro.engine.cluster import ClusterEngine
+
+        return ClusterEngine(topology, num_nodes, config=config, **kwargs)
+    return Engine(topology, num_nodes, config=config, **kwargs)
+
 
 __all__ = [
     "Controller",
@@ -26,6 +57,8 @@ __all__ = [
     "DequeWorkQueue",
     "Engine",
     "EngineMetrics",
+    "Envelope",
+    "ExecutionConfig",
     "KeyedStore",
     "OperatorSpec",
     "Router",
@@ -34,4 +67,5 @@ __all__ = [
     "StateField",
     "StateSchema",
     "Topology",
+    "make_engine",
 ]

@@ -1,0 +1,998 @@
+"""Multi-worker host runtime: real OS processes behind the Engine surface.
+
+The single-process :class:`~repro.engine.executor.Engine` timeshares N
+logical nodes inside one Python loop, so aggregate throughput, migration
+cost and backpressure are single-core fictions.  This module runs the same
+topology over a :class:`WorkerPool` of real ``multiprocessing`` worker
+processes — each worker owns a **contiguous block of nodes** and hosts a
+full engine shard (:class:`_ShardEngine`) — coordinated by a
+:class:`ClusterEngine` that keeps the Engine API (``push_source`` /
+``tick`` / ``redirect`` / ``serialize`` / ``install`` / ``end_period``) so
+the controller, the adaptation framework and the conformance harness drive
+it unchanged.
+
+Execution stays a BSP superstep per tick, now distributed:
+
+1. **Ingestion** — the coordinator admits source batches against
+   credit-based backpressure computed from the *global* worst queue depth
+   (each tick report carries the worker's deepest local queue; lockstep
+   drivers refresh synchronously, the pipelined driver uses the latest
+   report — credits replace any in-loop budget coupling between workers),
+   converts them to the declared schema, partitions by key group and ships
+   each worker exactly the slice destined to its nodes.
+2. **Drain** — every worker drains its own nodes concurrently (real
+   parallelism; the numpy operator tiers run outside any shared lock).
+3. **Exchange** — instead of routing its tick outputs directly, a shard
+   splits each downstream operator's gathered batch by owning worker
+   (:meth:`_ShardEngine._dispatch_batch`) and sends the remote slices —
+   serde-encoded columnar envelopes — to its peers.  Each worker then
+   concatenates the per-operator contributions *in ascending worker id
+   order* (its own slice in its own slot) and routes the merged batch once.
+
+Because node blocks are contiguous and ascending in worker id, that merge
+order equals the single-process engine's node-ascending flush order — so
+per-node queues, per-key-group state trajectories, SPL statistics, sink
+tuples *and their order*, and migration envelopes are **bit-identical** to
+the single-process run (pinned by the ``soa+seg+schema+workers``
+conformance configuration).  The contract and its limits (what degrades
+after worker failure) are documented in ``docs/execution_tiers.md``.
+
+In-flight migration between live workers follows the paper's direct state
+migration across real processes: ``redirect`` flips every replica routing
+table (the redirect-time owner parks the key group's queued runs),
+``serialize`` exports the versioned :class:`~repro.engine.serde.Envelope`
+on worker A, ``install`` ships it to worker B which replays backlog then
+buffered arrivals in FIFO order.  The coordinator folds per-worker SPL
+windows (key-group loads, arrival rates, sparse pair rates, state bytes)
+into one :class:`~repro.core.stats.ClusterState` each period, so
+ALBIC/MILP plan against exactly the signals the single-process engine
+reports.
+
+The runtime requires the ``fork`` start method (operator closures are
+inherited, never pickled) and therefore POSIX.  Transport is strictly
+single-writer — per-worker command and report queues, per-``(sender →
+receiver)`` exchange lanes, coordinator-owned death Events (see
+:class:`WorkerPool`) — so a SIGKILLed worker cannot orphan a lock any
+survivor needs, and every blocking wait is deadline-guarded so a wedged
+pool fails the run fast instead of deadlocking it.
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import os
+import queue as _queue_mod
+from multiprocessing import connection as mp_connection
+import time
+import traceback
+from typing import Optional
+
+import numpy as np
+
+from repro.core.stats import ClusterState, PairRates
+from repro.engine import serde
+from repro.engine.backpressure import CreditController
+from repro.engine.config import ExecutionConfig
+from repro.engine.executor import Engine, EngineMetrics
+from repro.engine.router import Router, concat_batches
+from repro.engine.state import KeyedStore
+from repro.engine.topology import Topology, make_batch
+
+#: Seconds a coordinator/worker blocking wait may stall before the run is
+#: declared wedged (overridable via the REPRO_CLUSTER_TIMEOUT env var).
+DEFAULT_TIMEOUT = float(os.environ.get("REPRO_CLUSTER_TIMEOUT", "120"))
+
+_METRIC_SUM_FIELDS = (
+    "processed_tuples",
+    "emitted_tuples",
+    "cross_node_tuples",
+    "intra_node_tuples",
+    "sink_tuples",
+    "seg_calls",
+    "seg_tuples",
+    "typed_batches",
+)
+
+
+def contiguous_node_worker(num_nodes: int, num_workers: int) -> np.ndarray:
+    """Node → worker map as contiguous ascending blocks.
+
+    Contiguity in ascending worker order is what makes the exchange's
+    worker-major merge equal the single-process node-major flush order —
+    the determinism contract depends on this map staying monotone.
+    """
+    return (np.arange(num_nodes) * num_workers) // max(num_nodes, 1)
+
+
+def worker_rng(seed: int, wid: int) -> np.random.Generator:
+    """Per-worker RNG derived from the engine's single seed."""
+    return np.random.default_rng([np.uint32(seed), np.uint32(wid)])
+
+
+# ---------------------------------------------------------------------------
+# Worker side
+# ---------------------------------------------------------------------------
+
+
+class _ShardEngine(Engine):
+    """One worker's engine shard: full topology, full routing table, but it
+    drains only its own nodes and exchanges remote-destined outputs instead
+    of enqueuing them."""
+
+    def __init__(self, *args, wid: int, node_worker: np.ndarray, **kw):
+        super().__init__(*args, **kw)
+        self._wid = wid
+        self._node_worker = node_worker
+        # Per-tick exchange state: dop → [(batch, src_kgs, src_nodes)] for
+        # my own nodes, and per-peer outboxes for everyone else's.
+        self._xchg_local: dict[int, list] = {}
+        self._xchg_out: dict[int, dict[int, list]] = {}
+        self.rng = worker_rng(self.seed, wid)
+
+    def _dispatch_batch(self, dop, batch, src_kgs, src_nodes) -> None:
+        keys, values, ts = batch
+        kgs, _ = self._partition(dop, keys, values)
+        owners = self._node_worker[self.router.table[kgs]]
+        for w in np.unique(owners):
+            mask = owners == w
+            if mask.all():
+                sub, sk, sn = batch, src_kgs, src_nodes
+            else:
+                sub = (keys[mask], values[mask], ts[mask])
+                sk = src_kgs[mask] if src_kgs is not None else None
+                sn = src_nodes[mask] if src_nodes is not None else None
+            w = int(w)
+            if w == self._wid:
+                self._xchg_local.setdefault(dop, []).append((sub, sk, sn))
+            else:
+                self._xchg_out.setdefault(w, {}).setdefault(dop, []).append(
+                    (sub, sk, sn)
+                )
+
+    def take_exchange(self):
+        local, self._xchg_local = self._xchg_local, {}
+        out, self._xchg_out = self._xchg_out, {}
+        return local, out
+
+    def route_merged(self, per_dop: dict[int, list]) -> None:
+        """Route each operator's worker-order-merged contribution once —
+        the distributed half of ``_flush_outputs`` (same sorted-operator
+        order, same single concatenated batch per operator)."""
+        for dop in sorted(per_dop):
+            items = per_dop[dop]
+            if len(items) == 1:
+                batch, sk, sn = items[0]
+            else:
+                batch = concat_batches([it[0] for it in items])
+                sk = np.concatenate([it[1] for it in items])
+                sn = np.concatenate([it[2] for it in items])
+            Engine._route_batch(self, dop, batch, src_kgs=sk, src_nodes=sn)
+
+    def worst_cost(self) -> float:
+        my = self._node_worker == self._wid
+        costs = [q.cost for n, q in enumerate(self._queues) if my[n]]
+        return max(costs, default=0.0)
+
+    def owned_keygroups(self) -> np.ndarray:
+        return np.flatnonzero(self._node_worker[self.router.table] == self._wid)
+
+
+def _encode_items(items):
+    return [
+        (dop, serde.encode_batch(batch), sk, sn)
+        for dop, batch, sk, sn in items
+    ]
+
+
+def _worker_main(wid, spec):
+    """Worker process body (fork-inherited arguments, nothing pickled)."""
+    eng = _ShardEngine(
+        spec["topology"],
+        spec["num_nodes"],
+        config=spec["config"],
+        initial_alloc=spec["initial_alloc"],
+        capacity=spec["capacity"],
+        service_rate=spec["service_rate"],
+        ser_cost=spec["ser_cost"],
+        seed=spec["seed"],
+        collect_sinks=spec["collect_sinks"],
+        wid=wid,
+        node_worker=spec["node_worker"].copy(),
+    )
+    cmd_q = spec["cmd_queues"][wid]
+    rep_q = spec["report_queues"][wid]
+    inboxes = spec["inboxes"]  # inboxes[receiver][sender]
+    dead_events = spec["dead_events"]
+    num_workers = spec["num_workers"]
+    timeout = spec["timeout"]
+    dead: set[int] = set()
+    # stash[sender][tick] → encoded items (per-sender lanes deliver in tick
+    # order, but a fast peer can run ahead in pipelined mode).
+    stash: dict[int, dict[int, list]] = {}
+    sink_cursor = 0
+
+    def recv_exchange(t, sender):
+        per = stash.setdefault(sender, {})
+        lane = inboxes[wid][sender]
+        deadline = time.monotonic() + timeout
+        while t not in per:
+            try:
+                _, mt, enc = lane.get(timeout=0.2)
+            except _queue_mod.Empty:
+                if dead_events[sender].is_set():
+                    # Final sweep: a contribution flushed between our poll
+                    # and the peer's death still counts.
+                    try:
+                        while True:
+                            _, mt, enc = lane.get_nowait()
+                            per[mt] = enc
+                    except _queue_mod.Empty:
+                        pass
+                    if t in per:
+                        return per.pop(t)
+                    # Peer died before contributing this tick: its tuples
+                    # are lost (fail_node semantics) — drain with nothing.
+                    dead.add(sender)
+                    return None
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"worker {wid}: exchange wait for peer {sender} "
+                        f"tick {t} timed out"
+                    )
+                continue
+            per[mt] = enc
+        return per.pop(t)
+
+    def do_tick(t):
+        nonlocal sink_cursor
+        eng.tick()  # drain + flush → exchange stashes
+        local, out = eng.take_exchange()
+        peers = [w for w in range(num_workers) if w != wid and w not in dead]
+        for w in peers:
+            inboxes[w][wid].put(("xchg", t, _encode_items(
+                [
+                    (dop, batch, sk, sn)
+                    for dop, items in sorted(out.get(w, {}).items())
+                    for batch, sk, sn in items
+                ]
+            )))
+        contribs: dict[int, list] = {wid: [
+            (dop, batch, sk, sn)
+            for dop, items in sorted(local.items())
+            for batch, sk, sn in items
+        ]}
+        for w in peers:
+            enc_items = recv_exchange(t, w)
+            contribs[w] = [
+                (dop, serde.decode_batch(enc), sk, sn)
+                for dop, enc, sk, sn in (enc_items or [])
+            ]
+        per_dop: dict[int, list] = {}
+        for w in sorted(contribs):
+            for dop, batch, sk, sn in contribs[w]:
+                per_dop.setdefault(dop, []).append((batch, sk, sn))
+        eng.route_merged(per_dop)
+        sinks = None
+        if eng.collect_sinks:
+            outs = eng.metrics.sink_outputs
+            sinks = outs[sink_cursor:]
+            sink_cursor = len(outs)
+        rep_q.put(("tick", t, wid, eng.worst_cost(), sinks))
+
+    try:
+        while True:
+            cmd = cmd_q.get()
+            op = cmd[0]
+            if op == "push":
+                _, oid, keys, values, ts = cmd
+                eng._route_batch(oid, (keys, values, ts), src_kgs=None,
+                                 src_nodes=None)
+            elif op == "tick":
+                do_tick(cmd[1])
+            elif op == "costs":
+                rep_q.put(("ack", wid, "costs", eng.worst_cost()))
+            elif op == "redirect":
+                _, kg, dst = cmd
+                eng.redirect(kg, dst)
+                rep_q.put(("ack", wid, "redirect", None))
+            elif op == "serialize":
+                env = eng.export_keygroup(cmd[1])
+                rep_q.put(("ack", wid, "serialize", env.blob))
+            elif op == "install":
+                _, kg, dst, blob = cmd
+                eng.import_keygroup(serde.Envelope(kg, blob), dst)
+                rep_q.put(("ack", wid, "install", None))
+            elif op == "complete":
+                eng.router.complete(cmd[1])  # never buffered here: discard
+                rep_q.put(("ack", wid, "complete", None))
+            elif op == "set_alloc":
+                _, kgs, dst = cmd
+                eng.router.table[np.asarray(kgs, dtype=np.int64)] = dst
+                eng.router.version += 1
+                rep_q.put(("ack", wid, "set_alloc", None))
+            elif op == "export":
+                rep_q.put(("ack", wid, "export", eng.export_keygroup(cmd[1]).blob))
+            elif op == "node_down":
+                for node in cmd[1]:
+                    if eng.alive[node]:
+                        eng.fail_node(node)
+                rep_q.put(("ack", wid, "node_down", None))
+            elif op == "peer_dead":
+                dead.add(cmd[1])
+            elif op == "add_nodes":
+                _, count, capacity, owner = cmd
+                eng.add_nodes(count, capacity)
+                eng._node_worker = np.concatenate(
+                    [eng._node_worker, np.full(count, owner, dtype=np.int64)]
+                )
+                rep_q.put(("ack", wid, "add_nodes", None))
+            elif op == "end_period":
+                win = eng.window
+                pairs = win.pair_counts()
+                payload = {
+                    "usage": {r: u.copy() for r, u in win.kg_usage.items()},
+                    "arrivals": win.kg_arrivals.copy(),
+                    "pairs": (pairs.src, pairs.dst, pairs.rate),
+                    "state_bytes": eng.store.state_bytes(refresh=True),
+                    "ticks": eng._ticks_this_period,
+                }
+                win.reset()
+                eng._ticks_this_period = 0
+                rep_q.put(("ack", wid, "end_period", payload))
+            elif op == "gather":
+                owned_kgs = eng.owned_keygroups()
+                my_nodes = np.flatnonzero(eng._node_worker == wid)
+                payload = {
+                    "metrics": {
+                        f: getattr(eng.metrics, f) for f in _METRIC_SUM_FIELDS
+                    },
+                    "states": {
+                        int(kg): eng.store.get(int(kg)) for kg in owned_kgs
+                    },
+                    "queue_costs": {
+                        int(n): eng._queues[n].cost for n in my_nodes
+                    },
+                }
+                rep_q.put(("ack", wid, "gather", payload))
+            elif op == "stop":
+                rep_q.put(("ack", wid, "stop", None))
+                break
+            else:  # pragma: no cover - protocol error
+                raise RuntimeError(f"worker {wid}: unknown command {op!r}")
+    except BaseException:  # pragma: no cover - surfaced coordinator-side
+        rep_q.put(("error", wid, traceback.format_exc()))
+        raise
+
+
+# ---------------------------------------------------------------------------
+# Coordinator side
+# ---------------------------------------------------------------------------
+
+
+class WorkerPool:
+    """Owns the worker processes and their channels (fork context).
+
+    Every channel has exactly ONE writer — per-worker command queues
+    (written by the coordinator), per-worker report queues (written by that
+    worker), and per-``(sender → receiver)`` exchange queues.  The
+    discipline is what makes ``kill()`` safe: a SIGKILLed process can die
+    holding only locks no survivor ever takes (an ``mp.Queue`` shared by
+    two writers serializes them on one pipe lock, and a process killed
+    between its pipe write and the lock release — a wide window on a
+    loaded single-CPU host — wedges every other writer forever).  Worker
+    death is signalled to peers through per-worker Events (set by the
+    coordinator only), never by injecting messages into another writer's
+    channel.
+    """
+
+    def __init__(self, num_workers: int, spec: dict, timeout: float):
+        ctx = multiprocessing.get_context("fork")
+        self.num_workers = num_workers
+        self.timeout = timeout
+        self.cmd_queues = [ctx.Queue() for _ in range(num_workers)]
+        self.report_queues = [ctx.Queue() for _ in range(num_workers)]
+        # inboxes[receiver][sender]: the (sender → receiver) exchange lane.
+        self.inboxes = [
+            [ctx.Queue() if s != r else None for s in range(num_workers)]
+            for r in range(num_workers)
+        ]
+        self.dead_events = [ctx.Event() for _ in range(num_workers)]
+        spec = dict(
+            spec,
+            cmd_queues=self.cmd_queues,
+            report_queues=self.report_queues,
+            inboxes=self.inboxes,
+            dead_events=self.dead_events,
+            num_workers=num_workers,
+            timeout=timeout,
+        )
+        self.processes = [
+            ctx.Process(target=_worker_main, args=(w, spec), daemon=True)
+            for w in range(num_workers)
+        ]
+        for p in self.processes:
+            p.start()
+
+    def send(self, wid: int, msg) -> None:
+        self.cmd_queues[wid].put(msg)
+
+    def alive(self, wid: int) -> bool:
+        return self.processes[wid].is_alive()
+
+    def kill(self, wid: int) -> None:
+        p = self.processes[wid]
+        if p.is_alive():
+            p.kill()
+            p.join(timeout=5)
+
+    def shutdown(self) -> None:
+        for p in self.processes:
+            if p.is_alive():
+                p.kill()
+        for p in self.processes:
+            p.join(timeout=5)
+        for q in (
+            *self.cmd_queues,
+            *self.report_queues,
+            *(q for row in self.inboxes for q in row if q is not None),
+        ):
+            q.close()
+            q.cancel_join_thread()
+
+
+class ClusterEngine:
+    """Coordinator for the multi-worker runtime; Engine-compatible surface.
+
+    Drives a :class:`WorkerPool` in lockstep (``push_source`` / ``tick`` —
+    the conformance shape, bit-identical to single-process) or pipelined
+    (:meth:`run_stream` — the throughput shape, no per-tick coordinator
+    barrier).  Implements the ``StateMover`` protocol, so
+    ``repro.core.migration.execute_plan`` migrates key groups *between live
+    worker processes* exactly as it does between logical nodes.
+    """
+
+    def __init__(
+        self,
+        topology: Topology,
+        num_nodes: int,
+        *,
+        config: Optional[ExecutionConfig] = None,
+        initial_alloc: Optional[np.ndarray] = None,
+        capacity: Optional[np.ndarray] = None,
+        service_rate: float = 1_000.0,
+        ser_cost: float = 0.25,
+        seed: int = 0,
+        collect_sinks: bool = True,
+        timeout: float = DEFAULT_TIMEOUT,
+    ) -> None:
+        if config is None:
+            config = ExecutionConfig.workers(2)
+        if config.num_workers < 2:
+            raise ValueError("ClusterEngine needs ExecutionConfig.workers(n >= 2)")
+        if "fork" not in multiprocessing.get_all_start_methods():
+            raise RuntimeError(
+                "the multi-worker runtime requires the 'fork' start method "
+                "(operator closures are inherited, not pickled)"
+            )
+        topology.validate()
+        self.topology = topology
+        self.num_nodes = num_nodes
+        self.config = config
+        self.num_workers = config.num_workers
+        self.service_rate = service_rate
+        self.ser_cost = ser_cost
+        self.seed = seed
+        self.collect_sinks = collect_sinks
+        self.capacity = (
+            np.ones(num_nodes) if capacity is None else np.asarray(capacity)
+        )
+        g = topology.num_keygroups
+        rng = np.random.default_rng(seed)  # Engine's exact alloc draw
+        if initial_alloc is None:
+            initial_alloc = rng.integers(0, num_nodes, size=g)
+        self._initial_alloc = np.asarray(initial_alloc, dtype=np.int64).copy()
+        self.router = Router(g, self._initial_alloc)
+        self.node_worker = contiguous_node_worker(num_nodes, self.num_workers)
+        self.alive = np.ones(num_nodes, dtype=bool)
+        self.metrics = EngineMetrics()
+        self.store = KeyedStore(g)  # populated at finalize()
+        self.backpressure = CreditController(
+            num_nodes, high_wm=50 * service_rate
+        )
+        self.ingest_rng = np.random.default_rng(
+            [np.uint32(seed), np.uint32(0xC1)]
+        )
+        self._kg_op = topology.kg_operator()
+        self._downstream = topology.downstream()
+        self._op_schema = [
+            o.schema if config.use_schema else None for o in topology.operators
+        ]
+        self._worker_config = config.replace(num_workers=1)
+        self._timeout = timeout
+        worker_cfg = self._worker_config
+        self.pool = WorkerPool(
+            self.num_workers,
+            dict(
+                topology=topology,
+                num_nodes=num_nodes,
+                config=worker_cfg,
+                initial_alloc=self._initial_alloc,
+                capacity=self.capacity,
+                service_rate=service_rate,
+                ser_cost=ser_cost,
+                seed=seed,
+                collect_sinks=collect_sinks,
+                node_worker=self.node_worker,
+            ),
+            timeout,
+        )
+        self._dead_workers: set[int] = set()
+        self._worst = np.zeros(self.num_workers)
+        self._tick_no = 0
+        self._ticks_this_period = 0
+        self._mig_src: dict[int, int] = {}
+        # Pipelined-mode report reassembly: (tick → {wid: (worst, sinks)}).
+        self._tick_reports: dict[int, dict[int, tuple]] = {}
+        self._merged_through = -1
+        self._pending_ticks: list[int] = []
+        self._stashed_acks: dict[tuple[int, str], object] = {}
+        self._queue_costs: Optional[list[float]] = None
+        self._closed = False
+        self._finalized = False
+
+    # ------------------------------------------------------------- plumbing
+    def _alive_workers(self) -> list[int]:
+        return [
+            w for w in range(self.num_workers) if w not in self._dead_workers
+        ]
+
+    def worker_of_node(self, node: int) -> int:
+        return int(self.node_worker[node])
+
+    def _recv(self):
+        """One report message (any worker), with death detection and deadline.
+
+        Polls every worker's report queue — including a dead worker's, whose
+        already-flushed reports are still deliverable — in worker-id order.
+        """
+        deadline = time.monotonic() + self._timeout
+        readers = [q._reader for q in self.pool.report_queues]
+        while True:
+            for w in range(self.num_workers):
+                try:
+                    msg = self.pool.report_queues[w].get_nowait()
+                except _queue_mod.Empty:
+                    continue
+                if msg[0] == "error":
+                    raise RuntimeError(
+                        f"worker {msg[1]} crashed:\n{msg[2]}"
+                    )
+                return msg
+            for w in self._alive_workers():
+                if not self.pool.alive(w):
+                    self._on_worker_death(w)
+                    return None
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    "cluster coordinator: wait on worker reports timed "
+                    "out (wedged pool?)"
+                )
+            mp_connection.wait(readers, timeout=0.05)
+
+    def _handle_tick_report(self, msg) -> None:
+        _, t, wid, worst, sinks = msg
+        self._worst[wid] = worst
+        self._tick_reports.setdefault(t, {})[wid] = (worst, sinks)
+        self._merge_ready_ticks()
+
+    def _merge_ready_ticks(self) -> None:
+        """Fold completed ticks' sink deltas in (tick, worker) order."""
+        while self._pending_ticks:
+            t = self._pending_ticks[0]
+            reports = self._tick_reports.get(t, {})
+            expected = [
+                w for w in range(self.num_workers)
+                if w not in self._dead_workers or w in reports
+            ]
+            if not all(w in reports for w in expected):
+                return
+            for w in sorted(reports):
+                _, sinks = reports[w]
+                if sinks:
+                    self.metrics.sink_outputs.extend(sinks)
+            del self._tick_reports[t]
+            self._pending_ticks.pop(0)
+            self._merged_through = t
+
+    def _await_acks(self, wids: list[int], tag: str):
+        """Collect one tagged ack per worker; returns {wid: payload}.
+
+        The stash is re-checked every iteration, not just on entry: a
+        worker-death detour (``_on_worker_death`` → ``node_down`` ack wait)
+        nested inside this wait consumes the report stream and stashes this
+        tag's acks — entry-only checking would then wait forever for a
+        message already consumed.
+        """
+        out = {}
+        while True:
+            for w in wids:
+                key = (w, tag)
+                if w not in out and key in self._stashed_acks:
+                    out[w] = self._stashed_acks.pop(key)
+            if len(out) >= len(
+                [w for w in wids if w not in self._dead_workers]
+            ):
+                return out
+            msg = self._recv()
+            if msg is None:  # a worker died; re-evaluate expectations
+                continue
+            if msg[0] == "tick":
+                self._handle_tick_report(msg)
+                continue
+            _, wid, mtag, payload = msg
+            if mtag == tag and wid in wids:
+                out[wid] = payload
+            else:
+                self._stashed_acks[(wid, mtag)] = payload
+
+    def _command_all(self, msg, tag: str):
+        wids = self._alive_workers()
+        for w in wids:
+            self.pool.send(w, msg)
+        return self._await_acks(wids, tag)
+
+    def _command_one(self, wid: int, msg, tag: str):
+        if wid in self._dead_workers:
+            raise RuntimeError(f"worker {wid} is dead")
+        self.pool.send(wid, msg)
+        return self._await_acks([wid], tag)[wid]
+
+    def _on_worker_death(self, wid: int) -> None:
+        """A worker vanished: unwedge peers, mark its nodes failed.
+
+        Survivors stuck in the current tick's exchange see the dead
+        worker's Event and drain with an empty contribution; future ticks
+        skip it via ``peer_dead``.  The dead worker's queued work and
+        un-reported tick output are lost — exactly a node crash
+        (``fail_node`` semantics); recovery reinstalls its key groups from
+        checkpoint envelopes via :meth:`import_keygroup` (see
+        tests/test_cluster_faults.py).
+        """
+        if wid in self._dead_workers:
+            return
+        self._dead_workers.add(wid)
+        dead_nodes = np.flatnonzero(self.node_worker == wid)
+        self.alive[dead_nodes] = False
+        # Unblock survivors stuck on the dead worker's exchange: the Event
+        # is coordinator-owned, so no channel the dead process might have
+        # wedged is involved (see WorkerPool).
+        self.pool.dead_events[wid].set()
+        survivors = self._alive_workers()
+        for w in survivors:
+            self.pool.send(w, ("peer_dead", wid))
+        self._command_all(("node_down", dead_nodes.tolist()), "node_down")
+        self._merge_ready_ticks()
+
+    # ------------------------------------------------------------------ feed
+    def source_credits(self, *, refresh: bool = True) -> int:
+        """Global credits from the worst per-worker queue depth.
+
+        ``refresh=True`` (the lockstep default) round-trips to the workers
+        for the exact instantaneous depths; ``refresh=False`` uses the
+        latest tick reports (the pipelined mode's credit loop).
+        """
+        return self.backpressure.credits_from_worst(
+            self.worst_queue_cost(refresh=refresh)
+        )
+
+    def worst_queue_cost(self, *, refresh: bool = True) -> float:
+        """Deepest queue across alive workers (drives credits; drain loops
+        poll it to detect quiescence without a full gather)."""
+        if refresh:
+            for w, worst in self._command_all(("costs",), "costs").items():
+                self._worst[w] = worst
+        return max(
+            (float(self._worst[w]) for w in self._alive_workers()), default=0.0
+        )
+
+    def push_source(self, op, keys, values, ts, *, refresh: bool = True) -> int:
+        oid = self.topology._resolve(op)
+        spec = self.topology.operators[oid]
+        if not spec.is_source:
+            raise ValueError(f"{spec.name!r} is not a source")
+        credits = self.source_credits(refresh=refresh)
+        n = min(len(keys), credits)
+        if n < len(keys):
+            self.metrics.dropped_credits += len(keys) - n
+        if n == 0:
+            return 0
+        self._split_and_push(oid, keys, values, ts, n)
+        return n
+
+    def _split_and_push(self, oid, keys, values, ts, n: int) -> None:
+        """Schema-convert the admitted slice and ship per-worker splits."""
+        schema = self._op_schema[oid]
+        if schema is not None:
+            tv = schema.typed_values(values[:n] if len(values) != n else values)
+            if isinstance(values, np.ndarray) and np.shares_memory(tv, values):
+                tv = tv.copy()
+            batch = (
+                np.array(keys[:n], dtype=schema.key),
+                tv,
+                np.asarray(ts[:n], dtype=np.float64),
+            )
+        else:
+            batch = make_batch(keys[:n], values[:n], ts[:n])
+        bk, bv, bt = batch
+        kgs = self.topology.keygroups_of(oid, bk, bv)
+        owners = self.node_worker[self.router.table[kgs]]
+        for w in np.unique(owners):
+            w = int(w)
+            if w in self._dead_workers:
+                continue  # tuples to dead nodes are lost, as on fail_node
+            mask = owners == w
+            if mask.all():
+                sub = batch
+            else:
+                sub = (bk[mask], bv[mask], bt[mask])
+            self.pool.send(w, ("push", oid, *sub))
+
+    # ------------------------------------------------------------------ tick
+    def tick(self) -> None:
+        """Lockstep BSP tick: command all workers, await all reports."""
+        t = self._tick_no
+        self._tick_no += 1
+        self._pending_ticks.append(t)
+        for w in self._alive_workers():
+            self.pool.send(w, ("tick", t))
+        self._wait_tick(t)
+        self.metrics.ticks += 1
+        self._ticks_this_period += 1
+
+    def _wait_tick(self, t: int) -> None:
+        while self._merged_through < t:
+            msg = self._recv()
+            if msg is None:
+                continue
+            if msg[0] == "tick":
+                self._handle_tick_report(msg)
+            else:
+                _, wid, mtag, payload = msg
+                self._stashed_acks[(wid, mtag)] = payload
+
+    def run_stream(self, op, batches, *, window: int = 4,
+                   shuffle: bool = False) -> int:
+        """Pipelined throughput mode: stream (push, tick) pairs without a
+        per-tick coordinator barrier.
+
+        ``batches`` is an iterable of ``(keys, values, ts)`` source batches,
+        one tick each; at most ``window`` ticks run ahead of the last
+        merged report, and credits come from the latest reports (the
+        asynchronous credit loop).  ``shuffle=True`` permutes batch order
+        with the seed-derived ingestion RNG (reproducible from
+        ``Engine(seed=...)`` alone).  Returns tuples accepted.
+        """
+        oid = self.topology._resolve(op)
+        batches = list(batches)
+        if shuffle:
+            batches = [batches[i] for i in self.ingest_rng.permutation(len(batches))]
+        accepted = 0
+        for keys, values, ts in batches:
+            while self._tick_no - self._merged_through - 1 >= window:
+                msg = self._recv()
+                if msg is None:
+                    continue
+                if msg[0] == "tick":
+                    self._handle_tick_report(msg)
+            credits = self.source_credits(refresh=False)
+            n = min(len(keys), credits)
+            if n < len(keys):
+                self.metrics.dropped_credits += len(keys) - n
+            if n:
+                self._split_and_push(oid, keys, values, ts, n)
+                accepted += n
+            t = self._tick_no
+            self._tick_no += 1
+            self._pending_ticks.append(t)
+            for w in self._alive_workers():
+                self.pool.send(w, ("tick", t))
+        if self._tick_no:
+            self._wait_tick(self._tick_no - 1)
+        self.metrics.ticks += len(batches)
+        self._ticks_this_period += len(batches)
+        return accepted
+
+    # ------------------------------------------------------- SPL statistics
+    def end_period(self) -> ClusterState:
+        """Fold every worker's SPL window into one ClusterState snapshot."""
+        payloads = self._command_all(("end_period",), "end_period")
+        g = self.topology.num_keygroups
+        order = sorted(payloads)
+        usage = {
+            r: np.zeros(g)
+            for r in (payloads[order[0]]["usage"] if order else {"cpu": None})
+        }
+        arrivals = np.zeros(g)
+        psrc, pdst, prate = [], [], []
+        state_bytes = np.full(g, 64.0)
+        owner_of_kg = self.node_worker[self.router.table]
+        for w in order:
+            p = payloads[w]
+            for r, u in p["usage"].items():
+                usage[r] += u
+            arrivals += p["arrivals"]
+            s, d, r_ = p["pairs"]
+            psrc.append(s)
+            pdst.append(d)
+            prate.append(r_)
+            mine = owner_of_kg == w
+            state_bytes[mine] = p["state_bytes"][mine]
+        totals = {r: float(u.sum()) for r, u in usage.items()}
+        resource = max(totals, key=totals.get)
+        ticks = max(self._ticks_this_period, 1)
+        scale = 100.0 / (ticks * self.service_rate)
+        if psrc and sum(len(s) for s in psrc):
+            src = np.concatenate(psrc)
+            dst = np.concatenate(pdst)
+            rate = np.concatenate(prate)
+            pairs = PairRates.from_codes(src * g + dst, rate, g)
+        else:
+            pairs = PairRates.empty(g)
+        state = ClusterState.create(
+            self.num_nodes,
+            self._kg_op,
+            usage[resource] * scale,
+            self.router.table.copy(),
+            kg_state_bytes=state_bytes,
+            out_rates=pairs,
+            downstream=self._downstream,
+            capacity=self.capacity.copy(),
+            kg_tuple_rate=arrivals / ticks,
+        )
+        state.alive = self.alive.copy()
+        self._ticks_this_period = 0
+        return state
+
+    # ------------------------------------------------- direct state migration
+    # StateMover protocol — migrations now move state between live worker
+    # processes, through the versioned serde envelopes.
+    def redirect(self, keygroup: int, dst: int) -> None:
+        src_worker = self.worker_of_node(self.router.node_of(keygroup))
+        self.router.redirect(keygroup, dst)
+        self._mig_src[keygroup] = src_worker
+        self._command_all(("redirect", keygroup, dst), "redirect")
+
+    def serialize(self, keygroup: int) -> bytes:
+        w = self._mig_src.pop(
+            keygroup, self.worker_of_node(self.router.node_of(keygroup))
+        )
+        return self._command_one(w, ("serialize", keygroup), "serialize")
+
+    def install(self, keygroup: int, dst: int, blob: bytes) -> None:
+        w_dst = self.worker_of_node(dst)
+        if w_dst in self._dead_workers:
+            raise RuntimeError(
+                f"cannot install key group {keygroup}: node {dst}'s worker "
+                f"{w_dst} is dead"
+            )
+        wids = self._alive_workers()
+        for w in wids:
+            if w == w_dst:
+                self.pool.send(w, ("install", keygroup, dst, blob))
+            else:
+                self.pool.send(w, ("complete", keygroup))
+        self._await_acks(
+            [w for w in wids if w != w_dst], "complete"
+        )
+        if w_dst not in self._dead_workers:
+            self._await_acks([w_dst], "install")
+        self.router.complete(keygroup)
+
+    def export_keygroup(self, keygroup: int) -> serde.Envelope:
+        w = self.worker_of_node(self.router.node_of(keygroup))
+        blob = self._command_one(w, ("export", keygroup), "export")
+        return serde.Envelope(keygroup, blob)
+
+    def import_keygroup(
+        self, envelope: serde.Envelope, dst: Optional[int] = None
+    ) -> None:
+        if dst is None:
+            dst = self.router.node_of(envelope.keygroup)
+        if int(self.router.table[envelope.keygroup]) != dst:
+            self.set_alloc([envelope.keygroup], dst)
+        self.install(envelope.keygroup, dst, envelope.blob)
+
+    def set_alloc(self, keygroups, dst: int) -> None:
+        """Point key groups at ``dst`` on every replica table (no in-flight
+        semantics — the recovery path's table rewrite)."""
+        self.router.table[np.asarray(keygroups, dtype=np.int64)] = dst
+        self.router.version += 1
+        self._command_all(("set_alloc", list(keygroups), dst), "set_alloc")
+
+    # --------------------------------------------------------------- elastic
+    def add_nodes(self, count: int, capacity: float = 1.0) -> None:
+        """Append nodes, owned by the last worker (keeps the node → worker
+        map monotone, which the determinism contract requires)."""
+        owner = max(self._alive_workers())
+        self.num_nodes += count
+        self.capacity = np.concatenate([self.capacity, np.full(count, capacity)])
+        self.alive = np.concatenate([self.alive, np.ones(count, dtype=bool)])
+        self.node_worker = np.concatenate(
+            [self.node_worker, np.full(count, owner, dtype=np.int64)]
+        )
+        self.backpressure.num_nodes = self.num_nodes
+        self._command_all(("add_nodes", count, capacity, owner), "add_nodes")
+
+    def fail_worker(self, wid: int) -> np.ndarray:
+        """Kill a worker process outright (fault injection).
+
+        Returns the orphaned key groups; their queued work and state on the
+        dead worker are gone — reinstall from checkpoints via
+        :meth:`import_keygroup` (see tests/test_cluster_faults.py).
+        """
+        dead_nodes = np.flatnonzero(self.node_worker == wid)
+        orphans = np.flatnonzero(np.isin(self.router.table, dead_nodes))
+        self.pool.kill(wid)
+        self._on_worker_death(wid)
+        return orphans
+
+    # ------------------------------------------------------------- inspection
+    def queue_costs(self) -> list[float]:
+        if self._queue_costs is not None:
+            return self._queue_costs
+        costs = [0.0] * self.num_nodes
+        for w, payload in self._command_all(("gather",), "gather").items():
+            for node, c in payload["queue_costs"].items():
+                costs[node] = c
+        return costs
+
+    def finalize(self) -> None:
+        """Gather worker-side results onto the coordinator and stop the pool.
+
+        After this, ``metrics`` (counters + merged sink outputs), ``store``
+        (every key group's state, taken from its owning worker) and
+        ``queue_costs()`` read exactly like a single-process engine's.
+        """
+        if self._finalized:
+            return
+        payloads = self._command_all(("gather",), "gather")
+        costs = [0.0] * self.num_nodes
+        for w in sorted(payloads):
+            p = payloads[w]
+            for f in _METRIC_SUM_FIELDS:
+                setattr(
+                    self.metrics, f, getattr(self.metrics, f) + p["metrics"][f]
+                )
+            for kg, state in p["states"].items():
+                if state:
+                    self.store.put(kg, state)
+            for node, c in p["queue_costs"].items():
+                costs[node] = c
+        self._queue_costs = costs
+        self._finalized = True
+        self.close()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            for w in self._alive_workers():
+                self.pool.send(w, ("stop",))
+            self._await_acks(self._alive_workers(), "stop")
+        except Exception:
+            pass
+        self.pool.shutdown()
+
+    def __enter__(self) -> "ClusterEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self) -> None:  # pragma: no cover - belt and braces
+        try:
+            if not getattr(self, "_closed", True):
+                self.pool.shutdown()
+        except Exception:
+            pass

@@ -1,0 +1,162 @@
+"""Execution configuration: one frozen dataclass instead of eight kwargs.
+
+Six PRs of execution tiers left ``Engine.__init__`` with eight interacting
+execution kwargs (``queue_impl``, ``use_fn_seg``, ``use_schema``,
+``use_fn_jit``, ``superstep``, ``jit_mesh``, ``jit_mesh_axis``,
+``kernel_stats``).  :class:`ExecutionConfig` consolidates them — plus the
+multi-worker dimension (``num_workers``) the parallel host runtime adds —
+into one validated value object with named presets, so the configuration
+matrix is spelled once:
+
+======================  =====================================================
+preset                  meaning
+======================  =====================================================
+``.oracle()``           legacy deque queue, per-run ``fn`` only — the
+                        semantic oracle every other tier is pinned against
+``.seg()``              SoA queues + segment-vectorized ``fn_seg``, schemas
+                        stripped (object-array edges)
+``.typed()``            ``.seg()`` plus declared schemas honored (columnar
+                        structured-array edges) — the default
+``.jit()``              ``.typed()`` plus the compiled tier (``fn_jit``
+                        bodies over device state columns)
+``.superstep()``        ``.jit()`` plus whole-tick fusion
+                        (route → drain → ``fn_jit`` in one device program)
+``.workers(n)``         ``.typed()`` sharded over ``n`` OS worker processes
+                        (:class:`repro.engine.cluster.ClusterEngine`)
+======================  =====================================================
+
+``Engine(topology, num_nodes, config=...)`` is the construction path; the
+old kwargs are still accepted for one release through a
+``DeprecationWarning`` shim that maps them onto this dataclass (see
+:meth:`ExecutionConfig.from_legacy_kwargs`).
+
+The determinism contract per configuration is documented in
+``docs/execution_tiers.md``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+#: Engine kwargs replaced by :class:`ExecutionConfig` (still accepted, with a
+#: DeprecationWarning, for one release).
+LEGACY_EXECUTION_KWARGS = (
+    "queue_impl",
+    "use_fn_seg",
+    "use_schema",
+    "use_fn_jit",
+    "superstep",
+    "jit_mesh",
+    "jit_mesh_axis",
+    "kernel_stats",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """How a topology executes: queue layout, operator tier, worker count.
+
+    Attributes mirror the legacy kwargs one to one, except ``superstep``
+    which is carried as :attr:`use_superstep` (the name ``superstep`` is
+    taken by the preset constructor).
+    """
+
+    queue_impl: str = "soa"
+    use_fn_seg: bool = True
+    use_schema: bool = True
+    use_fn_jit: bool = False
+    use_superstep: bool = False
+    jit_mesh: Any = None
+    jit_mesh_axis: Optional[str] = None
+    # None → auto-detect (Pallas partition kernel only when jax is already
+    # initialized on TPU); see Engine._auto_kernel_stats.
+    kernel_stats: Optional[bool] = None
+    num_workers: int = 1
+
+    def __post_init__(self) -> None:
+        if self.queue_impl not in ("soa", "deque"):
+            raise ValueError(f"unknown queue_impl {self.queue_impl!r}")
+        if self.use_fn_jit and (self.queue_impl != "soa" or not self.use_schema):
+            raise ValueError(
+                "use_fn_jit requires queue_impl='soa' and use_schema=True "
+                "(the jit tier executes native columns over SoA segments)"
+            )
+        if self.use_superstep and not self.use_fn_jit:
+            raise ValueError(
+                "use_superstep requires use_fn_jit=True (the fused tick "
+                "compiles fn_jit bodies)"
+            )
+        if self.num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        if self.num_workers > 1 and (self.use_fn_jit or self.use_superstep):
+            raise ValueError(
+                "the multi-worker runtime runs the numpy tiers only "
+                "(use_fn_jit/use_superstep are single-process; see "
+                "docs/execution_tiers.md)"
+            )
+
+    # -- presets --------------------------------------------------------------
+    @classmethod
+    def oracle(cls) -> "ExecutionConfig":
+        """Legacy deque queue, per-run ``fn`` only — the semantic oracle."""
+        return cls(queue_impl="deque", use_fn_seg=False, use_schema=False)
+
+    @classmethod
+    def seg(cls) -> "ExecutionConfig":
+        """SoA queues + ``fn_seg``, schemas stripped (object-array edges)."""
+        return cls(use_schema=False)
+
+    @classmethod
+    def typed(cls) -> "ExecutionConfig":
+        """SoA + ``fn_seg`` + declared schemas — the default configuration."""
+        return cls()
+
+    @classmethod
+    def jit(cls, *, mesh: Any = None, mesh_axis: Optional[str] = None):
+        """``.typed()`` plus the compiled ``fn_jit`` tier."""
+        return cls(use_fn_jit=True, jit_mesh=mesh, jit_mesh_axis=mesh_axis)
+
+    @classmethod
+    def superstep(cls, *, mesh: Any = None, mesh_axis: Optional[str] = None):
+        """``.jit()`` plus whole-tick fusion into one device program."""
+        return cls(
+            use_fn_jit=True,
+            use_superstep=True,
+            jit_mesh=mesh,
+            jit_mesh_axis=mesh_axis,
+        )
+
+    @classmethod
+    def workers(cls, n: int) -> "ExecutionConfig":
+        """``.typed()`` sharded over ``n`` OS worker processes."""
+        return cls(num_workers=int(n))
+
+    # -- plumbing -------------------------------------------------------------
+    @classmethod
+    def from_legacy_kwargs(cls, legacy: dict) -> "ExecutionConfig":
+        """Map the deprecated Engine kwargs onto a config (shim helper)."""
+        unknown = set(legacy) - set(LEGACY_EXECUTION_KWARGS)
+        if unknown:
+            raise TypeError(f"unknown execution kwargs: {sorted(unknown)}")
+        mapped = dict(legacy)
+        if "superstep" in mapped:
+            mapped["use_superstep"] = mapped.pop("superstep")
+        return cls(**mapped)
+
+    def replace(self, **changes) -> "ExecutionConfig":
+        return dataclasses.replace(self, **changes)
+
+    @property
+    def name(self) -> str:
+        """Short display name (the conformance harness's config labels)."""
+        parts = [self.queue_impl, "seg" if self.use_fn_seg else "fn"]
+        if self.use_schema:
+            parts.append("schema")
+        if self.use_fn_jit:
+            parts.append("jit")
+        if self.use_superstep:
+            parts.append("superstep")
+        if self.num_workers > 1:
+            parts.append("workers")
+        return "+".join(parts)

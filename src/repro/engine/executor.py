@@ -112,6 +112,7 @@ from __future__ import annotations
 
 import dataclasses
 import sys
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -119,6 +120,7 @@ import numpy as np
 from repro.core.stats import ClusterState, SPLWindow
 from repro.engine import serde
 from repro.engine.backpressure import CreditController, LatencyTracker
+from repro.engine.config import LEGACY_EXECUTION_KWARGS, ExecutionConfig
 from repro.engine.router import Router, concat_batches
 from repro.engine.state import KeyedStore
 from repro.engine.topology import (
@@ -209,35 +211,94 @@ def _auto_kernel_stats() -> bool:
         return False
 
 
+_UNSET = object()  # legacy-kwarg sentinel: distinguishes "not passed"
+
+
 class Engine:
-    """Single-process execution of a Topology over ``num_nodes`` logical nodes."""
+    """Single-process execution of a Topology over ``num_nodes`` logical nodes.
+
+    How the topology executes — queue layout, operator tier — is one value:
+    ``Engine(topology, num_nodes, config=ExecutionConfig.<preset>())`` (see
+    :mod:`repro.engine.config`).  The pre-config execution kwargs are still
+    accepted for one release through a ``DeprecationWarning`` shim; a config
+    with ``num_workers > 1`` is the multi-worker runtime's
+    (:class:`repro.engine.cluster.ClusterEngine`) — this class rejects it.
+    """
 
     def __init__(
         self,
         topology: Topology,
         num_nodes: int,
         *,
+        config: Optional[ExecutionConfig] = None,
         initial_alloc: Optional[np.ndarray] = None,
         capacity: Optional[np.ndarray] = None,
         service_rate: float = 1_000.0,  # cost-units a reference node serves per tick
         ser_cost: float = 0.25,  # cost-units per cross-node tuple (each side)
         seed: int = 0,
-        queue_impl: str = "soa",
         collect_sinks: bool = True,
-        kernel_stats: Optional[bool] = None,
-        use_fn_seg: bool = True,
-        use_schema: bool = True,
-        use_fn_jit: bool = False,
-        superstep: bool = False,
-        jit_mesh=None,
-        jit_mesh_axis: Optional[str] = None,
+        # Deprecated execution kwargs (one-release shim onto ExecutionConfig).
+        queue_impl=_UNSET,
+        kernel_stats=_UNSET,
+        use_fn_seg=_UNSET,
+        use_schema=_UNSET,
+        use_fn_jit=_UNSET,
+        superstep=_UNSET,
+        jit_mesh=_UNSET,
+        jit_mesh_axis=_UNSET,
     ) -> None:
+        legacy = {
+            k: v
+            for k, v in (
+                ("queue_impl", queue_impl),
+                ("kernel_stats", kernel_stats),
+                ("use_fn_seg", use_fn_seg),
+                ("use_schema", use_schema),
+                ("use_fn_jit", use_fn_jit),
+                ("superstep", superstep),
+                ("jit_mesh", jit_mesh),
+                ("jit_mesh_axis", jit_mesh_axis),
+            )
+            if v is not _UNSET
+        }
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    f"pass config=ExecutionConfig(...) or the legacy kwargs "
+                    f"{sorted(legacy)}, not both"
+                )
+            warnings.warn(
+                f"Engine execution kwargs {sorted(legacy)} are deprecated; "
+                f"pass config=ExecutionConfig(...) instead "
+                f"(see repro.engine.config)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = ExecutionConfig.from_legacy_kwargs(legacy)
+        if config is None:
+            config = ExecutionConfig()
+        if config.num_workers > 1:
+            raise ValueError(
+                "ExecutionConfig.workers(n) selects the multi-worker runtime: "
+                "construct repro.engine.cluster.ClusterEngine (or use "
+                "repro.engine.make_engine) instead of Engine"
+            )
+        self.config = config
+        queue_impl = config.queue_impl
+        kernel_stats = config.kernel_stats
+        use_fn_seg = config.use_fn_seg
+        use_schema = config.use_schema
+        use_fn_jit = config.use_fn_jit
+        superstep = config.use_superstep
+        jit_mesh = config.jit_mesh
+        jit_mesh_axis = config.jit_mesh_axis
         topology.validate()
         self.topology = topology
         self.num_nodes = num_nodes
         self.capacity = np.ones(num_nodes) if capacity is None else np.asarray(capacity)
         self.service_rate = service_rate
         self.ser_cost = ser_cost
+        self.seed = seed
         g = topology.num_keygroups
         rng = np.random.default_rng(seed)
         if initial_alloc is None:
@@ -372,6 +433,16 @@ class Engine:
             self.metrics.dropped_credits += len(keys) - n
         if n == 0:
             return 0
+        self._admit_source(oid, keys, values, ts, n)
+        return n
+
+    def _admit_source(self, oid: int, keys, values, ts, n: int) -> None:
+        """Convert and route ``n`` already-admitted source tuples.
+
+        Split from :meth:`push_source` so the multi-worker runtime can admit
+        coordinator-approved slices without re-running the credit gate
+        (cross-worker backpressure is decided once, at the coordinator).
+        """
         schema = self._op_schema[oid]
         if schema is not None:
             # Ingestion is the one edge where boxed records still exist:
@@ -389,7 +460,6 @@ class Engine:
         else:
             batch = make_batch(keys[:n], values[:n], ts[:n])
         self._route_batch(oid, batch, src_kgs=None, src_nodes=None)
-        return n
 
     # --------------------------------------------------------------- routing
     def _partition(self, op: int, keys, values) -> tuple[
@@ -1170,7 +1240,16 @@ class Engine:
                 else:
                     src_kgs = np.repeat(np.fromiter(kg_t, np.int64, count=m), lens)
                 src_nodes = np.repeat(np.fromiter(nd_t, np.int64, count=m), lens)
-            self._route_batch(dop, batch, src_kgs=src_kgs, src_nodes=src_nodes)
+            self._dispatch_batch(dop, batch, src_kgs, src_nodes)
+
+    def _dispatch_batch(self, dop, batch, src_kgs, src_nodes) -> None:
+        """Deliver one gathered per-operator batch (the flush → route seam).
+
+        The multi-worker shard engine overrides this to split the batch by
+        owning worker and exchange the remote slices before routing — the
+        single-process path routes directly.
+        """
+        self._route_batch(dop, batch, src_kgs=src_kgs, src_nodes=src_nodes)
 
     # ------------------------------------------------------- SPL statistics
     def end_period(self) -> ClusterState:
@@ -1258,6 +1337,28 @@ class Engine:
             self._queues[dst].push_batch(op, keygroup, batch, cost)
             self._record_admission(dst, len(batch[0]))
 
+    def export_keygroup(self, keygroup: int) -> serde.Envelope:
+        """The documented migration export: σ_k + parked backlog as a
+        versioned :class:`~repro.engine.serde.Envelope`.
+
+        For a live migration call this after :meth:`redirect` (the redirect
+        parks the key group's queued runs into the backlog the envelope
+        carries); called standalone it snapshots state plus whatever backlog
+        is parked, leaving still-queued runs in place (the checkpoint
+        shape).  Worker-to-worker transfer in :mod:`repro.engine.cluster`
+        ships exactly these envelopes.
+        """
+        return serde.Envelope(keygroup, self.serialize(keygroup))
+
+    def import_keygroup(
+        self, envelope: serde.Envelope, dst: Optional[int] = None
+    ) -> None:
+        """Install an exported envelope; ``dst`` defaults to the key group's
+        current routed node (i.e. the post-``redirect`` destination)."""
+        if dst is None:
+            dst = self.router.node_of(envelope.keygroup)
+        self.install(envelope.keygroup, dst, envelope.blob)
+
     # --------------------------------------------------------------- elastic
     def add_nodes(self, count: int, capacity: float = 1.0) -> None:
         self.num_nodes += count
@@ -1281,3 +1382,17 @@ class Engine:
         self.alive[node] = False
         self._queues[node].clear()
         return self.router.keygroups_on(node)
+
+    # ------------------------------------------------------------- inspection
+    def queue_costs(self) -> list[float]:
+        """Per-node queued work in cost-units (index = node id)."""
+        return [q.cost for q in self._queues]
+
+    def finalize(self) -> None:
+        """Release execution resources; results stay readable.
+
+        A no-op for the single-process engine — the multi-worker runtime
+        overrides it to gather worker-side results and shut the pool down —
+        so drivers (the conformance harness, benchmarks) can call it
+        unconditionally.
+        """

@@ -16,22 +16,70 @@ the very same envelope.  ``decode_batch(encode_batch(b))`` is value- and
 dtype-exact for both, which is what keeps the conformance harness able to
 pin typed and untyped execution bit-identical across migrations.
 
-Blobs that do not start with :data:`MAGIC` are treated as bare state
-pickles with an empty backlog — the pre-envelope format the failure-recovery
-path still emits when restoring from a checkpoint.
+The envelope is *versioned*: byte 4 of the header carries the layout
+version as an ASCII digit (``b"RSE" + b"1"`` — so a v1 envelope is
+byte-identical to the historical ``b"RSE1"`` magic and every blob ever
+produced by ``serialize()`` still installs).  :func:`envelope_version`
+reads the version without decoding; :func:`decode_migration` rejects
+versions this build does not understand instead of misparsing them.  The
+version rules are documented in ``docs/execution_tiers.md``; the public
+migration API wrapping these blobs is ``Engine.export_keygroup(kg) ->
+Envelope`` / ``Engine.import_keygroup(env)``, and the multi-worker runtime
+(:mod:`repro.engine.cluster`) ships exactly these envelopes between worker
+processes.
+
+Blobs that do not start with the ``b"RSE"`` magic prefix are treated as
+bare state pickles with an empty backlog — the pre-envelope format the
+failure-recovery path still emits when restoring from a checkpoint.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import pickle
 
 import numpy as np
 
 from repro.engine.topology import Batch
 
-MAGIC = b"RSE1"  # repro stream envelope, version 1
+_MAGIC_PREFIX = b"RSE"  # repro stream envelope
+ENVELOPE_VERSION = 1  # current layout version (v1 = the original layout)
+MAGIC = b"RSE1"  # full v1 magic, kept for external readers
 
 _TYPED, _PICKLED = 0, 1
+
+
+def envelope_version(blob: bytes) -> int | None:
+    """Layout version of a migration blob, or None for bare state pickles."""
+    if len(blob) < 4 or blob[:3] != _MAGIC_PREFIX:
+        return None
+    v = blob[3] - ord("0")
+    if not 0 <= v <= 9:
+        raise ValueError(f"malformed envelope version byte {blob[3:4]!r}")
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class Envelope:
+    """One key group's migration payload: σ_k state + queued backlog.
+
+    The documented unit of state transfer: ``Engine.export_keygroup`` emits
+    one, ``Engine.import_keygroup`` installs one, and worker-to-worker
+    migration in :mod:`repro.engine.cluster` ships the ``blob`` bytes
+    verbatim — so a cross-worker round trip is byte-identical to the
+    single-process envelope (pinned by the conformance harness).
+    """
+
+    keygroup: int
+    blob: bytes
+
+    @property
+    def version(self) -> int | None:
+        return envelope_version(self.blob)
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.blob)
 
 
 def _contig(a: np.ndarray) -> np.ndarray:
@@ -76,10 +124,17 @@ def decode_batch(blob: bytes | memoryview) -> Batch:
     return keys, values, ts
 
 
-def encode_migration(state_blob: bytes, backlog: list[Batch]) -> bytes:
-    """σ_k state + queued backlog → one migration envelope."""
+def encode_migration(
+    state_blob: bytes, backlog: list[Batch], *, version: int = ENVELOPE_VERSION
+) -> bytes:
+    """σ_k state + queued backlog → one versioned migration envelope."""
+    if version != ENVELOPE_VERSION:
+        raise ValueError(
+            f"cannot encode envelope version {version}; this build writes "
+            f"v{ENVELOPE_VERSION}"
+        )
     parts = [
-        MAGIC,
+        _MAGIC_PREFIX + b"%d" % version,
         len(state_blob).to_bytes(8, "little"),
         state_blob,
         len(backlog).to_bytes(4, "little"),
@@ -92,9 +147,19 @@ def encode_migration(state_blob: bytes, backlog: list[Batch]) -> bytes:
 
 
 def decode_migration(blob: bytes) -> tuple[bytes, list[Batch]]:
-    """Envelope → (state blob, backlog batches); bare pickles pass through."""
-    if not blob.startswith(MAGIC):
+    """Envelope → (state blob, backlog batches); bare pickles pass through.
+
+    Raises on envelope versions this build does not understand — an
+    unknown layout must fail loudly, not deserialize garbage.
+    """
+    version = envelope_version(blob)
+    if version is None:
         return blob, []
+    if version != ENVELOPE_VERSION:
+        raise ValueError(
+            f"unsupported migration envelope version {version} "
+            f"(this build reads v{ENVELOPE_VERSION})"
+        )
     view = memoryview(blob)
     off = len(MAGIC)
     slen = int.from_bytes(view[off : off + 8], "little")

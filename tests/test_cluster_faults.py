@@ -1,0 +1,282 @@
+"""Worker fault injection: kill a live worker process, recover, converge.
+
+Three layers of assurance:
+
+* **Exactness** — a worker killed between ticks, with its key groups
+  reinstalled from checkpoint envelopes, converges to the single-process
+  oracle driven through the *same* crash (``fail_node`` over the worker's
+  node block, same envelopes): identical sink outputs and states, because
+  the replicas are bit-exact and both sides lose exactly the dead queues.
+* **Liveness** — a worker killed *mid-tick* (the coordinator finds out
+  while waiting on its report) must not wedge the pool: the in-flight tick
+  completes via the coordinator's death-injection path and the survivors
+  keep serving.
+* **Interleavings** — hypothesis drives random migrate/kill/push/tick
+  schedules through cluster and oracle together (skipped cleanly when
+  hypothesis isn't installed).
+"""
+
+import numpy as np
+
+from conformance import make_pipeline_topo
+from repro.engine import Engine, ExecutionConfig, make_engine
+
+KGS = 8
+
+
+def _pair(num_nodes=4, service_rate=1e9, seed=0):
+    """A 2-worker cluster and the single-process oracle, identically built."""
+    cluster = make_engine(
+        make_pipeline_topo(KGS),
+        num_nodes,
+        config=ExecutionConfig.workers(2),
+        service_rate=service_rate,
+        seed=seed,
+    )
+    oracle = Engine(
+        make_pipeline_topo(KGS),
+        num_nodes,
+        config=ExecutionConfig.typed(),
+        service_rate=service_rate,
+        seed=seed,
+    )
+    return cluster, oracle
+
+
+def _push_both(engines, n, seed, key_space=5_000):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space, size=n).astype(np.int64)
+    values, ts = rng.random(n), np.zeros(n)
+    return [e.push_source("src", keys, values, ts) for e in engines]
+
+
+def _drain_both(cluster, oracle, max_ticks=200):
+    for _ in range(max_ticks):
+        busy = cluster.worst_queue_cost() > 0.0
+        busy |= any(q.cost for q in oracle._queues)
+        if not busy:
+            return
+        cluster.tick()
+        oracle.tick()
+    raise AssertionError("failed to quiesce")
+
+
+def test_kill_between_ticks_recovers_to_oracle():
+    cluster, oracle = _pair(service_rate=400.0)
+    try:
+        for t in range(6):
+            _push_both((cluster, oracle), 300, seed=10 + t)
+            cluster.tick()
+            oracle.tick()
+
+        # Checkpoint every key group living on worker 1 — from *both*
+        # engines, proving the envelopes are byte-identical, then keep
+        # serving traffic so the checkpoints go stale before the crash.
+        doomed_nodes = np.flatnonzero(cluster.node_worker == 1)
+        doomed_kgs = np.flatnonzero(
+            np.isin(cluster.router.table, doomed_nodes)
+        )
+        checkpoints = {}
+        for kg in doomed_kgs.tolist():
+            env_c = cluster.export_keygroup(kg)
+            env_o = oracle.export_keygroup(kg)
+            assert env_c.blob == env_o.blob and env_c.version == 1
+            checkpoints[kg] = env_c
+        for t in range(2):
+            _push_both((cluster, oracle), 300, seed=20 + t)
+            cluster.tick()
+            oracle.tick()
+
+        # Crash: the cluster loses a real OS process; the oracle loses the
+        # same node block.  Both drop the same queued runs (bit-exact
+        # replicas), so they stay comparable.
+        orphans = cluster.fail_worker(1)
+        assert np.array_equal(orphans, doomed_kgs)
+        for node in doomed_nodes.tolist():
+            oracle.fail_node(node)
+        assert np.array_equal(cluster.alive, oracle.alive)
+
+        # Recover from the (stale) checkpoints onto worker 0's first node.
+        dst = int(np.flatnonzero(cluster.node_worker == 0)[0])
+        for kg, env in checkpoints.items():
+            cluster.import_keygroup(env, dst)
+            oracle.router.table[kg] = dst
+            oracle.router.version += 1
+            oracle.import_keygroup(env, dst)
+        assert np.array_equal(cluster.router.table, oracle.router.table)
+
+        for t in range(3):
+            _push_both((cluster, oracle), 300, seed=30 + t)
+            cluster.tick()
+            oracle.tick()
+        _drain_both(cluster, oracle)
+        cluster.finalize()
+    finally:
+        cluster.close()
+
+    assert cluster.metrics.sink_outputs == oracle.metrics.sink_outputs
+    c_states = {kg: s for kg, s in cluster.store.items() if s}
+    o_states = {kg: s for kg, s in oracle.store.items() if s}
+    assert c_states == o_states
+
+
+def test_kill_mid_tick_does_not_wedge_the_pool():
+    cluster = make_engine(
+        make_pipeline_topo(KGS),
+        4,
+        config=ExecutionConfig.workers(2),
+        service_rate=1e9,
+        seed=0,
+    )
+    try:
+        for t in range(3):
+            rng = np.random.default_rng(50 + t)
+            keys = rng.integers(0, 5_000, size=400).astype(np.int64)
+            cluster.push_source("src", keys, rng.random(400), np.zeros(400))
+            cluster.tick()
+        sinks_before = len(cluster.metrics.sink_outputs)
+
+        # Kill the raw process with no coordinator bookkeeping: the tick
+        # below must detect the death, inject the missing exchange, and
+        # complete on the survivor alone.
+        cluster.pool.kill(1)
+        rng = np.random.default_rng(99)
+        keys = rng.integers(0, 5_000, size=400).astype(np.int64)
+        cluster.push_source("src", keys, rng.random(400), np.zeros(400))
+        cluster.tick()
+        assert 1 in cluster._dead_workers
+        assert not cluster.alive[cluster.node_worker == 1].any()
+
+        # Survivors keep serving: traffic to surviving key groups flows end
+        # to end and the pool still quiesces.
+        for _ in range(20):
+            if cluster.worst_queue_cost() == 0.0:
+                break
+            cluster.tick()
+        assert cluster.worst_queue_cost() == 0.0
+        assert len(cluster.metrics.sink_outputs) > sinks_before
+        cluster.finalize()
+    finally:
+        cluster.close()
+
+
+def test_fail_worker_reports_orphans_and_rejects_dead_installs():
+    cluster, _ = _pair()
+    try:
+        _push_both((cluster,), 200, seed=1)
+        cluster.tick()
+        base = cluster.topology.kg_base(1)
+        # A checkpoint taken before the crash, for a key group on worker 0.
+        kg0 = next(
+            k for k in range(base, base + KGS)
+            if cluster.worker_of_node(cluster.router.node_of(k)) == 0
+        )
+        env = cluster.export_keygroup(kg0)
+
+        orphans = cluster.fail_worker(1)
+        dead_nodes = np.flatnonzero(cluster.node_worker == 1)
+        assert set(orphans.tolist()) == set(
+            np.flatnonzero(np.isin(cluster.router.table, dead_nodes)).tolist()
+        )
+
+        # Installing onto a dead worker's node is an error, not a silent drop.
+        dead_dst = int(dead_nodes[0])
+        try:
+            cluster.import_keygroup(env, dead_dst)
+        except RuntimeError as e:
+            assert "dead" in str(e)
+        else:  # pragma: no cover
+            raise AssertionError("install to a dead worker must raise")
+    finally:
+        cluster.close()
+
+
+def test_random_migrate_kill_interleavings_match_oracle():
+    import pytest
+
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def schedules(draw):
+        steps = draw(st.integers(4, 8))
+        ops = []
+        for _ in range(steps):
+            ops.append(
+                draw(
+                    st.one_of(
+                        st.tuples(st.just("push"), st.integers(0, 10_000)),
+                        st.just(("tick",)),
+                        st.tuples(
+                            st.just("migrate"),
+                            st.integers(0, KGS - 1),
+                            st.integers(0, 3),
+                        ),
+                    )
+                )
+            )
+        kill_at = draw(st.one_of(st.none(), st.integers(0, steps - 1)))
+        return ops, kill_at
+
+    @settings(max_examples=5, deadline=None)
+    @given(sched=schedules())
+    def run(sched):
+        ops, kill_at = sched
+        cluster, oracle = _pair()
+        try:
+            killed = False
+            for i, op in enumerate(ops):
+                if kill_at == i and not killed:
+                    # Crash worker 1 and immediately re-home its key groups
+                    # from checkpoints, mirrored on the oracle (cross-tick
+                    # in-flight migrations over a crash are covered by the
+                    # between-ticks test; here migrations are immediate so
+                    # none are in flight at kill time).
+                    killed = True
+                    doomed = np.flatnonzero(cluster.node_worker == 1)
+                    kgs = np.flatnonzero(
+                        np.isin(cluster.router.table, doomed)
+                    )
+                    envs = {
+                        kg: cluster.export_keygroup(kg)
+                        for kg in kgs.tolist()
+                    }
+                    cluster.fail_worker(1)
+                    for node in doomed.tolist():
+                        oracle.fail_node(node)
+                    dst = int(np.flatnonzero(cluster.node_worker == 0)[0])
+                    for kg, env in envs.items():
+                        cluster.import_keygroup(env, dst)
+                        oracle.router.table[kg] = dst
+                        oracle.router.version += 1
+                        oracle.import_keygroup(env, dst)
+                if op[0] == "push":
+                    _push_both((cluster, oracle), 120, seed=op[1])
+                elif op[0] == "tick":
+                    cluster.tick()
+                    oracle.tick()
+                elif op[0] == "migrate":
+                    base = cluster.topology.kg_base(1)
+                    kg, dst = base + op[1], op[2]
+                    if (
+                        not cluster.router.is_in_flight(kg)
+                        and cluster.alive[cluster.router.node_of(kg)]
+                        and cluster.alive[dst]
+                    ):
+                        cluster.redirect(kg, dst)
+                        oracle.redirect(kg, dst)
+                        blob_c = cluster.serialize(kg)
+                        blob_o = oracle.serialize(kg)
+                        assert blob_c == blob_o
+                        cluster.install(kg, dst, blob_c)
+                        oracle.install(kg, dst, blob_o)
+            _drain_both(cluster, oracle)
+            cluster.finalize()
+        finally:
+            cluster.close()
+        assert cluster.metrics.sink_outputs == oracle.metrics.sink_outputs
+        c_states = {kg: s for kg, s in cluster.store.items() if s}
+        o_states = {kg: s for kg, s in oracle.store.items() if s}
+        assert c_states == o_states
+
+    run()

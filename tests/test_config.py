@@ -1,0 +1,131 @@
+"""ExecutionConfig: the one-value execution API and its deprecation shim.
+
+The config dataclass replaces eight interacting Engine kwargs; these tests
+pin the preset matrix, the validation rules, the legacy-kwarg shim (warns
+but behaves identically for one release) and the ``make_engine`` dispatch.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conformance import make_pipeline_topo
+from repro.engine import Engine, ExecutionConfig, make_engine
+
+
+def test_preset_matrix():
+    assert ExecutionConfig.oracle() == ExecutionConfig(
+        queue_impl="deque", use_fn_seg=False, use_schema=False
+    )
+    assert ExecutionConfig.seg() == ExecutionConfig(use_schema=False)
+    assert ExecutionConfig.typed() == ExecutionConfig()
+    jit = ExecutionConfig.jit()
+    assert jit.use_fn_jit and not jit.use_superstep
+    sstep = ExecutionConfig.superstep()
+    assert sstep.use_fn_jit and sstep.use_superstep
+    w = ExecutionConfig.workers(3)
+    assert w.num_workers == 3 and w.use_schema and w.use_fn_seg
+
+
+def test_config_names_match_conformance_labels():
+    assert ExecutionConfig.typed().name == "soa+seg+schema"
+    assert ExecutionConfig.seg().name == "soa+seg"
+    assert ExecutionConfig(use_fn_seg=False, use_schema=False).name == "soa+fn"
+    assert ExecutionConfig.oracle().name == "deque+fn"
+    assert ExecutionConfig.jit().name == "soa+seg+schema+jit"
+    assert ExecutionConfig.superstep().name == "soa+seg+schema+jit+superstep"
+    assert ExecutionConfig.workers(2).name == "soa+seg+schema+workers"
+
+
+def test_config_is_frozen_and_validated():
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ExecutionConfig().queue_impl = "deque"  # type: ignore[misc]
+    with pytest.raises(ValueError, match="queue_impl"):
+        ExecutionConfig(queue_impl="ring")
+    with pytest.raises(ValueError, match="use_fn_jit requires"):
+        ExecutionConfig(use_fn_jit=True, use_schema=False)
+    with pytest.raises(ValueError, match="use_fn_jit requires"):
+        ExecutionConfig(use_fn_jit=True, queue_impl="deque", use_schema=True)
+    with pytest.raises(ValueError, match="use_superstep requires"):
+        ExecutionConfig(use_superstep=True)
+    with pytest.raises(ValueError, match="num_workers"):
+        ExecutionConfig(num_workers=0)
+    with pytest.raises(ValueError, match="numpy tiers only"):
+        ExecutionConfig(use_fn_jit=True, num_workers=2)
+
+
+def test_replace_returns_new_validated_config():
+    base = ExecutionConfig.typed()
+    seg = base.replace(use_schema=False)
+    assert seg == ExecutionConfig.seg()
+    assert base.use_schema  # original untouched
+    with pytest.raises(ValueError):
+        ExecutionConfig.jit().replace(use_schema=False)
+
+
+def test_legacy_kwargs_warn_and_map_onto_config():
+    topo = make_pipeline_topo(8)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        eng = Engine(topo, 3, queue_impl="deque", use_fn_seg=False,
+                     use_schema=False)
+    assert eng.config == ExecutionConfig.oracle()
+    with pytest.warns(DeprecationWarning):
+        eng = Engine(make_pipeline_topo(8), 3, superstep=False,
+                     use_fn_jit=False)
+    assert eng.config == ExecutionConfig.typed()
+
+
+def test_legacy_kwargs_behave_identically_to_config():
+    def drive(eng):
+        rng = np.random.default_rng(7)
+        for t in range(6):
+            keys = rng.integers(0, 500, size=80).astype(np.int64)
+            eng.push_source("src", keys, rng.random(80), np.full(80, float(t)))
+            eng.tick()
+        for _ in range(4):
+            eng.tick()
+        return eng.metrics.sink_outputs, [s for _, s in eng.store.items()]
+
+    a = drive(Engine(make_pipeline_topo(8), 3, config=ExecutionConfig.seg()))
+    with pytest.warns(DeprecationWarning):
+        b = drive(Engine(make_pipeline_topo(8), 3, use_schema=False))
+    assert a == b
+
+
+def test_config_and_legacy_kwargs_are_mutually_exclusive():
+    with pytest.raises(TypeError, match="not both"):
+        Engine(
+            make_pipeline_topo(8),
+            3,
+            config=ExecutionConfig.typed(),
+            use_schema=False,
+        )
+
+
+def test_engine_rejects_workers_config():
+    with pytest.raises(ValueError, match="multi-worker"):
+        Engine(make_pipeline_topo(8), 4, config=ExecutionConfig.workers(2))
+
+
+def test_make_engine_dispatches_on_num_workers():
+    eng = make_engine(make_pipeline_topo(8), 3, config=ExecutionConfig.typed())
+    assert isinstance(eng, Engine)
+    eng = make_engine(make_pipeline_topo(8), 3)  # default config
+    assert eng.config == ExecutionConfig.typed()
+
+    from repro.engine.cluster import ClusterEngine
+
+    ceng = make_engine(
+        make_pipeline_topo(8), 4, config=ExecutionConfig.workers(2)
+    )
+    try:
+        assert isinstance(ceng, ClusterEngine)
+        assert ceng.num_workers == 2
+    finally:
+        ceng.close()
+
+
+def test_from_legacy_kwargs_rejects_unknown():
+    with pytest.raises(TypeError, match="unknown execution kwargs"):
+        ExecutionConfig.from_legacy_kwargs({"queue": "soa"})

@@ -15,6 +15,7 @@ pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from conformance import (
+    FUZZ_CONFIGS,
     FUZZ_KINDS,
     Scenario,
     assert_equivalent,
@@ -67,7 +68,10 @@ def test_fuzzed_topologies_conform(spec):
         "fuzz", ticks=10, drain_ticks=6, migrate_at=spec["migrate_at"]
     )
     results = run_configs(
-        lambda: make_fuzz_topology(spec), fuzz_feeders(spec), scenario
+        lambda: make_fuzz_topology(spec),
+        fuzz_feeders(spec),
+        scenario,
+        configs=FUZZ_CONFIGS,
     )
     assert_equivalent(results)
     assert results["soa+seg+schema"]["metrics"]["processed_tuples"] > 0
@@ -89,6 +93,9 @@ def test_fuzzed_topologies_conform_under_backpressure(spec):
         migrate_at=spec["migrate_at"],
     )
     results = run_configs(
-        lambda: make_fuzz_topology(spec), fuzz_feeders(spec), scenario
+        lambda: make_fuzz_topology(spec),
+        fuzz_feeders(spec),
+        scenario,
+        configs=FUZZ_CONFIGS,
     )
     assert_equivalent(results)

@@ -20,7 +20,7 @@ import pytest
 from conformance import make_pipeline_topo
 from repro.data.jobs import real_job_2
 from repro.data.synthetic import StreamSpec, airline_stream
-from repro.engine import Engine
+from repro.engine import Engine, ExecutionConfig
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -44,7 +44,7 @@ def test_compiles_bounded_by_buckets_not_ticks():
     """A long run with wildly varied batch sizes compiles O(#buckets)
     programs: jit_calls grows with ticks, jit_compiles does not."""
     eng = Engine(
-        make_pipeline_topo(8), 4, service_rate=1e9, seed=0, use_fn_jit=True
+        make_pipeline_topo(8), 4, service_rate=1e9, seed=0, config=ExecutionConfig.jit()
     )
     sizes = [7, 40, 900, 13, 260, 55, 1, 470, 33, 128] * 6  # 60 varied ticks
     _feed_pipeline(eng, sizes)
@@ -64,11 +64,11 @@ def test_second_engine_recompiles_nothing_globally():
     runtime-level counts stay equal, not doubled, across engines."""
     sizes = [64, 64, 64, 64]
     eng1 = Engine(
-        make_pipeline_topo(8), 2, service_rate=1e9, seed=0, use_fn_jit=True
+        make_pipeline_topo(8), 2, service_rate=1e9, seed=0, config=ExecutionConfig.jit()
     )
     _feed_pipeline(eng1, sizes)
     eng2 = Engine(
-        make_pipeline_topo(8), 2, service_rate=1e9, seed=0, use_fn_jit=True
+        make_pipeline_topo(8), 2, service_rate=1e9, seed=0, config=ExecutionConfig.jit()
     )
     _feed_pipeline(eng2, sizes)
     assert eng2.metrics.jit_compiles == eng1.metrics.jit_compiles
@@ -76,9 +76,9 @@ def test_second_engine_recompiles_nothing_globally():
 
 def test_jit_requires_soa_and_schema():
     with pytest.raises(ValueError):
-        Engine(make_pipeline_topo(8), 2, queue_impl="deque", use_fn_jit=True)
+        ExecutionConfig(queue_impl="deque", use_fn_jit=True, use_schema=True)
     with pytest.raises(ValueError):
-        Engine(make_pipeline_topo(8), 2, use_schema=False, use_fn_jit=True)
+        ExecutionConfig(use_schema=False, use_fn_jit=True)
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +160,8 @@ def test_table_growth_past_initial_capacity():
     interpreted oracle."""
     topo = real_job_2(keygroups_per_op=2)
     kw = dict(service_rate=1e9, seed=0, collect_sinks=False)
-    jit_eng = Engine(real_job_2(keygroups_per_op=2), 2, use_fn_jit=True, **kw)
+    jit_eng = Engine(real_job_2(keygroups_per_op=2), 2,
+                     config=ExecutionConfig.jit(), **kw)
     seg_eng = Engine(topo, 2, **kw)
     stream = airline_stream(StreamSpec(rate=500.0, seed=3))
     batches = [next(stream) for _ in range(6)]
@@ -201,7 +202,7 @@ def test_migration_blob_bytes_identical_on_integer_state():
     the interpreted engine's."""
     sizes = [100, 80, 120]
     jit_eng = Engine(
-        make_pipeline_topo(8), 2, service_rate=1e9, seed=0, use_fn_jit=True
+        make_pipeline_topo(8), 2, service_rate=1e9, seed=0, config=ExecutionConfig.jit()
     )
     seg_eng = Engine(make_pipeline_topo(8), 2, service_rate=1e9, seed=0)
     _feed_pipeline(jit_eng, sizes)
@@ -215,7 +216,7 @@ def test_install_then_jit_resumes_from_installed_state():
     """install() marks the dict authoritative; the next jit call pushes it
     back into columns and continues from it."""
     eng = Engine(
-        make_pipeline_topo(8), 2, service_rate=1e9, seed=0, use_fn_jit=True
+        make_pipeline_topo(8), 2, service_rate=1e9, seed=0, config=ExecutionConfig.jit()
     )
     _feed_pipeline(eng, [50, 50])
     kg = 8  # a mid-operator key group
@@ -243,15 +244,14 @@ def test_shard_map_single_device_parity():
     mesh = jax.make_mesh((1,), ("nodes",), devices=jax.devices()[:1])
     sizes = [60, 130, 90]
     plain = Engine(
-        make_pipeline_topo(8), 2, service_rate=1e9, seed=0, use_fn_jit=True
+        make_pipeline_topo(8), 2, service_rate=1e9, seed=0, config=ExecutionConfig.jit()
     )
     sharded = Engine(
         make_pipeline_topo(8),
         2,
         service_rate=1e9,
         seed=0,
-        use_fn_jit=True,
-        jit_mesh=mesh,
+        config=ExecutionConfig.jit(mesh=mesh),
     )
     _feed_pipeline(plain, sizes)
     _feed_pipeline(sharded, sizes)
@@ -271,16 +271,15 @@ SHARDED_PARITY = textwrap.dedent(
     import jax
     from repro.data.jobs import real_job_2
     from repro.data.synthetic import StreamSpec, airline_stream
-    from repro.engine import Engine
+    from repro.engine import Engine, ExecutionConfig
 
     mesh = jax.make_mesh((2,), ("nodes",), devices=jax.devices()[:2])
     kw = dict(service_rate=1e9, seed=0, collect_sinks=True)
     engines = [
-        Engine(real_job_2(keygroups_per_op=4), 2, use_fn_jit=True, **kw),
-        Engine(
-            real_job_2(keygroups_per_op=4), 2, use_fn_jit=True,
-            jit_mesh=mesh, **kw
-        ),
+        Engine(real_job_2(keygroups_per_op=4), 2,
+               config=ExecutionConfig.jit(), **kw),
+        Engine(real_job_2(keygroups_per_op=4), 2,
+               config=ExecutionConfig.jit(mesh=mesh), **kw),
     ]
     stream = airline_stream(StreamSpec(rate=120.0, seed=5))
     batches = [next(stream) for _ in range(5)]
@@ -353,7 +352,7 @@ SHARDED_PARITY = textwrap.dedent(
     results = []
     for m in (None, mesh):
         e = Engine(scalar_topo(), 2, service_rate=1e9, seed=0,
-                   use_fn_jit=True, jit_mesh=m)
+                   config=ExecutionConfig.jit(mesh=m))
         g = e.topology.kg_base(1)
         out, lens = e._jit_exec(
             1, [g + 1, g + 1], [0, 2], [2, 4], keys4, vals4, ts4

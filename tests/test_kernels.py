@@ -215,10 +215,12 @@ def test_kernel_histogram_wiring_matches_numpy_engine():
     """kernel_stats=True feeds the kernel's histogram into SPLWindow —
     routing, arrivals, and folded SPL statistics stay bit-identical to the
     numpy (np.bincount) engine."""
-    from repro.engine import Engine
+    from repro.engine import Engine, ExecutionConfig
 
-    kern = Engine(_mk_pipeline(), 4, service_rate=1e9, seed=0, kernel_stats=True)
-    ref = Engine(_mk_pipeline(), 4, service_rate=1e9, seed=0, kernel_stats=False)
+    kern = Engine(_mk_pipeline(), 4, service_rate=1e9, seed=0,
+                  config=ExecutionConfig(kernel_stats=True))
+    ref = Engine(_mk_pipeline(), 4, service_rate=1e9, seed=0,
+                 config=ExecutionConfig(kernel_stats=False))
     rng = np.random.default_rng(5)
     for t in range(4):
         keys = rng.integers(-(2**62), 2**62, size=257, dtype=np.int64)
@@ -241,7 +243,7 @@ def test_kernel_histogram_wiring_matches_numpy_engine():
 def test_kernel_histogram_wiring_nonint_keys_fall_back():
     """String keys can't ride the int-mix kernel: the engine silently uses
     the numpy path and the statistics remain correct."""
-    from repro.engine import Engine
+    from repro.engine import Engine, ExecutionConfig
     from repro.engine.topology import OperatorSpec, Topology
 
     def sink(state, keys, values, ts):
@@ -251,7 +253,8 @@ def test_kernel_histogram_wiring_nonint_keys_fall_back():
     t.add_operator(OperatorSpec("src", None, num_keygroups=8, is_source=True))
     t.add_operator(OperatorSpec("snk", sink, num_keygroups=8, is_sink=True))
     t.connect("src", "snk")
-    eng = Engine(t, 2, service_rate=1e9, seed=0, kernel_stats=True)
+    eng = Engine(t, 2, service_rate=1e9, seed=0,
+                 config=ExecutionConfig(kernel_stats=True))
     keys = np.array([f"user-{i % 13}" for i in range(99)])
     eng.push_source("src", keys, np.ones(99), np.zeros(99))
     eng.tick()

@@ -16,7 +16,7 @@ pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from conformance import make_pipeline_topo, normalize
-from repro.engine import Engine
+from repro.engine import Engine, ExecutionConfig
 
 KGS = 8
 NODES = 3
@@ -88,8 +88,11 @@ def test_migration_interleavings_preserve_tuples_and_state(schedule):
             NODES,
             service_rate=120.0,
             seed=0,
-            queue_impl=impl,
-            use_schema=use_schema,
+            config=ExecutionConfig(
+                queue_impl=impl,
+                use_schema=use_schema,
+                use_fn_seg=impl == "soa",
+            ),
         )
         accepted = _apply(eng, schedule)
         mid_base = eng.topology.kg_base(1)

@@ -14,7 +14,7 @@ tuples.
 import numpy as np
 import pytest
 
-from repro.engine import Engine
+from repro.engine import Engine, ExecutionConfig
 from repro.engine.topology import (
     OperatorSpec,
     Topology,
@@ -176,7 +176,7 @@ def _make_engines(service_rate=1e9, num_nodes=4, seed=0, kgs=16):
             num_nodes,
             service_rate=service_rate,
             seed=seed,
-            queue_impl=impl,
+            config=ExecutionConfig(queue_impl=impl),
         )
         for impl in ("soa", "deque")
     )
@@ -248,7 +248,8 @@ def test_migration_roundtrip_preserves_inflight_tuples():
     """
     results = []
     for impl in ("soa", "deque"):
-        eng = Engine(_pipeline_topo(), 4, service_rate=1e9, seed=0, queue_impl=impl)
+        eng = Engine(_pipeline_topo(), 4, service_rate=1e9, seed=0,
+                     config=ExecutionConfig(queue_impl=impl))
         rng = np.random.default_rng(7)
         keys = rng.integers(0, 10_000, size=400).astype(np.int64)
         vals = rng.random(400)
@@ -388,7 +389,7 @@ def test_fn_seg_matches_per_run_fn():
         4,
         service_rate=1e9,
         seed=0,
-        queue_impl="deque",
+        config=ExecutionConfig(queue_impl="deque"),
     )
     for eng in (seg_eng, run_eng, oracle):
         _drive(eng)
@@ -490,8 +491,10 @@ def test_soa_matches_deque_nondyadic_costs():
         return t
 
     for seed in (0, 1, 2):
-        soa = Engine(topo_nd(), 3, service_rate=70.0, seed=seed, queue_impl="soa")
-        dq = Engine(topo_nd(), 3, service_rate=70.0, seed=seed, queue_impl="deque")
+        soa = Engine(topo_nd(), 3, service_rate=70.0, seed=seed,
+                     config=ExecutionConfig(queue_impl="soa"))
+        dq = Engine(topo_nd(), 3, service_rate=70.0, seed=seed,
+                    config=ExecutionConfig(queue_impl="deque"))
         assert _drive(soa, ticks=25, seed=seed) == _drive(dq, ticks=25, seed=seed)
         assert soa.metrics.processed_tuples == dq.metrics.processed_tuples, seed
         assert soa.metrics.sink_outputs == dq.metrics.sink_outputs

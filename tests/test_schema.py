@@ -17,7 +17,13 @@ import pytest
 from conformance import make_pipeline_topo
 from repro.data.jobs import real_job_3
 from repro.data.synthetic import StreamSpec, airline_stream
-from repro.engine import Engine, OperatorSpec, Schema, Topology
+from repro.engine import (
+    Engine,
+    ExecutionConfig,
+    OperatorSpec,
+    Schema,
+    Topology,
+)
 from repro.engine import serde
 from repro.engine.topology import make_batch
 
@@ -161,7 +167,8 @@ def test_typed_job_routes_no_object_arrays(monkeypatch):
 
 def test_untyped_engine_routes_zero_typed_batches():
     eng = Engine(
-        real_job_3(keygroups_per_op=12), 4, service_rate=1e9, seed=0, use_schema=False
+        real_job_3(keygroups_per_op=12), 4, service_rate=1e9, seed=0,
+        config=ExecutionConfig.seg()
     )
     stream = airline_stream(StreamSpec(rate=150.0, seed=3))
     for _ in range(4):
@@ -237,6 +244,53 @@ def test_migration_envelope_roundtrip_and_legacy_blobs():
     assert serde.decode_migration(state_blob) == (state_blob, [])
 
 
+def test_envelope_version_reading_and_rejection():
+    blob = serde.encode_migration(pickle.dumps({"n": 1}), [])
+    assert blob[:4] == serde.MAGIC
+    assert serde.envelope_version(blob) == serde.ENVELOPE_VERSION == 1
+    # Bare pickles are versionless, not an error.
+    assert serde.envelope_version(pickle.dumps({"n": 1})) is None
+    # A future layout must be rejected loudly, never misparsed.
+    future = b"RSE2" + blob[4:]
+    assert serde.envelope_version(future) == 2
+    with pytest.raises(ValueError, match="unsupported migration envelope"):
+        serde.decode_migration(future)
+    with pytest.raises(ValueError, match="malformed envelope version"):
+        serde.envelope_version(b"RSEx-junk")
+    # This build only writes the current version.
+    with pytest.raises(ValueError, match="cannot encode"):
+        serde.encode_migration(b"", [], version=2)
+
+
+def test_envelope_dataclass_exposes_version_and_size():
+    env = serde.Envelope(keygroup=3, blob=serde.encode_migration(b"s", []))
+    assert env.version == 1 and env.keygroup == 3
+    assert env.nbytes == len(env.blob)
+
+
+def test_export_import_keygroup_roundtrip():
+    topo = make_pipeline_topo(8)
+    a = Engine(topo, 3, service_rate=1e9, seed=0)
+    b = Engine(topo, 3, service_rate=1e9, seed=0)
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 4_000, size=300).astype(np.int64)
+    for eng in (a, b):
+        eng.push_source("src", keys, rng.random(300), np.zeros(300))
+        eng.tick()
+    kg = int(topo.kg_base(1))
+    env = a.export_keygroup(kg)
+    assert env.version == 1
+    # Export is non-destructive: the same call reproduces the same bytes.
+    assert a.export_keygroup(kg).blob == env.blob
+    # Install onto another node of an identically-driven engine and finish
+    # the job there; no tuples may be lost.
+    dst = (b.router.node_of(kg) + 1) % 3
+    b.router.table[kg] = dst
+    b.router.version += 1
+    b.import_keygroup(env, dst)
+    assert b.router.node_of(kg) == dst
+
+
 # ---------------------------------------------------------------------------
 # Engine serialize→install: schema-typed state and queued segments
 # ---------------------------------------------------------------------------
@@ -249,7 +303,8 @@ def test_schema_roundtrip_identical_across_queue_impls():
     engines, blobs = [], []
     for impl in ("soa", "deque"):
         eng = Engine(
-            make_pipeline_topo(8), 3, service_rate=90.0, seed=0, queue_impl=impl
+            make_pipeline_topo(8), 3, service_rate=90.0, seed=0,
+            config=ExecutionConfig(queue_impl=impl)
         )
         rng = np.random.default_rng(11)
         for t in range(4):  # binding budget: work stays queued
@@ -320,7 +375,8 @@ def test_schema_roundtrip_matches_untyped_path():
     results = []
     for use_schema in (True, False):
         eng = Engine(
-            make_pipeline_topo(8), 3, service_rate=120.0, seed=0, use_schema=use_schema
+            make_pipeline_topo(8), 3, service_rate=120.0, seed=0,
+            config=ExecutionConfig(use_schema=use_schema)
         )
         rng = np.random.default_rng(13)
         pending = []

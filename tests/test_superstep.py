@@ -36,19 +36,19 @@ from conformance import (
     normalize,
     run_configs,
 )
-from repro.engine import Engine
+from repro.engine import Engine, ExecutionConfig
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _engine(superstep, *, service_rate=1e9, num_nodes=4):
+    config = ExecutionConfig.superstep() if superstep else ExecutionConfig.jit()
     return Engine(
         make_pipeline_topo(),
         num_nodes,
         service_rate=service_rate,
         seed=0,
-        use_fn_jit=True,
-        superstep=superstep,
+        config=config,
     )
 
 
@@ -121,14 +121,14 @@ def test_plan_rejects_non_fusible_shapes():
     # Not marked jit_fusible → never fuses (the contract is an opt-in).
     topo = make_pipeline_topo()
     topo.operators[1].jit_fusible = False
-    eng = Engine(topo, 4, service_rate=1e9, seed=0, use_fn_jit=True,
-                 superstep=True)
+    eng = Engine(topo, 4, service_rate=1e9, seed=0,
+                 config=ExecutionConfig.superstep())
     assert plan_chain(eng) is None
     # Non-identity partition key breaks the device-routing replay.
     topo = make_pipeline_topo()
     topo.operators[2].key_fn = lambda k: k % 3
-    eng = Engine(topo, 4, service_rate=1e9, seed=0, use_fn_jit=True,
-                 superstep=True)
+    eng = Engine(topo, 4, service_rate=1e9, seed=0,
+                 config=ExecutionConfig.superstep())
     assert plan_chain(eng) is None
     # The interpreted tiers must not build a plan at all.
     eng = Engine(make_pipeline_topo(), 4, service_rate=1e9, seed=0)
@@ -284,8 +284,8 @@ def test_run_supersteps_static_route_matches_classic():
     def static_engine():
         topo = make_pipeline_topo()
         topo.operators[1].jit_key_map = lambda k: k + 17  # mid re-keys by +17
-        return Engine(topo, 4, service_rate=1e9, seed=0, use_fn_jit=True,
-                      superstep=True)
+        return Engine(topo, 4, service_rate=1e9, seed=0,
+                      config=ExecutionConfig.superstep())
 
     # The undeclared chain must keep using the on-device routing path.
     assert not plan_chain(_engine(True)).static_route
@@ -368,7 +368,7 @@ ZERO_FN_JIT = textwrap.dedent(
     """
     import sys
     import numpy as np
-    from repro.engine import Engine
+    from repro.engine import Engine, ExecutionConfig
     from repro.engine.topology import OperatorSpec, Schema, Topology
 
     t = Topology()
@@ -383,8 +383,8 @@ ZERO_FN_JIT = textwrap.dedent(
     t.add_operator(OperatorSpec("snk", fn, num_keygroups=4, is_sink=True,
                                 schema=scalar))
     t.connect("src", "snk")
-    eng = Engine(t, 2, service_rate=1e9, seed=0, use_fn_jit=True,
-                 superstep=True)
+    eng = Engine(t, 2, service_rate=1e9, seed=0,
+                 config=ExecutionConfig.superstep())
     assert eng.superstep is False  # degraded: nothing to fuse
     eng.push_source("src", np.arange(8, dtype=np.int64), np.ones(8),
                     np.zeros(8))
