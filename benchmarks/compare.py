@@ -8,7 +8,9 @@ the job fails when any gated row regressed by more than ``--threshold``
 solver_perf, and the per-job real_jobs rows: the fn_seg/columnar throughput
 rows, the record-pipeline columnar-vs-object row, and the schema-typed
 migration round-trip row) and whose baseline time clears ``--min-us`` —
-sub-50µs rows are noise, not signal.
+sub-50µs rows are noise, not signal.  Per-unit times embedded in a row's
+derived column (``*_us_per_tick`` entries, e.g. the multiworker row's
+exchange costs) gate the same way, as ``<row>:<key>`` sub-rows.
 
 Rows measured best-of-N embed a ``spread=`` entry (best/worst across the
 repeats) in their derived column; the gate report prints it alongside each
@@ -52,10 +54,29 @@ class Comparison:
         return self.new_us / self.base_us if self.base_us > 0 else float("inf")
 
 
+# Derived-column entries whose key ends with one of these suffixes are
+# per-unit times and gate exactly like a row's us_per_call, under the name
+# ``<row>:<key>``.  Today that is the multiworker row's exchange costs
+# (``xchg_us_per_tick`` / ``xchg_queue_us_per_tick``): the shm transport's
+# win is invisible in wall-clock us_per_call on a small host, so the gate
+# watches the exchange time itself.
+GATED_DERIVED_SUFFIXES = ("_us_per_tick",)
+
+
 def load_rows(path: str) -> dict[str, float]:
     with open(path) as f:
         doc = json.load(f)
-    return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
+    out: dict[str, float] = {}
+    for r in doc.get("rows", []):
+        out[r["name"]] = float(r["us_per_call"])
+        for part in str(r.get("derived", "")).split(";"):
+            key, _, val = part.partition("=")
+            if key.endswith(GATED_DERIVED_SUFFIXES):
+                try:
+                    out[f"{r['name']}:{key}"] = float(val)
+                except ValueError:
+                    pass
+    return out
 
 
 def load_spreads(path: str) -> dict[str, float]:

@@ -565,11 +565,16 @@ def measure_multiworker(
             eng.tick()
         return total / (time.perf_counter() - t0)
 
-    def multi(n: int) -> float:
+    def multi(n: int, shm: int | None = None) -> tuple[float, dict]:
+        config = (
+            ExecutionConfig.workers(n)
+            if shm is None
+            else ExecutionConfig.workers(n, shm=shm)
+        )
         eng = make_engine(
             make_record_pipeline_job(num_keygroups=num_keygroups, depth=depth),
             8,
-            config=ExecutionConfig.workers(n),
+            config=config,
             service_rate=1e12,
             seed=0,
             collect_sinks=False,
@@ -582,16 +587,49 @@ def measure_multiworker(
             eng.run_stream("src", batches, window=2 * n)
             while eng.worst_queue_cost() > 0.0:
                 eng.tick()
-            return total / (time.perf_counter() - t0)
+            rate = total / (time.perf_counter() - t0)
+            eng.finalize()  # folds per-worker exchange counters
+            return rate, dict(eng.exchange_stats)
         finally:
             eng.close()
+
+    def xchg_us_per_tick(xs: dict, n: int) -> tuple[float, float]:
+        """(exchange encode+decode µs per tick, exchanged ticks).
+
+        Every worker sends one exchange message per peer per tick (shm or
+        queue), so messages / (n·(n-1)) is exactly the tick count the
+        counters span — warm-up and drain ticks included on both sides.
+        """
+        lanes = max(n * (n - 1), 1)
+        nticks = (xs["shm_msgs"] + xs["queue_msgs"]) / lanes
+        return (xs["enc_s"] + xs["dec_s"]) / max(nticks, 1e-9) * 1e6, nticks
 
     out: dict[str, float] = {}
     single_rates = [single() for _ in range(max(repeats, 1))]
     out["single"], out["spread"] = _best_and_spread(single_rates)
+    first_xs: dict = {}
     for n in workers:
-        out[f"w{n}"] = max(multi(n) for _ in range(max(repeats, 1)))
+        runs = [multi(n) for _ in range(max(repeats, 1))]
+        rate, xs = max(runs, key=lambda rx: rx[0])
+        if n == workers[0]:
+            first_xs = xs
+        out[f"w{n}"] = rate
         out[f"w{n}_vs_single"] = out[f"w{n}"] / max(out["single"], 1e-9)
+    # Exchange transport columns: per-tick encode+decode cost of the shm
+    # lanes vs the same workload forced onto the pickled-queue fallback
+    # (shm=0), plus bytes moved through the rings per tick.
+    n0 = workers[0]
+    out["xchg_us_per_tick"], nticks = xchg_us_per_tick(first_xs, n0)
+    out["xchg_kb_per_tick"] = first_xs.get("shm_bytes_out", 0) / max(
+        nticks, 1e-9
+    ) / 1024.0
+    queue_runs = [multi(n0, shm=0) for _ in range(max(repeats, 1))]
+    out["xchg_queue_us_per_tick"] = min(
+        xchg_us_per_tick(xs, n0)[0] for _, xs in queue_runs
+    )
+    out["xchg_speedup"] = out["xchg_queue_us_per_tick"] / max(
+        out["xchg_us_per_tick"], 1e-9
+    )
     # Primary gate metric: µs per tick of the first multi-worker variant,
     # end to end (total tuples / its tuples-per-second, per tick).
     out["us_per_tick"] = total / max(out[f"w{workers[0]}"], 1e-9) / ticks * 1e6
@@ -691,6 +729,10 @@ def run(quick: bool = False) -> list[str]:
             f";w4_tuples_per_sec={mw['w4']:.0f}"
             f";w2_vs_single={mw['w2_vs_single']:.2f}"
             f";w4_vs_single={mw['w4_vs_single']:.2f}"
+            f";xchg_us_per_tick={mw['xchg_us_per_tick']:.1f}"
+            f";xchg_queue_us_per_tick={mw['xchg_queue_us_per_tick']:.1f}"
+            f";xchg_speedup={mw['xchg_speedup']:.2f}"
+            f";xchg_kb_per_tick={mw['xchg_kb_per_tick']:.1f}"
             f";spread={mw['spread']:.2f}",
         )
     )

@@ -24,10 +24,15 @@ Execution stays a BSP superstep per tick, now distributed:
    parallelism; the numpy operator tiers run outside any shared lock).
 3. **Exchange** — instead of routing its tick outputs directly, a shard
    splits each downstream operator's gathered batch by owning worker
-   (:meth:`_ShardEngine._dispatch_batch`) and sends the remote slices —
-   serde-encoded columnar envelopes — to its peers.  Each worker then
-   concatenates the per-operator contributions *in ascending worker id
-   order* (its own slice in its own slot) and routes the merged batch once.
+   (:meth:`_ShardEngine._dispatch_batch`) and sends the remote slices to
+   its peers: raw ``serde``-layout columns spliced into the per-lane
+   shared-memory ring (:mod:`repro.engine.shmx` — zero pickling, one
+   memcpy each side), falling back to the pickled-queue lane for
+   ring-full overflow and object-dtype batches, at whole-message
+   granularity so a (tick, lane) contribution travels on exactly one
+   transport.  Each worker then concatenates the per-operator
+   contributions *in ascending worker id order* (its own slice in its own
+   slot) and routes the merged batch once.
 
 Because node blocks are contiguous and ascending in worker id, that merge
 order equals the single-process engine's node-ascending flush order — so
@@ -51,17 +56,23 @@ reports.
 The runtime requires the ``fork`` start method (operator closures are
 inherited, never pickled) and therefore POSIX.  Transport is strictly
 single-writer — per-worker command and report queues, per-``(sender →
-receiver)`` exchange lanes, coordinator-owned death Events (see
-:class:`WorkerPool`) — so a SIGKILLed worker cannot orphan a lock any
-survivor needs, and every blocking wait is deadline-guarded so a wedged
-pool fails the run fast instead of deadlocking it.
+receiver)`` exchange lanes (one shm ring plus one fallback queue each,
+both single-producer/single-consumer), coordinator-owned death Events
+(see :class:`WorkerPool`) — so a SIGKILLed worker cannot orphan a lock
+any survivor needs, and every blocking wait is deadline-guarded so a
+wedged pool fails the run fast instead of deadlocking it.  The shm
+segments are coordinator-allocated before the fork and coordinator-owned
+thereafter: only the coordinator ever ``unlink``\\ s them — on shutdown
+and on worker death — so a killed worker cannot leak a segment.
 """
 
 from __future__ import annotations
 
 import multiprocessing
 import os
+import pickle
 import queue as _queue_mod
+import uuid
 from multiprocessing import connection as mp_connection
 import time
 import traceback
@@ -70,7 +81,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.stats import ClusterState, PairRates
-from repro.engine import serde
+from repro.engine import serde, shmx
 from repro.engine.backpressure import CreditController
 from repro.engine.config import ExecutionConfig
 from repro.engine.executor import Engine, EngineMetrics
@@ -91,6 +102,17 @@ _METRIC_SUM_FIELDS = (
     "seg_calls",
     "seg_tuples",
     "typed_batches",
+)
+
+#: Per-worker exchange counters, summed into ``ClusterEngine.exchange_stats``
+#: at finalize (the benchmark's encode+decode and bytes-copied columns).
+_EXCHANGE_STAT_FIELDS = (
+    "enc_s",
+    "dec_s",
+    "shm_msgs",
+    "queue_msgs",
+    "shm_bytes_out",
+    "shm_bytes_in",
 )
 
 
@@ -202,46 +224,113 @@ def _worker_main(wid, spec):
     cmd_q = spec["cmd_queues"][wid]
     rep_q = spec["report_queues"][wid]
     inboxes = spec["inboxes"]  # inboxes[receiver][sender]
+    rings = spec["rings"]  # rings[receiver][sender] (ShmRing or None)
     dead_events = spec["dead_events"]
     num_workers = spec["num_workers"]
     timeout = spec["timeout"]
     dead: set[int] = set()
-    # stash[sender][tick] → encoded items (per-sender lanes deliver in tick
-    # order, but a fast peer can run ahead in pipelined mode).
-    stash: dict[int, dict[int, list]] = {}
+    # Lane codecs over the fork-inherited rings: senders[peer] writes my
+    # (wid → peer) ring, receivers[peer] reads the (peer → wid) ring.
+    senders = [
+        shmx.LaneSender(rings[w][wid]) if rings[w][wid] is not None else None
+        for w in range(num_workers)
+    ]
+    receivers = [
+        shmx.LaneReceiver(rings[wid][w]) if rings[wid][w] is not None else None
+        for w in range(num_workers)
+    ]
+    xchg = dict.fromkeys(_EXCHANGE_STAT_FIELDS, 0)
+    # stash[sender][tick] → ("s", decoded items) | ("q", encoded items)
+    # (per-sender lanes deliver in tick order, but a fast peer can run
+    # ahead in pipelined mode, and one sender's ticks may alternate between
+    # the shm ring and the queue fallback).
+    stash: dict[int, dict[int, tuple]] = {}
     sink_cursor = 0
+
+    def drain_lanes(sender):
+        """Move every delivered (sender → me) message into the stash."""
+        per = stash.setdefault(sender, {})
+        rx = receivers[sender]
+        if rx is not None:
+            while True:
+                t0 = time.perf_counter()
+                got = rx.poll()
+                if got is None:
+                    break
+                xchg["dec_s"] += time.perf_counter() - t0
+                per[got[0]] = ("s", got[1])
+        lane = inboxes[wid][sender]
+        while True:
+            # Timed around the successful get too: the queue path pays a
+            # pipe read plus wrapper unpickle per message — real decode
+            # cost of that transport, attributed where it is paid.
+            t0 = time.perf_counter()
+            try:
+                blob = lane.get_nowait()
+            except _queue_mod.Empty:
+                break
+            mt, enc = pickle.loads(blob)
+            xchg["dec_s"] += time.perf_counter() - t0
+            per[mt] = ("q", enc)
 
     def recv_exchange(t, sender):
         per = stash.setdefault(sender, {})
-        lane = inboxes[wid][sender]
         deadline = time.monotonic() + timeout
         while t not in per:
-            try:
-                _, mt, enc = lane.get(timeout=0.2)
-            except _queue_mod.Empty:
-                if dead_events[sender].is_set():
-                    # Final sweep: a contribution flushed between our poll
-                    # and the peer's death still counts.
-                    try:
-                        while True:
-                            _, mt, enc = lane.get_nowait()
-                            per[mt] = enc
-                    except _queue_mod.Empty:
-                        pass
-                    if t in per:
-                        return per.pop(t)
-                    # Peer died before contributing this tick: its tuples
-                    # are lost (fail_node semantics) — drain with nothing.
-                    dead.add(sender)
-                    return None
-                if time.monotonic() > deadline:
-                    raise RuntimeError(
-                        f"worker {wid}: exchange wait for peer {sender} "
-                        f"tick {t} timed out"
-                    )
-                continue
-            per[mt] = enc
-        return per.pop(t)
+            drain_lanes(sender)
+            if t in per:
+                break
+            if dead_events[sender].is_set():
+                # Final sweep: a contribution published between our poll
+                # and the peer's death still counts (the ring mapping
+                # outlives the coordinator's unlink).
+                drain_lanes(sender)
+                if t in per:
+                    break
+                # Peer died before contributing this tick: its tuples
+                # are lost (fail_node semantics) — drain with nothing.
+                dead.add(sender)
+                return None
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"worker {wid}: exchange wait for peer {sender} "
+                    f"tick {t} timed out"
+                )
+            time.sleep(0.0005)
+        kind, payload = per.pop(t)
+        if kind == "s":
+            return payload
+        t0 = time.perf_counter()
+        items = [
+            (dop, serde.decode_batch(enc), sk, sn)
+            for dop, enc, sk, sn in payload
+        ]
+        xchg["dec_s"] += time.perf_counter() - t0
+        return items
+
+    def send_exchange(t, w, items):
+        """Ship one tick's contribution to peer ``w``: shm ring when it
+        fits and every batch is native, else the pickled queue lane.
+
+        The fallback pickles to bytes *inline* (not via the queue's feeder
+        thread) so the exchange counters attribute the serialization cost
+        where it is actually paid.
+        """
+        tx = senders[w]
+        if tx is not None:
+            t0 = time.perf_counter()
+            sent = tx.try_send(t, items)
+            xchg["enc_s"] += time.perf_counter() - t0
+            if sent:
+                xchg["shm_msgs"] += 1
+                return
+        t0 = time.perf_counter()
+        blob = pickle.dumps(
+            (t, _encode_items(items)), protocol=pickle.HIGHEST_PROTOCOL
+        )
+        xchg["enc_s"] += time.perf_counter() - t0
+        inboxes[w][wid].put(blob)
+        xchg["queue_msgs"] += 1
 
     def do_tick(t):
         nonlocal sink_cursor
@@ -249,24 +338,18 @@ def _worker_main(wid, spec):
         local, out = eng.take_exchange()
         peers = [w for w in range(num_workers) if w != wid and w not in dead]
         for w in peers:
-            inboxes[w][wid].put(("xchg", t, _encode_items(
-                [
-                    (dop, batch, sk, sn)
-                    for dop, items in sorted(out.get(w, {}).items())
-                    for batch, sk, sn in items
-                ]
-            )))
+            send_exchange(t, w, [
+                (dop, batch, sk, sn)
+                for dop, items in sorted(out.get(w, {}).items())
+                for batch, sk, sn in items
+            ])
         contribs: dict[int, list] = {wid: [
             (dop, batch, sk, sn)
             for dop, items in sorted(local.items())
             for batch, sk, sn in items
         ]}
         for w in peers:
-            enc_items = recv_exchange(t, w)
-            contribs[w] = [
-                (dop, serde.decode_batch(enc), sk, sn)
-                for dop, enc, sk, sn in (enc_items or [])
-            ]
+            contribs[w] = recv_exchange(t, w) or []
         per_dop: dict[int, list] = {}
         for w in sorted(contribs):
             for dop, batch, sk, sn in contribs[w]:
@@ -342,6 +425,12 @@ def _worker_main(wid, spec):
             elif op == "gather":
                 owned_kgs = eng.owned_keygroups()
                 my_nodes = np.flatnonzero(eng._node_worker == wid)
+                xchg["shm_bytes_out"] = sum(
+                    s.bytes_copied for s in senders if s is not None
+                )
+                xchg["shm_bytes_in"] = sum(
+                    r.bytes_copied for r in receivers if r is not None
+                )
                 payload = {
                     "metrics": {
                         f: getattr(eng.metrics, f) for f in _METRIC_SUM_FIELDS
@@ -352,6 +441,7 @@ def _worker_main(wid, spec):
                     "queue_costs": {
                         int(n): eng._queues[n].cost for n in my_nodes
                     },
+                    "exchange": dict(xchg),
                 }
                 rep_q.put(("ack", wid, "gather", payload))
             elif op == "stop":
@@ -374,7 +464,9 @@ class WorkerPool:
 
     Every channel has exactly ONE writer — per-worker command queues
     (written by the coordinator), per-worker report queues (written by that
-    worker), and per-``(sender → receiver)`` exchange queues.  The
+    worker), and per-``(sender → receiver)`` exchange lanes: one shm ring
+    (:class:`repro.engine.shmx.ShmRing`, single-producer/single-consumer
+    by construction) plus one fallback queue each.  The
     discipline is what makes ``kill()`` safe: a SIGKILLed process can die
     holding only locks no survivor ever takes (an ``mp.Queue`` shared by
     two writers serializes them on one pipe lock, and a process killed
@@ -385,23 +477,52 @@ class WorkerPool:
     channel.
     """
 
-    def __init__(self, num_workers: int, spec: dict, timeout: float):
+    def __init__(
+        self,
+        num_workers: int,
+        spec: dict,
+        timeout: float,
+        *,
+        shm_lane_bytes: int = 0,
+    ):
         ctx = multiprocessing.get_context("fork")
         self.num_workers = num_workers
         self.timeout = timeout
         self.cmd_queues = [ctx.Queue() for _ in range(num_workers)]
         self.report_queues = [ctx.Queue() for _ in range(num_workers)]
-        # inboxes[receiver][sender]: the (sender → receiver) exchange lane.
+        # inboxes[receiver][sender]: the (sender → receiver) exchange lane's
+        # fallback queue (ring-full overflow, object-dtype batches).
         self.inboxes = [
             [ctx.Queue() if s != r else None for s in range(num_workers)]
             for r in range(num_workers)
         ]
+        # rings[receiver][sender]: the lane's shm ring — allocated here,
+        # BEFORE the fork, so workers inherit the mappings; unlinked only
+        # by the coordinator (shutdown / worker death).
+        self.rings: list[list] = [
+            [None] * num_workers for _ in range(num_workers)
+        ]
+        if shm_lane_bytes:
+            uid = uuid.uuid4().hex[:8]
+            try:
+                for r in range(num_workers):
+                    for s in range(num_workers):
+                        if s != r:
+                            self.rings[r][s] = shmx.ShmRing.create(
+                                f"{shmx.SEGMENT_PREFIX}_{os.getpid()}"
+                                f"_{uid}_{s}to{r}",
+                                shm_lane_bytes,
+                            )
+            except OSError:
+                # No usable /dev/shm on this host: run on the queue path.
+                self._destroy_rings()
         self.dead_events = [ctx.Event() for _ in range(num_workers)]
         spec = dict(
             spec,
             cmd_queues=self.cmd_queues,
             report_queues=self.report_queues,
             inboxes=self.inboxes,
+            rings=self.rings,
             dead_events=self.dead_events,
             num_workers=num_workers,
             timeout=timeout,
@@ -412,6 +533,24 @@ class WorkerPool:
         ]
         for p in self.processes:
             p.start()
+
+    def _destroy_rings(self) -> None:
+        for row in self.rings:
+            for s, ring in enumerate(row):
+                if ring is not None:
+                    ring.unlink()
+                    ring.close()
+                    row[s] = None
+
+    def release_worker_lanes(self, wid: int) -> None:
+        """Unlink every segment a dead worker touches (coordinator-owned
+        cleanup).  Survivors' inherited mappings stay valid, so a peer can
+        still drain the dead sender's ring during its final sweep — only
+        the *name* goes away, which is what prevents the leak."""
+        for r in range(self.num_workers):
+            for s in range(self.num_workers):
+                if wid in (r, s) and self.rings[r][s] is not None:
+                    self.rings[r][s].unlink()
 
     def send(self, wid: int, msg) -> None:
         self.cmd_queues[wid].put(msg)
@@ -438,6 +577,7 @@ class WorkerPool:
         ):
             q.close()
             q.cancel_join_thread()
+        self._destroy_rings()
 
 
 class ClusterEngine:
@@ -525,6 +665,12 @@ class ClusterEngine:
                 node_worker=self.node_worker,
             ),
             timeout,
+            shm_lane_bytes=config.shm_lane_bytes,
+        )
+        #: Folded per-worker exchange counters (populated at finalize):
+        #: encode/decode seconds, shm vs queue message counts, bytes copied.
+        self.exchange_stats: dict[str, float] = dict.fromkeys(
+            _EXCHANGE_STAT_FIELDS, 0
         )
         self._dead_workers: set[int] = set()
         self._worst = np.zeros(self.num_workers)
@@ -663,6 +809,10 @@ class ClusterEngine:
         self._dead_workers.add(wid)
         dead_nodes = np.flatnonzero(self.node_worker == wid)
         self.alive[dead_nodes] = False
+        # Coordinator-owned shm cleanup: a SIGKILLed worker can't unlink
+        # its own lanes, so its segments are released here (names only —
+        # survivors' mappings stay valid for the final drain).
+        self.pool.release_worker_lanes(wid)
         # Unblock survivors stuck on the dead worker's exchange: the Event
         # is coordinator-owned, so no channel the dead process might have
         # wedged is involved (see WorkerPool).
@@ -968,6 +1118,8 @@ class ClusterEngine:
                     self.store.put(kg, state)
             for node, c in p["queue_costs"].items():
                 costs[node] = c
+            for f in _EXCHANGE_STAT_FIELDS:
+                self.exchange_stats[f] += p.get("exchange", {}).get(f, 0)
         self._queue_costs = costs
         self._finalized = True
         self.close()

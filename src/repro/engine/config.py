@@ -39,6 +39,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
+#: Default capacity (bytes) of one shared-memory exchange lane — the
+#: documented ``ExecutionConfig.workers(n, shm=...)`` default.
+SHM_LANE_BYTES = 1 << 20
+
 #: Engine kwargs replaced by :class:`ExecutionConfig` (still accepted, with a
 #: DeprecationWarning, for one release).
 LEGACY_EXECUTION_KWARGS = (
@@ -73,6 +77,13 @@ class ExecutionConfig:
     # initialized on TPU); see Engine._auto_kernel_stats.
     kernel_stats: Optional[bool] = None
     num_workers: int = 1
+    #: Bytes per (sender → receiver) shared-memory exchange lane in the
+    #: multi-worker runtime (see docs/execution_tiers.md).  The default —
+    #: :data:`SHM_LANE_BYTES` = 1 MiB — comfortably holds several ticks of
+    #: typical exchange traffic per lane; a full ring falls back to the
+    #: queue path (correct, just slower).  ``0`` disables shm lanes
+    #: entirely (pure pickled-queue exchange, PR 7's transport).
+    shm_lane_bytes: int = SHM_LANE_BYTES
 
     def __post_init__(self) -> None:
         if self.queue_impl not in ("soa", "deque"):
@@ -89,6 +100,13 @@ class ExecutionConfig:
             )
         if self.num_workers < 1:
             raise ValueError("num_workers must be >= 1")
+        if self.shm_lane_bytes < 0:
+            raise ValueError("shm_lane_bytes must be >= 0 (0 disables shm lanes)")
+        if 0 < self.shm_lane_bytes < 64:
+            raise ValueError(
+                "shm_lane_bytes must be 0 or >= 64 (a ring smaller than one "
+                "record header can never deliver)"
+            )
         if self.num_workers > 1 and (self.use_fn_jit or self.use_superstep):
             raise ValueError(
                 "the multi-worker runtime runs the numpy tiers only "
@@ -128,9 +146,15 @@ class ExecutionConfig:
         )
 
     @classmethod
-    def workers(cls, n: int) -> "ExecutionConfig":
-        """``.typed()`` sharded over ``n`` OS worker processes."""
-        return cls(num_workers=int(n))
+    def workers(cls, n: int, *, shm: int = SHM_LANE_BYTES) -> "ExecutionConfig":
+        """``.typed()`` sharded over ``n`` OS worker processes.
+
+        ``shm`` sizes each (sender → receiver) shared-memory exchange lane
+        in bytes (default 1 MiB; see :data:`SHM_LANE_BYTES`).  ``shm=0``
+        disables the shm lanes and exchanges everything over the pickled
+        queue path.
+        """
+        return cls(num_workers=int(n), shm_lane_bytes=int(shm))
 
     # -- plumbing -------------------------------------------------------------
     @classmethod

@@ -9,8 +9,10 @@ The blob is a versioned envelope of
   source node's work queue — encoded per batch.
 
 Schema-typed batches (native key/value/ts dtypes) encode as raw buffer
-slices: a tiny pickled dtype header plus ``tobytes`` of each column, decoded
-with ``frombuffer`` — no per-tuple python, no pickling of boxed tuples.
+slices: a tiny pickled dtype header — *interned*, so every batch of the
+same schema shares the exact header bytes and the pickling cost is paid
+once per schema — plus ``tobytes`` of each column, decoded with
+``frombuffer`` — no per-tuple python, no pickling of boxed tuples.
 Object batches fall back to pickle so undeclared operators migrate through
 the very same envelope.  ``decode_batch(encode_batch(b))`` is value- and
 dtype-exact for both, which is what keeps the conformance harness able to
@@ -86,18 +88,77 @@ def _contig(a: np.ndarray) -> np.ndarray:
     return a if a.flags.c_contiguous else np.ascontiguousarray(a)
 
 
+#: Interned typed headers: one pickled header per (key, value, ts) dtype
+#: triple.  Batches sharing a schema therefore share the exact header bytes
+#: (the "same schema ⇒ same bytes" contract the shm exchange lanes and the
+#: conformance envelope pinning rely on), and the pickling cost is paid once
+#: per schema instead of once per batch.  The batch length lives *outside*
+#: the header as a fixed-width field so the header can be interned at all.
+_HEADER_CACHE: dict[tuple, bytes] = {}
+
+
+def typed_header(kdt: np.dtype, vdt: np.dtype, tdt: np.dtype) -> bytes:
+    """The interned typed-batch header for one dtype triple."""
+    key = (kdt, vdt, tdt)
+    head = _HEADER_CACHE.get(key)
+    if head is None:
+        head = pickle.dumps((_TYPED, kdt, vdt, tdt), protocol=pickle.HIGHEST_PROTOCOL)
+        _HEADER_CACHE[key] = head
+    return head
+
+
+def is_typed_batch(batch: Batch) -> bool:
+    """True when every column is native (no object fields anywhere).
+
+    ``dtype.hasobject`` rather than ``dtype.kind != "O"``: a *structured*
+    dtype containing an object field has kind ``"V"`` but still cannot be
+    encoded as raw buffers — ``tobytes``/``frombuffer`` would ship raw
+    pointers.  Such batches take the pickle path.
+    """
+    keys, values, ts = batch
+    return not (
+        keys.dtype.hasobject or values.dtype.hasobject or ts.dtype.hasobject
+    )
+
+
+def column_views(batch: Batch) -> list[memoryview]:
+    """Write-side zero-copy views of a typed batch's raw column buffers.
+
+    The byte concatenation of these views equals the column section of
+    ``encode_batch`` exactly; writers with their own framing (the shm
+    exchange lanes) splice them straight into the destination buffer
+    without materialising intermediate ``bytes``.
+    """
+    return [memoryview(_contig(col)).cast("B") for col in batch]
+
+
+def batch_from_views(
+    body: memoryview, kdt: np.dtype, vdt: np.dtype, tdt: np.dtype, n: int
+) -> Batch:
+    """Read-side zero-copy decode of the typed column layout.
+
+    The caller owns ``body``'s lifetime and writability (the shm lanes hand
+    over a freshly copied-out, writable buffer); the returned arrays alias
+    it, so no defensive copy is taken.
+    """
+    ko, vo = n * kdt.itemsize, n * (kdt.itemsize + vdt.itemsize)
+    to = vo + n * tdt.itemsize
+    keys = np.frombuffer(body[:ko], dtype=kdt, count=n)
+    values = np.frombuffer(body[ko:vo], dtype=vdt, count=n)
+    ts = np.frombuffer(body[vo:to], dtype=tdt, count=n)
+    return keys, values, ts
+
+
 def encode_batch(batch: Batch) -> bytes:
     """One queued batch → bytes (raw buffers when fully native, else pickle)."""
     keys, values, ts = batch
-    if keys.dtype.kind != "O" and values.dtype.kind != "O":
-        head = pickle.dumps(
-            (_TYPED, keys.dtype, values.dtype, ts.dtype, len(keys)),
-            protocol=pickle.HIGHEST_PROTOCOL,
-        )
+    if is_typed_batch(batch):
+        head = typed_header(keys.dtype, values.dtype, ts.dtype)
         return b"".join(
             (
                 len(head).to_bytes(4, "little"),
                 head,
+                len(keys).to_bytes(4, "little"),
                 _contig(keys).tobytes(),
                 _contig(values).tobytes(),
                 _contig(ts).tobytes(),
@@ -108,20 +169,29 @@ def encode_batch(batch: Batch) -> bytes:
     return len(head).to_bytes(4, "little") + head + body
 
 
-def decode_batch(blob: bytes | memoryview) -> Batch:
+def decode_batch(blob: bytes | memoryview, *, copy: bool = True) -> Batch:
+    """Bytes → batch.  ``copy=False`` skips the defensive copy and returns
+    arrays aliasing ``blob`` — only for callers that own a writable buffer
+    whose lifetime outlives the batch (the shm exchange lanes)."""
     view = memoryview(blob)
     hlen = int.from_bytes(view[:4], "little")
-    tag, kdt, vdt, tdt, n = pickle.loads(view[4 : 4 + hlen])
-    body = view[4 + hlen :]
+    header = pickle.loads(view[4 : 4 + hlen])
+    if len(header) == 5:  # legacy layout: batch length inside the header
+        tag, kdt, vdt, tdt, n = header
+        body = view[4 + hlen :]
+    else:
+        tag, kdt, vdt, tdt = header
+        n = int.from_bytes(view[4 + hlen : 8 + hlen], "little")
+        body = view[8 + hlen :]
     if tag == _PICKLED:
         return pickle.loads(body)
-    ko, vo = n * kdt.itemsize, n * (kdt.itemsize + vdt.itemsize)
-    # .copy(): frombuffer over an immutable blob yields read-only arrays;
-    # replayed batches must be ordinary writable arrays like any other.
-    keys = np.frombuffer(body[:ko], dtype=kdt, count=n).copy()
-    values = np.frombuffer(body[ko:vo], dtype=vdt, count=n).copy()
-    ts = np.frombuffer(body[vo:], dtype=tdt, count=n).copy()
-    return keys, values, ts
+    if copy:
+        # One raw byte copy: frombuffer over the immutable blob would yield
+        # read-only arrays, and per-column ndarray.copy() leaves structured
+        # padding bytes uninitialized — a raw copy keeps the round trip
+        # byte-exact and the arrays ordinarily writable.
+        body = memoryview(bytearray(body))
+    return batch_from_views(body, kdt, vdt, tdt, n)
 
 
 def encode_migration(

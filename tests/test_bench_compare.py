@@ -3,6 +3,7 @@ otherwise — including on an injected 25% slowdown (the acceptance scenario
 for the benchmark-gated pipeline)."""
 
 import json
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -79,6 +80,40 @@ def test_load_rows_roundtrip(tmp_path: Path):
     assert load_rows(str(p)) == BASE
 
 
+def test_derived_us_per_tick_entries_gate_as_sub_rows(tmp_path: Path):
+    """``*_us_per_tick`` derived entries load as ``<row>:<key>`` sub-rows and
+    regress the gate independently of the row's wall-clock us_per_call."""
+    def doc(xchg_us: float) -> dict:
+        return {
+            "schema": 1,
+            "rows": [
+                {
+                    "name": "engine_throughput/multiworker",
+                    "us_per_call": 9000.0,
+                    "derived": (
+                        f"w2_vs_single=0.25;xchg_us_per_tick={xchg_us};"
+                        "xchg_speedup=3.2;xchg_kb_per_tick=104.5"
+                    ),
+                }
+            ],
+        }
+
+    base_p = tmp_path / "base.json"
+    new_p = tmp_path / "new.json"
+    base_p.write_text(json.dumps(doc(200.0)))
+    new_p.write_text(json.dumps(doc(300.0)))  # exchange 1.5x slower, row flat
+
+    rows = load_rows(str(base_p))
+    assert rows["engine_throughput/multiworker:xchg_us_per_tick"] == 200.0
+    assert "engine_throughput/multiworker:xchg_speedup" not in rows  # ratio, not a time
+
+    gated, regressions = compare(rows, load_rows(str(new_p)))
+    assert [c.name for c in regressions] == [
+        "engine_throughput/multiworker:xchg_us_per_tick"
+    ]
+    assert main([str(base_p), str(new_p)]) == 1
+
+
 def test_parse_row_matches_csv_format():
     row = parse_row("engine_throughput/pipeline,4306.5,tuples_per_sec=2377796")
     assert row == {
@@ -126,7 +161,14 @@ def test_quick_run_writes_json(tmp_path: Path):
         capture_output=True,
         text=True,
         cwd=str(Path(__file__).parent.parent),
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        # Minimal env, but keep the jax backend selection: dropping
+        # JAX_PLATFORMS on a TPU-credentialed host sends the subprocess
+        # into a multi-minute TPU-init stall before falling back.
+        env={
+            "PYTHONPATH": "src",
+            "PATH": "/usr/bin:/bin:/usr/local/bin",
+            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+        },
         timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-2000:]

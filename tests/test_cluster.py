@@ -245,3 +245,80 @@ def test_close_terminates_worker_processes():
         p.join(timeout=10)
     assert not any(p.is_alive() for p in procs)
     eng.close()  # idempotent
+
+
+# ---------------------------------------------------------------------------
+# Shared-memory exchange lanes: transport selection and overflow fallback
+# ---------------------------------------------------------------------------
+
+
+def _run_matched(shm, ticks=6, n=300):
+    """Drive identical traffic through a 3-worker cluster with the given
+    ring size and the single-process oracle; return both engines."""
+    cluster = make_engine(
+        make_pipeline_topo(KGS),
+        4,
+        config=ExecutionConfig.workers(3, shm=shm),
+        service_rate=1e9,
+        seed=0,
+    )
+    oracle = make_engine(
+        make_pipeline_topo(KGS),
+        4,
+        config=ExecutionConfig.typed(),
+        service_rate=1e9,
+        seed=0,
+    )
+    try:
+        for t in range(ticks):
+            rng = np.random.default_rng(70 + t)
+            keys = rng.integers(0, 5_000, size=n).astype(np.int64)
+            values, ts = rng.random(n), np.zeros(n)
+            cluster.push_source("src", keys, values, ts)
+            oracle.push_source("src", keys, values, ts)
+            cluster.tick()
+            oracle.tick()
+        for _ in range(60):
+            if cluster.worst_queue_cost() == 0.0 and not any(
+                q.cost for q in oracle._queues
+            ):
+                break
+            cluster.tick()
+            oracle.tick()
+        cluster.finalize()
+    finally:
+        cluster.close()
+    return cluster, oracle
+
+
+def _assert_matches_oracle(cluster, oracle):
+    assert cluster.metrics.sink_outputs == oracle.metrics.sink_outputs
+    c_states = {kg: s for kg, s in cluster.store.items() if s}
+    o_states = {kg: s for kg, s in oracle.store.items() if s}
+    assert c_states == o_states
+
+
+def test_shm_lanes_carry_the_exchange_bit_exact():
+    cluster, oracle = _run_matched(shm=1 << 20)
+    _assert_matches_oracle(cluster, oracle)
+    xs = cluster.exchange_stats
+    assert xs["shm_msgs"] > 0 and xs["queue_msgs"] == 0
+    assert xs["shm_bytes_out"] > 0 and xs["shm_bytes_in"] > 0
+
+
+def test_ring_full_overflow_falls_back_bit_exact():
+    # A 128-byte ring holds an empty record but no real batch: every
+    # payload-carrying message must overflow to the queue path, mixing
+    # transports per (tick, lane) — the merge must not notice.
+    cluster, oracle = _run_matched(shm=128)
+    _assert_matches_oracle(cluster, oracle)
+    xs = cluster.exchange_stats
+    assert xs["shm_msgs"] > 0 and xs["queue_msgs"] > 0
+
+
+def test_queue_only_transport_stays_bit_exact():
+    cluster, oracle = _run_matched(shm=0)
+    _assert_matches_oracle(cluster, oracle)
+    xs = cluster.exchange_stats
+    assert xs["shm_msgs"] == 0 and xs["queue_msgs"] > 0
+    assert xs["shm_bytes_out"] == 0

@@ -280,3 +280,117 @@ def test_random_migrate_kill_interleavings_match_oracle():
         assert c_states == o_states
 
     run()
+
+
+def test_sigkill_leaves_no_shm_segments(tmp_path):
+    """The coordinator owns every exchange-lane segment: kill a worker with
+    SIGKILL mid-service and close the pool — /dev/shm must hold no
+    ``repro_xchg`` entry afterwards (nothing for the dead worker to leak)."""
+    import os
+
+    import pytest
+
+    from repro.engine.shmx import SEGMENT_PREFIX
+
+    if not os.path.isdir("/dev/shm"):  # pragma: no cover - non-POSIX-shm host
+        pytest.skip("no /dev/shm to scan")
+
+    def segments():
+        return [f for f in os.listdir("/dev/shm") if f.startswith(SEGMENT_PREFIX)]
+
+    cluster = make_engine(
+        make_pipeline_topo(KGS),
+        4,
+        config=ExecutionConfig.workers(2),
+        service_rate=1e9,
+        seed=0,
+    )
+    try:
+        _push_both((cluster,), 300, seed=5)
+        cluster.tick()
+        assert len(segments()) >= 2  # both directions allocated and live
+
+        cluster.pool.kill(1)  # raw SIGKILL, no coordinator bookkeeping
+        _push_both((cluster,), 300, seed=6)
+        cluster.tick()  # death detected; coordinator unlinks the dead lanes
+        cluster.finalize()
+    finally:
+        cluster.close()
+    assert segments() == []
+
+
+def test_random_mixed_transport_interleavings_match_oracle():
+    """Hypothesis over ring capacities and push/tick/migrate schedules: with
+    rings sized to overflow intermittently, one sender's ticks alternate
+    between the shm lane and the queue fallback — every schedule must stay
+    bit-exact against the single-process oracle."""
+    import pytest
+
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def schedules(draw):
+        shm = draw(st.sampled_from([0, 128, 2048, 1 << 16]))
+        steps = draw(st.integers(4, 8))
+        ops = [
+            draw(
+                st.one_of(
+                    st.tuples(st.just("push"), st.integers(0, 10_000)),
+                    st.just(("tick",)),
+                    st.tuples(
+                        st.just("migrate"),
+                        st.integers(0, KGS - 1),
+                        st.integers(0, 3),
+                    ),
+                )
+            )
+            for _ in range(steps)
+        ]
+        return shm, ops
+
+    @settings(max_examples=6, deadline=None)
+    @given(sched=schedules())
+    def run(sched):
+        shm, ops = sched
+        cluster = make_engine(
+            make_pipeline_topo(KGS),
+            4,
+            config=ExecutionConfig.workers(2, shm=shm),
+            service_rate=1e9,
+            seed=0,
+        )
+        oracle = Engine(
+            make_pipeline_topo(KGS),
+            4,
+            config=ExecutionConfig.typed(),
+            service_rate=1e9,
+            seed=0,
+        )
+        try:
+            for op in ops:
+                if op[0] == "push":
+                    _push_both((cluster, oracle), 150, seed=op[1])
+                elif op[0] == "tick":
+                    cluster.tick()
+                    oracle.tick()
+                else:
+                    base = cluster.topology.kg_base(1)
+                    kg, dst = base + op[1], op[2]
+                    if not cluster.router.is_in_flight(kg):
+                        cluster.redirect(kg, dst)
+                        oracle.redirect(kg, dst)
+                        blob = cluster.serialize(kg)
+                        assert blob == oracle.serialize(kg)
+                        cluster.install(kg, dst, blob)
+                        oracle.install(kg, dst, blob)
+            _drain_both(cluster, oracle)
+            cluster.finalize()
+        finally:
+            cluster.close()
+        assert cluster.metrics.sink_outputs == oracle.metrics.sink_outputs
+        c_states = {kg: s for kg, s in cluster.store.items() if s}
+        o_states = {kg: s for kg, s in oracle.store.items() if s}
+        assert c_states == o_states
+
+    run()

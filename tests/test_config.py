@@ -26,6 +26,10 @@ def test_preset_matrix():
     assert sstep.use_fn_jit and sstep.use_superstep
     w = ExecutionConfig.workers(3)
     assert w.num_workers == 3 and w.use_schema and w.use_fn_seg
+    from repro.engine.config import SHM_LANE_BYTES
+
+    assert w.shm_lane_bytes == SHM_LANE_BYTES
+    assert ExecutionConfig.workers(3, shm=0).shm_lane_bytes == 0
 
 
 def test_config_names_match_conformance_labels():
@@ -51,6 +55,10 @@ def test_config_is_frozen_and_validated():
         ExecutionConfig(use_superstep=True)
     with pytest.raises(ValueError, match="num_workers"):
         ExecutionConfig(num_workers=0)
+    with pytest.raises(ValueError, match="shm_lane_bytes"):
+        ExecutionConfig(shm_lane_bytes=-1)
+    with pytest.raises(ValueError, match="shm_lane_bytes"):
+        ExecutionConfig(shm_lane_bytes=32)
     with pytest.raises(ValueError, match="numpy tiers only"):
         ExecutionConfig(use_fn_jit=True, num_workers=2)
 

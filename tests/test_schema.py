@@ -195,6 +195,91 @@ def test_typed_batch_roundtrip_is_byte_exact():
         assert dec.flags.writeable
 
 
+def test_empty_typed_batch_roundtrip_is_byte_exact():
+    keys = np.empty(0, dtype=np.int64)
+    values = np.empty(0, dtype=REC.value)
+    ts = np.empty(0, dtype=np.float64)
+    blob = serde.encode_batch((keys, values, ts))
+    out = serde.decode_batch(blob)
+    for orig, dec in zip((keys, values, ts), out):
+        assert dec.dtype == orig.dtype
+        assert dec.shape == (0,)
+    # Re-encoding the decode reproduces the exact bytes (stable layout).
+    assert serde.encode_batch(out) == blob
+
+
+def test_padded_structured_dtype_roundtrip_is_byte_exact():
+    """A structured dtype with alignment padding must survive the raw-buffer
+    path byte-exactly — itemsize includes the pad, so raw slices do."""
+    padded = np.dtype([("a", "i1"), ("b", "f8")], align=True)
+    assert padded.itemsize == 16  # 7 pad bytes between the fields
+    values = np.zeros(64, dtype=padded)
+    values["a"] = np.arange(64) % 100
+    values["b"] = np.linspace(-1.0, 1.0, 64)
+    keys = np.arange(64, dtype=np.int64)
+    ts = np.zeros(64)
+    blob = serde.encode_batch((keys, values, ts))
+    out = serde.decode_batch(blob)
+    for orig, dec in zip((keys, values, ts), out):
+        assert dec.dtype == orig.dtype
+        assert dec.tobytes() == orig.tobytes()
+    assert serde.encode_batch(out) == blob
+
+
+def test_typed_headers_are_interned():
+    """Same schema ⇒ the exact same header bytes (and the same object), so
+    two batches of one schema differ only in their length+column bytes."""
+    h1 = serde.typed_header(
+        np.dtype(np.int64), np.dtype(REC.value), np.dtype(np.float64)
+    )
+    h2 = serde.typed_header(
+        np.dtype(np.int64), np.dtype(REC.value), np.dtype(np.float64)
+    )
+    assert h1 is h2
+    a = serde.encode_batch(
+        (np.arange(3, dtype=np.int64), np.zeros(3, REC.value), np.zeros(3))
+    )
+    b = serde.encode_batch(
+        (np.arange(9, dtype=np.int64), np.zeros(9, REC.value), np.zeros(9))
+    )
+    hlen = int.from_bytes(a[:4], "little")
+    assert a[: 4 + hlen] == b[: 4 + hlen]  # shared interned prefix
+
+
+def test_object_field_inside_structured_dtype_takes_pickle_path():
+    """kind == "V" but hasobject: raw buffers would ship pointers, so the
+    codec must fall back to pickle (and still round-trip values)."""
+    tricky = np.dtype([("n", "i8"), ("o", "O")])
+    values = np.empty(3, dtype=tricky)
+    values["n"] = [1, 2, 3]
+    values["o"] = [{"x": 1}, None, "s"]
+    batch = (np.arange(3, dtype=np.int64), values, np.zeros(3))
+    assert not serde.is_typed_batch(batch)
+    out = serde.decode_batch(serde.encode_batch(batch))
+    assert out[1]["n"].tolist() == [1, 2, 3]
+    assert out[1]["o"].tolist() == [{"x": 1}, None, "s"]
+
+
+def test_legacy_five_tuple_header_still_decodes():
+    """Blobs written before header interning carried the batch length inside
+    the pickled header; decode_batch must keep reading them."""
+    keys = np.arange(7, dtype=np.int64)
+    values = np.linspace(0.0, 1.0, 7)
+    ts = np.zeros(7)
+    head = pickle.dumps((0, keys.dtype, values.dtype, ts.dtype, 7))
+    legacy = (
+        len(head).to_bytes(4, "little")
+        + head
+        + keys.tobytes()
+        + values.tobytes()
+        + ts.tobytes()
+    )
+    out = serde.decode_batch(legacy)
+    for orig, dec in zip((keys, values, ts), out):
+        assert dec.dtype == orig.dtype
+        assert dec.tobytes() == orig.tobytes()
+
+
 def test_object_batch_roundtrip_preserves_values():
     batch = make_batch(
         [1, 2, 3], [(1, "x"), {"d": 2}, None], [0.0, 1.0, 2.0]
