@@ -10,7 +10,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_row, drift_loads, synthetic_cluster
+from benchmarks.common import bench_seed, csv_row, drift_loads, synthetic_cluster
 from repro.core import AlbicParams, albic
 from repro.core.baselines import cola_allocate
 
@@ -45,7 +45,13 @@ def run(quick: bool = False) -> list[str]:
     nodes, kgs, ops = (20, 400, 10) if quick else (40, 800, 20)
     for pct in sweep:
         for method in ("albic", "cola"):
-            state = synthetic_cluster(nodes, kgs, ops, one_to_one_pct=pct, seed=4)
+            state = synthetic_cluster(
+                nodes,
+                kgs,
+                ops,
+                one_to_one_pct=pct,
+                seed=bench_seed("albic_vs_cola", "fig10"),
+            )
             t0 = time.perf_counter()
             ld, col, mig = episode(state, method, iters, seed=pct)
             dt = (time.perf_counter() - t0) / iters
@@ -64,7 +70,9 @@ def run(quick: bool = False) -> list[str]:
     ]
     for n, g, o in configs:
         for method in ("albic", "cola"):
-            state = synthetic_cluster(n, g, o, one_to_one_pct=50, seed=5)
+            state = synthetic_cluster(
+                n, g, o, one_to_one_pct=50, seed=bench_seed("albic_vs_cola", "fig11")
+            )
             t0 = time.perf_counter()
             ld, col, mig = episode(state, method, iters, seed=n)
             dt = (time.perf_counter() - t0) / iters

@@ -1,11 +1,46 @@
-"""Shared benchmark scaffolding: the paper's §5.1 synthetic cluster generator
-and small reporting helpers."""
+"""Shared benchmark scaffolding: the paper's §5.1 synthetic cluster generator,
+the root-seed derivation every benchmark workload threads through, and small
+reporting helpers."""
 
 from __future__ import annotations
+
+import os
+import zlib
 
 import numpy as np
 
 from repro.core.stats import ClusterState
+
+#: The single root seed all benchmark randomness derives from.  Override per
+#: run with ``REPRO_BENCH_SEED=<int>`` to reshape every workload coherently —
+#: engine allocations, synthetic clusters, and generated streams all shift
+#: together, so "does the result hold on another seed?" is one environment
+#: variable instead of a dozen scattered literals.  The committed
+#: ``baseline.json`` was measured at the default.
+ROOT_SEED = 0
+
+
+def root_seed() -> int:
+    return int(os.environ.get("REPRO_BENCH_SEED", ROOT_SEED))
+
+
+def bench_seed(*salt) -> int:
+    """A stable per-site seed derived from the root seed and a salt path.
+
+    ``bench_seed("milp_vs_flux_potc", "build")`` names the call site; equal
+    salts always derive the same seed for a given root, and any root change
+    moves every site at once.  Salts hash through crc32, so strings and
+    numbers mix freely and the derivation is stable across processes and
+    platforms (no PYTHONHASHSEED dependence).
+    """
+    parts = [zlib.crc32(str(s).encode()) for s in salt]
+    ss = np.random.SeedSequence([root_seed(), *parts])
+    return int(ss.generate_state(1)[0])
+
+
+def bench_rng(*salt) -> np.random.Generator:
+    """``np.random.default_rng`` over :func:`bench_seed` (same salt rules)."""
+    return np.random.default_rng(bench_seed(*salt))
 
 
 def synthetic_cluster(

@@ -16,10 +16,14 @@ Rows measured best-of-N embed a ``spread=`` entry (best/worst across the
 repeats) in their derived column; the gate report prints it alongside each
 ratio so a noisy row is distinguishable from a real regression at a glance.
 
+Candidate-only rows (present in the new JSON, absent from the baseline) are
+reported explicitly as "new, ungated" rather than silently skipped, so a
+fresh row and a typo'd rename are distinguishable in the gate output.
+
 To update the committed baseline after an intentional perf change::
 
     PYTHONPATH=src python -m benchmarks.run --quick \
-        --only solver_perf,engine_throughput,real_jobs \
+        --only solver_perf,engine_throughput,real_jobs,skew_grid \
         --json benchmarks/baseline.json
 
 The baseline is machine-dependent: refresh it from the same class of runner
@@ -33,7 +37,7 @@ import dataclasses
 import json
 import sys
 
-DEFAULT_MODULES = ("engine_throughput", "solver_perf", "real_jobs")
+DEFAULT_MODULES = ("engine_throughput", "solver_perf", "real_jobs", "skew_grid")
 DEFAULT_THRESHOLD = 1.20  # fail if new time > 1.2 × baseline time
 DEFAULT_MIN_US = 50.0
 
@@ -54,13 +58,17 @@ class Comparison:
         return self.new_us / self.base_us if self.base_us > 0 else float("inf")
 
 
-# Derived-column entries whose key ends with one of these suffixes are
-# per-unit times and gate exactly like a row's us_per_call, under the name
-# ``<row>:<key>``.  Today that is the multiworker row's exchange costs
-# (``xchg_us_per_tick`` / ``xchg_queue_us_per_tick``): the shm transport's
-# win is invisible in wall-clock us_per_call on a small host, so the gate
-# watches the exchange time itself.
-GATED_DERIVED_SUFFIXES = ("_us_per_tick",)
+# Derived-column entries whose key ends with one of these suffixes gate
+# exactly like a row's us_per_call, under the name ``<row>:<key>``.
+# ``_us_per_tick`` entries are per-unit times (the multiworker row's
+# exchange costs: the shm transport's win is invisible in wall-clock
+# us_per_call on a small host, so the gate watches the exchange time
+# itself).  ``imbalance`` / ``migcost`` are the skew grid's quality
+# columns — not times at all, but a >20% regression in either means a
+# balancer got worse at its one job, which is exactly what the gate is
+# for.  Sub-rows bypass the ``--min-us`` noise floor (it is a *time*
+# floor; quality metrics gate on any positive baseline).
+GATED_DERIVED_SUFFIXES = ("_us_per_tick", "imbalance", "migcost")
 
 
 def load_rows(path: str) -> dict[str, float]:
@@ -115,9 +123,36 @@ def compare(
             continue  # renamed/removed rows don't fail the gate
         c = Comparison(name, base_us, new[name])
         gated.append(c)
-        if base_us >= min_us and c.ratio > threshold:
+        # The min-us noise floor applies to plain timing rows only:
+        # ``<row>:<key>`` sub-rows carry per-unit times or quality metrics
+        # whose magnitudes are far below it by construction, so they gate
+        # whenever the baseline value is meaningful (> 0 — a zero baseline
+        # has no ratio).
+        floor_ok = base_us > 0.0 if ":" in name else base_us >= min_us
+        if floor_ok and c.ratio > threshold:
             regressions.append(c)
     return gated, regressions
+
+
+def candidate_only(
+    baseline: dict[str, float],
+    new: dict[str, float],
+    *,
+    modules: tuple[str, ...] = DEFAULT_MODULES,
+) -> list[str]:
+    """Gated-module rows present only in the candidate run.
+
+    These are new measurements with nothing to compare against — they pass
+    the gate by definition, but silently skipping them made a typo'd row
+    rename look identical to a fresh row, so the report calls them out as
+    "new, ungated" until the baseline is refreshed."""
+    return sorted(
+        name
+        for name in new
+        if name not in baseline
+        and name.split("/", 1)[0] in modules
+        and UNGATED_MARKER not in name
+    )
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -153,6 +188,11 @@ def main(argv: list[str] | None = None) -> int:
         print(
             f"{c.name.ljust(width)}  {c.base_us:11.1f}  {c.new_us:9.1f}  {c.ratio:7.2f}  {sp}{flag}"
         )
+    fresh = candidate_only(baseline, new, modules=modules)
+    if fresh:
+        print(f"\n{len(fresh)} candidate-only row(s) — new, ungated:")
+        for name in fresh:
+            print(f"  {name}  (no baseline entry; refresh benchmarks/baseline.json)")
     if regressions:
         print(
             f"\nperf gate FAILED: {len(regressions)} row(s) regressed "

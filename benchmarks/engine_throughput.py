@@ -32,7 +32,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_row, synthetic_cluster
+from benchmarks.common import bench_rng, bench_seed, csv_row, synthetic_cluster
 from repro.core import solve_allocation
 from repro.engine import Engine, ExecutionConfig, make_engine
 from repro.engine.topology import (
@@ -121,7 +121,7 @@ def measure_pipeline(
     Best of ``repeats`` fresh engines — the minimum-time estimator, robust to
     scheduler noise on shared hosts.
     """
-    rng = np.random.default_rng(0)
+    rng = bench_rng("engine_throughput", "measure_pipeline")
     keys = rng.integers(0, 1_000_000, size=batch).astype(np.int64)
     values = rng.random(batch)
     ts = np.zeros(batch)
@@ -129,7 +129,9 @@ def measure_pipeline(
     for _ in range(max(repeats, 1)):
         topo = make_pipeline_job(num_keygroups=num_keygroups, depth=depth)
         # collect_sinks=False: measure the data plane, not sink-list appends.
-        eng = Engine(topo, num_nodes=8, service_rate=1e12, seed=0, collect_sinks=False)
+        eng = Engine(topo, num_nodes=8, service_rate=1e12,
+                seed=bench_seed("engine_throughput", "alloc"),
+                collect_sinks=False)
         # Warm up one tick (store/window allocation) outside the timed region.
         eng.push_source("src", keys, values, ts)
         eng.tick()
@@ -274,7 +276,7 @@ def measure_record_pipeline(
     repeats: int = 3,
 ) -> dict[str, float]:
     """Columnar vs object throughput on the record-payload pipeline."""
-    rng = np.random.default_rng(0)
+    rng = bench_rng("engine_throughput", "measure_record_pipeline")
     keys = rng.integers(0, 1_000_000, size=batch).astype(np.int64)
     values = list(zip(rng.integers(0, 1_000, size=batch).tolist(), rng.random(batch)))
     ts = np.zeros(batch)
@@ -287,7 +289,7 @@ def measure_record_pipeline(
                 topo,
                 num_nodes=8,
                 service_rate=1e12,
-                seed=0,
+                seed=bench_seed("engine_throughput", "alloc"),
                 collect_sinks=False,
                 config=ExecutionConfig(use_schema=use_schema),
             )
@@ -307,7 +309,7 @@ def measure_record_pipeline(
 
 
 def _record_batch(batch: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    rng = np.random.default_rng(0)
+    rng = bench_rng("engine_throughput", "_record_batch")
     keys = rng.integers(0, 1_000_000, size=batch).astype(np.int64)
     values = np.empty(batch, dtype=_REC_SCHEMA.value)
     values["a"] = rng.integers(0, 1_000, size=batch)
@@ -342,7 +344,7 @@ def measure_record_pipeline_jit(
                 topo,
                 num_nodes=8,
                 service_rate=1e12,
-                seed=0,
+                seed=bench_seed("engine_throughput", "alloc"),
                 collect_sinks=False,
                 config=ExecutionConfig.jit() if use_jit else ExecutionConfig.typed(),
             )
@@ -400,7 +402,7 @@ def measure_superstep_jit(
             topo,
             num_nodes=8,
             service_rate=1e12,
-            seed=0,
+            seed=bench_seed("engine_throughput", "alloc"),
             collect_sinks=False,
             config=ExecutionConfig.superstep(),
         )
@@ -436,7 +438,7 @@ def measure_radix_sort(
     """
     from repro.kernels.radix_sort import bucket_argsort
 
-    rng = np.random.default_rng(0)
+    rng = bench_rng("engine_throughput", "measure_radix_sort")
     comp = rng.integers(0, buckets, size=n).astype(np.int16)
     out: dict[str, float] = {}
     for label, fn in (
@@ -495,7 +497,9 @@ def measure_push_source_ingest(
         best = 0.0
         for _ in range(max(repeats, 1)):
             eng = Engine(
-                t, num_nodes=4, service_rate=1e12, seed=0, collect_sinks=False
+                t, num_nodes=4, service_rate=1e12,
+                seed=bench_seed("engine_throughput", "alloc"),
+                collect_sinks=False
             )
             eng.push_source("src", keys, payload, ts)
             eng.tick()  # drain the warm-up push
@@ -532,7 +536,7 @@ def measure_multiworker(
     measurement.  ``w{n}_vs_single`` is the headline: >1 means the extra
     processes beat the serialization they pay for on this host.
     """
-    rng = np.random.default_rng(0)
+    rng = bench_rng("engine_throughput", "measure_multiworker")
     values = np.empty(batch, dtype=_REC_SCHEMA.value)
     values["a"] = rng.integers(0, 1_000, size=batch)
     values["b"] = rng.random(batch)
@@ -552,7 +556,7 @@ def measure_multiworker(
             8,
             config=ExecutionConfig.typed(),
             service_rate=1e12,
-            seed=0,
+            seed=bench_seed("engine_throughput", "alloc"),
             collect_sinks=False,
         )
         eng.push_source("src", *batches[0])  # warm-up: store/window alloc
@@ -576,7 +580,7 @@ def measure_multiworker(
             8,
             config=config,
             service_rate=1e12,
-            seed=0,
+            seed=bench_seed("engine_throughput", "alloc"),
             collect_sinks=False,
         )
         try:
@@ -640,7 +644,9 @@ def measure_milp_assembly(
     *, nodes: int = 60, kgs: int = 1200, ops: int = 30, time_limit: float = 1.0
 ) -> tuple[float, float, str]:
     """Return (assembly seconds, solve seconds, status) at the Fig. 4 scale."""
-    state = synthetic_cluster(nodes, kgs, ops, varies=20.0, seed=1)
+    state = synthetic_cluster(
+        nodes, kgs, ops, varies=20.0, seed=bench_seed("engine_throughput", "milp")
+    )
     t0 = time.perf_counter()
     plan = solve_allocation(state, max_migrations=20, time_limit=time_limit)
     total = time.perf_counter() - t0

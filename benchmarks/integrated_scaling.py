@@ -12,7 +12,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_row, synthetic_cluster
+from benchmarks.common import bench_seed, csv_row, synthetic_cluster
 from repro.core import solve_allocation
 
 BUDGET = 20
@@ -69,7 +69,9 @@ def run(quick: bool = False) -> list[str]:
     rounds = 8 if quick else 14
     marked = 5 if quick else 10
     for n_ol, tag in [(1, "1OL"), (5, "5OL")]:
-        state = synthetic_cluster(nodes, kgs, ops, seed=2)
+        state = synthetic_cluster(
+            nodes, kgs, ops, seed=bench_seed("integrated_scaling", tag)
+        )
         overload(state, n_ol)
         state.kill[-marked:] = True  # mark nodes for removal
         t0 = time.perf_counter()

@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_seed, csv_row
 from repro.core import AdaptationFramework
 from repro.core.baselines import PotcSimulator, flux_rebalance
 from repro.core.migration import execute_plan, plan_from_allocations
@@ -42,7 +42,7 @@ def build(kgs: int, nodes: int, seed: int) -> tuple[Engine, callable]:
 
 
 def run_milp(kgs, nodes, periods, ticks):
-    eng, feeder = build(kgs, nodes, seed=1)
+    eng, feeder = build(kgs, nodes, seed=bench_seed("milp_vs_flux_potc", "build"))
     ctl = Controller(
         eng,
         AdaptationFramework(mode="milp", max_migrations=MAX_MIGR, time_limit=2.0),
@@ -58,7 +58,7 @@ def run_milp(kgs, nodes, periods, ticks):
 
 
 def run_flux(kgs, nodes, periods, ticks):
-    eng, feeder = build(kgs, nodes, seed=1)
+    eng, feeder = build(kgs, nodes, seed=bench_seed("milp_vs_flux_potc", "build"))
     lds, migs = [], []
     for p in range(periods):
         for t in range(ticks):
@@ -77,7 +77,7 @@ def run_flux(kgs, nodes, periods, ticks):
 
 
 def run_potc(kgs, nodes, periods, ticks):
-    eng, feeder = build(kgs, nodes, seed=1)
+    eng, feeder = build(kgs, nodes, seed=bench_seed("milp_vs_flux_potc", "build"))
     sim = None
     lds = []
     for p in range(periods):

@@ -26,7 +26,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_seed, csv_row
 from repro.core import AdaptationFramework, AlbicParams
 from repro.core.migration import execute_plan, plan_from_allocations
 from repro.core.baselines import cola_allocate
@@ -350,7 +350,9 @@ def measure_job_throughput(
     execution paths, not the sources.
     """
     topo_factory, sources = THROUGHPUT_JOBS[job_key]
-    batches = _pregenerate(sources, rate=rate, ticks=ticks, seed=3)
+    batches = _pregenerate(
+        sources, rate=rate, ticks=ticks, seed=bench_seed("real_jobs", "stream")
+    )
     obj_batches = _object_batches(batches)
     legacy_factory = LEGACY_JOBS.get(job_key)
     variants = {
@@ -399,7 +401,9 @@ def measure_job_jit(
     separately, never inside the throughput number.
     """
     topo_factory, sources = THROUGHPUT_JOBS[job_key]
-    batches = _pregenerate(sources, rate=rate, ticks=ticks, seed=3)
+    batches = _pregenerate(
+        sources, rate=rate, ticks=ticks, seed=bench_seed("real_jobs", "stream")
+    )
     out: dict[str, float] = {}
     for label, use_jit in (("jit", True), ("seg", False)):
         best = 0.0
@@ -449,7 +453,9 @@ def measure_migration_roundtrip(
     on the typed path, pickled boxed tuples on the object path.  Returns
     best-of-``repeats`` seconds and the average blob bytes per path.
     """
-    air = airline_stream(StreamSpec(rate=float(n_tuples), seed=3))
+    air = airline_stream(
+        StreamSpec(rate=float(n_tuples), seed=bench_seed("real_jobs", "stream"))
+    )
     warm = [next(air) for _ in range(warm_ticks)]
     backlog = next(air)
     out: dict[str, float] = {}
@@ -526,7 +532,7 @@ def build(job_key: str, kgs: int, nodes: int, seed: int):
 
 
 def run_albic(job_key, kgs, nodes, periods, ticks):
-    eng, feeder = build(job_key, kgs, nodes, seed=2)
+    eng, feeder = build(job_key, kgs, nodes, seed=bench_seed("real_jobs", "build"))
     ctl = Controller(
         eng,
         AdaptationFramework(
@@ -549,7 +555,7 @@ def run_albic(job_key, kgs, nodes, periods, ticks):
 
 
 def run_cola(job_key, kgs, nodes, periods, ticks):
-    eng, feeder = build(job_key, kgs, nodes, seed=2)
+    eng, feeder = build(job_key, kgs, nodes, seed=bench_seed("real_jobs", "build"))
     load_index_base = None
     metrics = {}
     for p in range(periods):

@@ -23,6 +23,7 @@ MODULES = [
     "unrestricted",         # Figs 8–9
     "albic_vs_cola",        # Figs 10–11
     "real_jobs",            # Figs 12–14
+    "skew_grid",            # skew scenarios × mitigation strategies
     "roofline_bench",       # dry-run roofline table (this build)
 ]
 

@@ -1,0 +1,254 @@
+"""Skew mitigation grid: ALBIC/MILP vs COLA/Flux/PoTC across skew scenarios.
+
+Every row runs one scenario from :mod:`repro.workloads` (zipf, flash_crowd,
+diurnal, churn — the shapes on which the paper's comparative claims actually
+differentiate) against one mitigation strategy on a mergeable aggregation
+job, and reports:
+
+``imbalance``      steady-state relative node imbalance, (max − mean) / mean
+                   over alive nodes — gated (a regression here means a
+                   balancer got worse at its one job)
+``migcost``        mean migration cost per adaptation period — gated (cheap
+                   adaptation is half the paper's point)
+``imbalance_max``  worst single period (the surge transient), reported only
+``latency_p99``    p99 of the engine's tuple latency proxy, reported only
+``hot_residency``  mean hottest-key-group share of period arrivals
+                   (EngineMetrics.max_kg_share), reported only
+
+The ``+split`` variants run the framework-wired hot-key splitting path
+(``ExecutionConfig.split`` + ``HotKeySplitter``): the flash-crowd scenario is
+the one migration alone cannot fix — its hot key group exceeds a node's fair
+share, so every no-split balancer leaves one node overloaded while the split
+variants fan the hot key group across replicas.
+
+All randomness threads through :func:`benchmarks.common.bench_seed`.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_seed, csv_row
+from repro.core import AdaptationFramework, AlbicParams
+from repro.core.baselines import PotcSimulator, cola_allocate, flux_rebalance
+from repro.core.migration import execute_plan, plan_from_allocations
+from repro.core.splitting import HotKeySplitter
+from repro.engine import Engine, ExecutionConfig
+from repro.engine.topology import OperatorSpec, Topology
+from repro.workloads import GRID_SCENARIOS, make_scenario, scenario_batches
+
+MAX_MIGR = 13
+SPLIT_DEGREE = 4
+BALANCERS = ("albic", "milp", "cola", "flux", "potc")
+SPLIT_BALANCERS = ("albic", "milp")  # the framework-wired methods
+
+
+def _merge_counts(a: dict, b: dict) -> dict:
+    out = dict(a)
+    for k, v in b.items():
+        out[k] = out.get(k, 0) + v
+    return out
+
+
+def _agg(state, keys, values, ts):
+    # Delta-emitting count per entity: commutative state, so the operator is
+    # split-mergeable (each replica counts its share; merge adds them).
+    for k in keys.tolist():
+        state[k] = state.get(k, 0) + 1
+    return state, (keys, np.ones(len(keys), dtype=np.int64), ts)
+
+
+def _total_sink(state, keys, values, ts):
+    for k, v in zip(keys.tolist(), values.tolist()):
+        state[k] = state.get(k, 0) + v
+    return state, None
+
+
+def skew_job(kgs_per_op: int) -> Topology:
+    """events → agg (count deltas) → total: both stateful stages declare
+    ``merge_state``, so the splitter may fan either layer's hot key group.
+    The source carries a token cost — its key groups cannot split (no state
+    to merge), so keeping them light keeps the *balanceable* load dominant."""
+    t = Topology()
+    t.add_operator(
+        OperatorSpec(
+            "events", None, num_keygroups=kgs_per_op, is_source=True,
+            cost_per_tuple=0.05,
+        )
+    )
+    t.add_operator(
+        OperatorSpec(
+            "agg", _agg, num_keygroups=kgs_per_op, merge_state=_merge_counts
+        )
+    )
+    t.add_operator(
+        OperatorSpec(
+            "total", _total_sink, num_keygroups=kgs_per_op, is_sink=True,
+            cost_per_tuple=0.5, merge_state=_merge_counts,
+        )
+    )
+    t.connect("events", "agg")
+    t.connect("agg", "total")
+    return t
+
+
+def _imbalance(loads: np.ndarray) -> float:
+    mean = float(loads.mean())
+    if mean <= 0.0:
+        return 0.0
+    return (float(loads.max()) - mean) / mean
+
+
+def episode(
+    scenario: str,
+    balancer: str,
+    *,
+    split: bool,
+    nodes: int,
+    kgs: int,
+    periods: int,
+    ticks: int,
+    rate: float,
+    key_space: int,
+) -> dict[str, float]:
+    """One (scenario, balancer, ±split) run → the row's derived metrics."""
+    spec = make_scenario(
+        scenario,
+        rate=rate,
+        key_space=key_space,
+        seed=bench_seed("skew_grid", scenario),
+    )
+    batches = iter(scenario_batches(spec, periods * ticks))
+    config = (
+        ExecutionConfig.split(SPLIT_DEGREE) if split else ExecutionConfig.typed()
+    )
+    eng = Engine(
+        skew_job(kgs),
+        nodes,
+        service_rate=nodes * 110.0,
+        seed=bench_seed("skew_grid", "alloc"),
+        collect_sinks=False,
+        config=config,
+    )
+    fw = None
+    if balancer in ("albic", "milp"):
+        fw = AdaptationFramework(
+            mode=balancer,
+            max_migrations=MAX_MIGR,
+            time_limit=2.0,
+            albic_params=AlbicParams(time_limit=1.0),
+            splitter=HotKeySplitter() if split else None,
+        )
+    sim = None
+    imb, migcost, residency = [], [], []
+    for p in range(periods):
+        for _ in range(ticks):
+            keys, values, ts = next(batches)
+            if len(keys):
+                eng.push_source("events", keys, values, ts)
+            eng.tick()
+        snap = eng.end_period()
+        residency.append(eng.metrics.max_kg_share)
+        cost = 0.0
+        if balancer == "potc":
+            # Simulated baseline (no engine-side migration): greedy
+            # two-choice routing over the measured loads, merge overhead
+            # included — the milp_vs_flux_potc idiom.
+            if sim is None:
+                sim = PotcSimulator(snap)
+            loads, _ = sim.step(snap.kg_load)
+            imb.append(_imbalance(loads[snap.alive]))
+            migcost.append(0.0)
+            continue
+        if p >= 1:
+            if fw is not None:
+                result = fw.adapt(
+                    snap,
+                    split_families=eng.split_families() if split else None,
+                    split_eligible=eng.split_eligible() if split else None,
+                )
+                execute_plan(result.migration_plan, eng)
+                cost = result.migration_plan.total_cost
+                if result.split is not None:
+                    for kg in result.split.unsplit:
+                        eng.unsplit_keygroup(kg)
+                    for kg in result.split.split:
+                        if eng.split_slots_free < SPLIT_DEGREE - 1:
+                            break
+                        eng.split_keygroup(kg)
+            elif balancer == "flux":
+                plan = flux_rebalance(snap, max_migrations=MAX_MIGR)
+                mp = plan_from_allocations(snap, plan.alloc)
+                execute_plan(mp, eng)
+                cost = mp.total_cost
+            elif balancer == "cola":
+                plan = cola_allocate(
+                    snap, seed=bench_seed("skew_grid", "cola", p)
+                )
+                mp = plan_from_allocations(snap, plan.alloc)
+                execute_plan(mp, eng)
+                cost = mp.total_cost
+        # Next-period balance of this period's measured load under the
+        # post-adaptation placement (standard leading evaluation).
+        loads = snap.node_loads(eng.router.table)
+        imb.append(_imbalance(loads[eng.alive]))
+        migcost.append(cost)
+    lat = eng.latency.summary()
+    steady = slice(max(periods - 3, 1), None)
+    return {
+        "imbalance": float(np.mean(imb[steady])),
+        "imbalance_max": float(np.max(imb[1:])),
+        "migcost": float(np.mean(migcost[1:])),
+        "latency_p99": float(lat["p99"]),
+        "hot_residency": float(np.mean(residency[1:])),
+    }
+
+
+def run(quick: bool = False) -> list[str]:
+    nodes, kgs = (8, 16) if quick else (12, 32)
+    periods, ticks = (6, 8) if quick else (10, 12)
+    rate, key_space = (192.0, 512) if quick else (384.0, 2048)
+    rows = []
+    for scenario in GRID_SCENARIOS:
+        for balancer in BALANCERS:
+            variants = [False]
+            if balancer in SPLIT_BALANCERS:
+                variants.append(True)
+            for split in variants:
+                t0 = time.perf_counter()
+                m = episode(
+                    scenario,
+                    balancer,
+                    split=split,
+                    nodes=nodes,
+                    kgs=kgs,
+                    periods=periods,
+                    ticks=ticks,
+                    rate=rate,
+                    key_space=key_space,
+                )
+                dt = (time.perf_counter() - t0) / periods
+                name = balancer + ("+split" if split else "")
+                rows.append(
+                    csv_row(
+                        f"skew_grid/{scenario}/{name}",
+                        dt * 1e6,
+                        f"imbalance={m['imbalance']:.3f};"
+                        f"migcost={m['migcost']:.1f};"
+                        f"imbalance_max={m['imbalance_max']:.3f};"
+                        f"latency_p99={m['latency_p99']:.1f};"
+                        f"hot_residency={m['hot_residency']:.3f}",
+                    )
+                )
+    return rows
+
+
+def main() -> None:
+    for row in run(quick=True):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ import time
 
 
 
-from benchmarks.common import csv_row, synthetic_cluster
+from benchmarks.common import bench_seed, csv_row, synthetic_cluster
 from repro.core import solve_allocation
 from repro.core.baselines import flux_rebalance
 
@@ -25,7 +25,9 @@ def run(quick: bool = False) -> list[str]:
     time_limits = [2.0] if quick else [1.0, 4.0]
     for name, nodes, kgs, ops in configs:
         for varies in ([20.0] if quick else [10.0, 20.0]):
-            state = synthetic_cluster(nodes, kgs, ops, varies=varies, seed=1)
+            state = synthetic_cluster(
+                nodes, kgs, ops, varies=varies, seed=bench_seed("solver_perf", name)
+            )
             base_ld = state.load_distance()
             for budget in budgets:
                 flux = flux_rebalance(state, max_migrations=budget)

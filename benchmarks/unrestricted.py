@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_seed, csv_row
 from benchmarks.milp_vs_flux_potc import build
 from repro.core import AdaptationFramework
 from repro.engine import Controller, ControllerConfig
@@ -18,7 +18,11 @@ def run(quick: bool = False) -> list[str]:
     periods, ticks = (4, 8) if quick else (7, 12)
     rows = []
     for budget in budgets:
-        eng, feeder = build(50 if quick else 100, 10 if quick else 20, seed=3)
+        eng, feeder = build(
+            50 if quick else 100,
+            10 if quick else 20,
+            seed=bench_seed("unrestricted", "build"),
+        )
         ctl = Controller(
             eng,
             AdaptationFramework(

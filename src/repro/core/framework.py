@@ -28,6 +28,7 @@ from repro.core.albic import AlbicParams, albic
 from repro.core.migration import MigrationPlan, plan_from_allocations
 from repro.core.milp import AllocationPlan, solve_allocation
 from repro.core.scaling import NullScaler, Scaler, ScalingDecision, apply_scaling
+from repro.core.splitting import HotKeySplitter, SplitDecision
 from repro.core.stats import ClusterState
 
 Allocator = Callable[[ClusterState], AllocationPlan]
@@ -40,6 +41,9 @@ class AdaptationResult:
     migration_plan: MigrationPlan
     scaling: ScalingDecision
     terminated: list[int]
+    # Advisory hot-key split/unsplit picks (None when no splitter is
+    # configured); the controller applies them after the migrations run.
+    split: Optional[SplitDecision] = None
 
 
 @dataclasses.dataclass
@@ -53,6 +57,10 @@ class AdaptationFramework:
 
     scaler: Scaler = dataclasses.field(default_factory=NullScaler)
     mode: str = "albic"
+    # Optional hot-key splitting policy: when set, adapt() also emits an
+    # advisory SplitDecision from the same snapshot (and the same
+    # kg_tuple_rate leading signal) the allocation plan was computed from.
+    splitter: Optional[HotKeySplitter] = None
     max_migr_cost: Optional[float] = None
     max_migrations: Optional[int] = None
     albic_params: AlbicParams = dataclasses.field(default_factory=AlbicParams)
@@ -84,8 +92,19 @@ class AdaptationFramework:
             prev_rate=self._prev_rate,
         )
 
-    def adapt(self, state: ClusterState) -> AdaptationResult:
-        """One adaptation period.  Returns the updated snapshot + artifacts."""
+    def adapt(
+        self,
+        state: ClusterState,
+        *,
+        split_families: Optional[dict] = None,
+        split_eligible: Optional[np.ndarray] = None,
+    ) -> AdaptationResult:
+        """One adaptation period.  Returns the updated snapshot + artifacts.
+
+        ``split_families`` / ``split_eligible`` carry the engine's live
+        split map and mergeability mask to the splitter policy (ignored
+        when no :attr:`splitter` is configured).
+        """
         state = state.copy()
 
         # Lines 1–3: terminate drained nodes marked in previous periods.
@@ -116,6 +135,16 @@ class AdaptationFramework:
         # Line 8: apply(plan) — emit the migration plan and commit the alloc.
         migration_plan = plan_from_allocations(state, plan.alloc, alpha=self.alpha)
         state.alloc = plan.alloc.copy()
+        # Hot-key splitting rides the same snapshot: the splitter projects
+        # with its own copy of the rate signal, so a surge that grows the
+        # migration plan also surfaces the key group that migration cannot
+        # fix.  The decision is advisory — the controller applies it against
+        # the engine after the migrations execute.
+        split = None
+        if self.splitter is not None:
+            split = self.splitter.decide(
+                state, split_families or {}, eligible=split_eligible
+            )
         # Remember this period's arrival rates for next period's projection.
         self._prev_rate = (
             None if state.kg_tuple_rate is None else state.kg_tuple_rate.copy()
@@ -126,4 +155,5 @@ class AdaptationFramework:
             migration_plan=migration_plan,
             scaling=decision,
             terminated=terminated,
+            split=split,
         )

@@ -84,7 +84,7 @@ from repro.core.stats import ClusterState, PairRates
 from repro.engine import serde, shmx
 from repro.engine.backpressure import CreditController
 from repro.engine.config import ExecutionConfig
-from repro.engine.executor import Engine, EngineMetrics
+from repro.engine.executor import Engine, EngineMetrics, hot_key_summary
 from repro.engine.router import Router, concat_batches
 from repro.engine.state import KeyedStore
 from repro.engine.topology import Topology, make_batch
@@ -1000,6 +1000,12 @@ class ClusterEngine:
             kg_tuple_rate=arrivals / ticks,
         )
         state.alive = self.alive.copy()
+        # Hot-key observability over the cross-worker fold: the gauge sees
+        # the same totals a single-process run of the same traffic would,
+        # because `arrivals` is the sum of every worker's partial counts.
+        self.metrics.hot_keygroups, self.metrics.max_kg_share = hot_key_summary(
+            arrivals
+        )
         self._ticks_this_period = 0
         return state
 

@@ -84,6 +84,18 @@ class ExecutionConfig:
     #: queue path (correct, just slower).  ``0`` disables shm lanes
     #: entirely (pure pickled-queue exchange, PR 7's transport).
     shm_lane_bytes: int = SHM_LANE_BYTES
+    #: Hot-key splitting (partial-key-grouping style): ``split_degree >= 2``
+    #: enables ``Engine.split_keygroup`` — a hot key group's tuples fan
+    #: round-robin across ``split_degree`` replica key groups (the parent
+    #: plus ``split_degree - 1`` slots reserved from ``split_reserve``),
+    #: each with its own partial σ, node placement and statistics, merged
+    #: downstream by the operator's declared ``merge_state`` contract (see
+    #: docs/workloads.md).  0 = disabled (no reserve slots are allocated,
+    #: the data plane is byte-identical to the unsplit configuration).
+    split_degree: int = 0
+    #: Replica key-group slots reserved when ``split_degree > 0`` (bounds
+    #: how many concurrent splits fit: each split consumes degree−1 slots).
+    split_reserve: int = 16
 
     def __post_init__(self) -> None:
         if self.queue_impl not in ("soa", "deque"):
@@ -113,6 +125,25 @@ class ExecutionConfig:
                 "(use_fn_jit/use_superstep are single-process; see "
                 "docs/execution_tiers.md)"
             )
+        if self.split_degree:
+            if self.split_degree < 2:
+                raise ValueError(
+                    "split_degree must be 0 (disabled) or >= 2 (a split fans "
+                    "a key group across at least two replicas)"
+                )
+            if self.split_reserve < self.split_degree - 1:
+                raise ValueError(
+                    "split_reserve must fit at least one split "
+                    "(split_degree - 1 replica slots)"
+                )
+            if self.num_workers > 1 or self.use_fn_jit:
+                raise ValueError(
+                    "hot-key splitting runs on the single-process numpy "
+                    "tiers only (replica key groups live outside the jit "
+                    "tier's per-operator column space; see docs/workloads.md)"
+                )
+        if self.split_reserve < 0:
+            raise ValueError("split_reserve must be >= 0")
 
     # -- presets --------------------------------------------------------------
     @classmethod
@@ -156,6 +187,13 @@ class ExecutionConfig:
         """
         return cls(num_workers=int(n), shm_lane_bytes=int(shm))
 
+    @classmethod
+    def split(cls, degree: int = 2, *, reserve: int = 16) -> "ExecutionConfig":
+        """``.typed()`` plus hot-key splitting enabled at ``degree`` replicas
+        per split (``reserve`` bounds concurrent splits — see
+        :attr:`split_reserve`)."""
+        return cls(split_degree=int(degree), split_reserve=int(reserve))
+
     # -- plumbing -------------------------------------------------------------
     @classmethod
     def from_legacy_kwargs(cls, legacy: dict) -> "ExecutionConfig":
@@ -183,4 +221,6 @@ class ExecutionConfig:
             parts.append("superstep")
         if self.num_workers > 1:
             parts.append("workers")
+        if self.split_degree:
+            parts.append(f"split{self.split_degree}")
         return "+".join(parts)

@@ -41,6 +41,9 @@ class PeriodMetrics:
     scaling_added: int
     scaling_marked: int
     solver_seconds: float
+    # Hot-key splitting activity this period (0 without a splitter policy).
+    num_splits: int = 0
+    num_unsplits: int = 0
 
 
 class Controller:
@@ -74,8 +77,18 @@ class Controller:
 
         result: Optional[AdaptationResult] = None
         pause_s = 0.0
+        num_splits = num_unsplits = 0
         if adapt and self._period >= self.config.warmup_periods:
-            result = self.framework.adapt(snapshot)
+            splitting = self.framework.splitter is not None
+            result = self.framework.adapt(
+                snapshot,
+                split_families=(
+                    self.engine.split_families() if splitting else None
+                ),
+                split_eligible=(
+                    self.engine.split_eligible() if splitting else None
+                ),
+            )
             # Elastic scaling against the engine.
             if result.scaling.add_nodes:
                 self.engine.add_nodes(result.scaling.add_nodes)
@@ -85,6 +98,19 @@ class Controller:
             # Direct state migration over the engine (StateMover protocol).
             report = execute_plan(result.migration_plan, self.engine)
             pause_s = report.pause_seconds
+            # Apply the advisory split decision after the migrations: the
+            # plan ran synchronously, so no family member is in flight, and
+            # new replicas become ordinary key groups in the next snapshot.
+            if result.split is not None:
+                degree = self.engine.config.split_degree
+                for kg in result.split.unsplit:
+                    self.engine.unsplit_keygroup(kg)
+                    num_unsplits += 1
+                for kg in result.split.split:
+                    if self.engine.split_slots_free < degree - 1:
+                        break  # reserve exhausted; retry next period
+                    self.engine.split_keygroup(kg)
+                    num_splits += 1
 
         alloc = self.engine.router.table
         # Post-adaptation view: after scaling, `snapshot` predates the new
@@ -117,6 +143,8 @@ class Controller:
             scaling_added=result.scaling.add_nodes if result else 0,
             scaling_marked=len(result.scaling.mark_for_removal) if result else 0,
             solver_seconds=result.plan.solve_seconds if result else 0.0,
+            num_splits=num_splits,
+            num_unsplits=num_unsplits,
         )
         self.engine.latency.reset()
         self.history.append(metrics)

@@ -165,9 +165,38 @@ class EngineMetrics:
     # ``collect_sinks=True`` (unbounded growth otherwise — benchmarks disable
     # it so they measure the data plane, not list appends).
     sink_outputs: list = dataclasses.field(default_factory=list)
+    # Hot-key observability, refreshed each end_period(): the top-k key
+    # groups by per-period arrival count as (keygroup, tuples) pairs, and
+    # the hottest key group's share of the period's arrivals.  The
+    # multi-worker coordinator folds per-worker arrival partial sums before
+    # computing these, so single- and multi-worker runs report the same
+    # gauge for the same traffic.
+    hot_keygroups: list = dataclasses.field(default_factory=list)
+    max_kg_share: float = 0.0
 
     def throughput(self) -> float:
         return self.processed_tuples / max(self.ticks, 1)
+
+
+#: Size of the EngineMetrics.hot_keygroups top-k gauge.
+HOT_TOPK = 8
+
+
+def hot_key_summary(
+    arrivals: np.ndarray, topk: int = HOT_TOPK
+) -> tuple[list[tuple[int, float]], float]:
+    """Top-k (keygroup, tuples) by arrival count, plus the hottest share.
+
+    Deterministic under ties (stable sort on descending counts — the lowest
+    key-group id wins), zero-arrival entries dropped.  Shared by
+    ``Engine.end_period`` and the cluster coordinator's fold.
+    """
+    total = float(arrivals.sum())
+    if total <= 0.0:
+        return [], 0.0
+    order = np.argsort(-arrivals, kind="stable")[:topk]
+    top = [(int(i), float(arrivals[i])) for i in order if arrivals[i] > 0]
+    return top, float(arrivals[order[0]]) / total
 
 
 def _as_batch(outputs) -> Optional[Batch]:
@@ -300,12 +329,25 @@ class Engine:
         self.ser_cost = ser_cost
         self.seed = seed
         g = topology.num_keygroups
+        # Hot-key splitting reserves extra key-group slots: replicas live in
+        # the extended id space [g, g + reserve) and behave as ordinary key
+        # groups everywhere downstream of routing (queues, statistics,
+        # allocation, migration) once a split assigns them to an operator.
+        reserve = config.split_reserve if config.split_degree else 0
+        self._g_base = g
+        g_eff = g + reserve
         rng = np.random.default_rng(seed)
         if initial_alloc is None:
             initial_alloc = rng.integers(0, num_nodes, size=g)
-        self.store = KeyedStore(g)
-        self.router = Router(g, initial_alloc)
-        self.window = SPLWindow(g)
+        initial_alloc = np.asarray(initial_alloc, dtype=np.int64)
+        if reserve and len(initial_alloc) == g:
+            # Reserved slots park on node 0 until a split places them.
+            initial_alloc = np.concatenate(
+                [initial_alloc, np.zeros(reserve, dtype=np.int64)]
+            )
+        self.store = KeyedStore(g_eff)
+        self.router = Router(g_eff, initial_alloc)
+        self.window = SPLWindow(g_eff)
         self.metrics = EngineMetrics()
         self.latency = LatencyTracker()
         self.backpressure = CreditController(num_nodes, high_wm=50 * service_rate)
@@ -323,6 +365,12 @@ class Engine:
         # routed batch per downstream operator: op -> [(batch, src_kg, src_node)].
         self._out_pending: dict[int, list[tuple[Batch, int, int]]] = {}
         self._kg_op = topology.kg_operator()
+        if reserve:
+            # Free replica slots carry operator 0 (zero load, zero pair
+            # rates — inert to the allocators) until a split assigns them.
+            self._kg_op = np.concatenate(
+                [self._kg_op, np.zeros(reserve, dtype=np.int64)]
+            )
         self._cost_per_tuple = [o.cost_per_tuple for o in topology.operators]
         self._op_fn = [o.fn for o in topology.operators]
         # use_fn_seg=False strips the segment protocol: every run takes the
@@ -403,6 +451,16 @@ class Engine:
         self._backlog: dict[int, list[Batch]] = {}
         self._op_nkg = [o.num_keygroups for o in topology.operators]
         self._op_base = [topology.kg_base(i) for i in range(topology.num_operators)]
+        # Hot-key splitting bookkeeping: parent → replica slots, slot →
+        # parent, per-parent round-robin cursors, the free reserve, and the
+        # per-operator extended routing tables (rebuilt on split/unsplit;
+        # empty dicts keep the unsplit hot path untouched).
+        self._split_map: dict[int, list[int]] = {}
+        self._split_parent: dict[int, int] = {}
+        self._split_rr: dict[int, int] = {}
+        self._free_slots: list[int] = list(range(g, g_eff))
+        self._split_ops: dict[int, dict[int, np.ndarray]] = {}
+        self._op_ext: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
         self._op_terminal = [
             o.is_sink or not topology.downstream()[i]
             for i, o in enumerate(topology.operators)
@@ -515,10 +573,21 @@ class Engine:
                 )
             self.metrics.typed_batches += 1
         kgs, hist = self._partition(op, keys, values)
+        split = self._split_ops.get(op) if self._split_ops else None
         window = self.window
-        nkg = self._op_nkg[op]
         base = self._op_base[op]
-        local = kgs - base
+        if split is None:
+            nkg = self._op_nkg[op]
+            local = kgs - base
+            glob_of = None
+        else:
+            # Hot-key splitting: fan split parents' tuples round-robin over
+            # their replica families, then run the same composite sort over
+            # the operator's extended (base + replica) local id space.
+            kgs = self._fan_out(kgs, split)
+            hist = None
+            local_of, glob_of, nkg = self._op_ext[op]
+            local = local_of[kgs]
         tup_nodes = self.router.nodes_of(kgs)
         if src_kgs is not None:
             window.record_send_pairs(src_kgs, kgs)
@@ -548,7 +617,7 @@ class Engine:
         ends = np.cumsum(counts)
         starts = ends - counts
         run_nodes = nz // nkg
-        uniq = nz % nkg + base
+        uniq = nz % nkg + base if glob_of is None else glob_of[nz % nkg]
         if hist is None:
             np.add.at(self._arrivals, uniq, counts)
         else:
@@ -1274,6 +1343,9 @@ class Engine:
             kg_tuple_rate=self.window.kg_arrivals / ticks,
         )
         state.alive = self.alive.copy()
+        self.metrics.hot_keygroups, self.metrics.max_kg_share = hot_key_summary(
+            self.window.kg_arrivals
+        )
         self.window.reset()
         self._ticks_this_period = 0
         return state
@@ -1358,6 +1430,210 @@ class Engine:
         if dst is None:
             dst = self.router.node_of(envelope.keygroup)
         self.install(envelope.keygroup, dst, envelope.blob)
+
+    # ----------------------------------------------------- hot-key splitting
+    def _fan_out(
+        self, kgs: np.ndarray, split: dict[int, np.ndarray]
+    ) -> np.ndarray:
+        """Remap split parents' tuples round-robin over their families.
+
+        Round-robin with a cursor persisted across batches — not a key
+        sub-hash — because the point of partial-key-grouping is that even a
+        *single* hot key spreads across the replicas; per-key affinity would
+        pin it to one.  The operator's ``merge_state`` contract (commutative
+        monoid state, delta emission) is exactly the license for the
+        reordering this introduces.
+        """
+        if not kgs.flags.writeable:
+            kgs = kgs.copy()
+        for parent, family in split.items():
+            idx = np.flatnonzero(kgs == parent)
+            hits = len(idx)
+            if not hits:
+                continue
+            cur = self._split_rr[parent]
+            d = len(family)
+            kgs[idx] = family[(cur + np.arange(hits)) % d]
+            self._split_rr[parent] = (cur + hits) % d
+        return kgs
+
+    def split_keygroup(
+        self,
+        keygroup: int,
+        degree: Optional[int] = None,
+        nodes: Optional[list[int]] = None,
+    ) -> list[int]:
+        """Split a hot key group across replicas (partial key grouping).
+
+        Assigns ``degree - 1`` reserved replica key groups to the parent's
+        operator and fans the parent's future tuples round-robin across the
+        family.  Each replica is an ordinary key group downstream of
+        routing — its own partial σ, node placement, queue runs, SPL
+        statistics rows (``kg_tuple_rate`` included) — so the allocators
+        and the migration machinery balance replicas individually without
+        knowing about splitting.  ``nodes`` places the replicas explicitly
+        (default: round-robin over the nodes after the parent's).  Returns
+        the assigned replica slot ids.
+
+        Requires ``ExecutionConfig(split_degree=...)`` and an operator that
+        declares :attr:`~repro.engine.topology.OperatorSpec.merge_state`;
+        splitting a non-mergeable operator would silently change its
+        semantics, so it is an error instead.
+        """
+        if not self.config.split_degree:
+            raise ValueError(
+                "hot-key splitting is disabled: construct the engine with "
+                "ExecutionConfig(split_degree=...) — e.g. "
+                "ExecutionConfig.split(2)"
+            )
+        kg = int(keygroup)
+        if kg in self._split_parent:
+            raise ValueError(
+                f"key group {kg} is a replica slot; split its parent "
+                f"{self._split_parent[kg]} instead"
+            )
+        if not 0 <= kg < self._g_base:
+            raise ValueError(f"key group {kg} out of range [0, {self._g_base})")
+        if kg in self._split_map:
+            raise ValueError(f"key group {kg} is already split")
+        if self.router.is_in_flight(kg):
+            raise ValueError(
+                f"key group {kg} has a migration in flight; split it after "
+                "the period's migration plan completes"
+            )
+        op = int(self._kg_op[kg])
+        spec = self.topology.operators[op]
+        if spec.fn is None:
+            raise ValueError(f"cannot split source operator {spec.name!r}")
+        if spec.merge_state is None:
+            raise ValueError(
+                f"operator {spec.name!r} is not split-mergeable: splitting "
+                "fans one key group's tuples across replicas with "
+                "independent partial states, which is only sound for "
+                "commutative/associative delta-emitting operators — declare "
+                "OperatorSpec.merge_state to opt in (see docs/workloads.md)"
+            )
+        d = int(degree) if degree is not None else self.config.split_degree
+        if d < 2:
+            raise ValueError("split degree must be >= 2")
+        if len(self._free_slots) < d - 1:
+            raise ValueError(
+                f"split reserve exhausted: need {d - 1} replica slots, "
+                f"{len(self._free_slots)} free — raise "
+                "ExecutionConfig.split_reserve or unsplit a family"
+            )
+        slots = [self._free_slots.pop(0) for _ in range(d - 1)]
+        home = self.router.node_of(kg)
+        if nodes is None:
+            nodes = [(home + 1 + j) % self.num_nodes for j in range(d - 1)]
+        self._kg_op[slots] = op
+        # Direct table writes, not Router.redirect: the slots carried no
+        # traffic yet, so there is nothing in flight to buffer.
+        for slot, node in zip(slots, nodes):
+            self.router.table[slot] = int(node)
+        self.router.version += 1
+        self._split_map[kg] = slots
+        for slot in slots:
+            self._split_parent[slot] = kg
+        self._split_rr[kg] = 0
+        self._rebuild_split_tables()
+        return slots
+
+    def unsplit_keygroup(self, keygroup: int) -> None:
+        """Fold a split family back into its parent.
+
+        Replica partial states merge into the parent's σ through the
+        operator's ``merge_state``; queued replica runs re-enqueue under the
+        parent at its node; the slots return to the free reserve (operator
+        0, node 0 — the inert parked configuration).
+        """
+        kg = int(keygroup)
+        slots = self._split_map.get(kg)
+        if slots is None:
+            raise ValueError(f"key group {kg} is not split")
+        if self.router.is_in_flight(kg) or any(
+            self.router.is_in_flight(s) for s in slots
+        ):
+            raise ValueError(
+                f"key group {kg}'s family has a migration in flight; "
+                "unsplit after it completes"
+            )
+        del self._split_map[kg]
+        op = int(self._kg_op[kg])
+        merge = self.topology.operators[op].merge_state
+        home = self.router.node_of(kg)
+        cost_per_tuple = self._cost_per_tuple[op]
+        for slot in slots:
+            node = self.router.node_of(slot)
+            batches, _removed = self._queues[node].extract_keygroup(slot)
+            backlog = self._backlog.pop(slot, [])
+            if backlog or batches:
+                batch = concat_batches(backlog + batches)
+                self._queues[home].push_batch(
+                    op, kg, batch, cost_per_tuple * len(batch[0])
+                )
+            self.store.put(kg, merge(self.store.get(kg), self.store.get(slot)))
+            self.store.put(slot, {})
+            self._kg_op[slot] = 0
+            self.router.table[slot] = 0
+            del self._split_parent[slot]
+        self.router.version += 1
+        del self._split_rr[kg]
+        self._free_slots.extend(slots)
+        self._free_slots.sort()
+        self._rebuild_split_tables()
+
+    def split_families(self) -> dict[int, list[int]]:
+        """Active splits: parent key group → replica slot ids (copies)."""
+        return {k: list(v) for k, v in self._split_map.items()}
+
+    @property
+    def split_slots_free(self) -> int:
+        """Unassigned replica slots remaining in the reserve."""
+        return len(self._free_slots)
+
+    def split_eligible(self) -> np.ndarray:
+        """Boolean mask over key groups whose operator can split (declares
+        ``merge_state`` and is not a source) — the splitter policy's input,
+        so it never proposes a split the engine would reject.  Free replica
+        slots are ineligible (they park on operator 0, a source)."""
+        op_ok = np.array(
+            [
+                o.merge_state is not None and o.fn is not None
+                for o in self.topology.operators
+            ],
+            dtype=bool,
+        )
+        mask = op_ok[self._kg_op]
+        if self._split_parent:
+            mask[sorted(self._split_parent)] = False  # replicas split via parent
+        return mask
+
+    def _rebuild_split_tables(self) -> None:
+        """Recompute the per-operator fan-out dicts and extended routing
+        tables (global id ↔ extended local index) after a split/unsplit."""
+        by_op: dict[int, dict[int, np.ndarray]] = {}
+        slots_of_op: dict[int, list[int]] = {}
+        for parent in sorted(self._split_map):
+            op = int(self._kg_op[parent])
+            family = [parent] + self._split_map[parent]
+            by_op.setdefault(op, {})[parent] = np.asarray(family, dtype=np.int64)
+            slots_of_op.setdefault(op, []).extend(self._split_map[parent])
+        op_ext: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
+        g_eff = len(self._kg_op)
+        for op, slots in slots_of_op.items():
+            base, nkg = self._op_base[op], self._op_nkg[op]
+            glob_of = np.concatenate(
+                [
+                    np.arange(base, base + nkg, dtype=np.int64),
+                    np.asarray(sorted(slots), dtype=np.int64),
+                ]
+            )
+            local_of = np.full(g_eff, -1, dtype=np.int64)
+            local_of[glob_of] = np.arange(len(glob_of))
+            op_ext[op] = (local_of, glob_of, len(glob_of))
+        self._op_ext = op_ext
+        self._split_ops = by_op
 
     # --------------------------------------------------------------- elastic
     def add_nodes(self, count: int, capacity: float = 1.0) -> None:

@@ -335,6 +335,21 @@ class OperatorSpec:
         runtime additionally checks the structural conditions (linear
         chain, identity key_fn, integer keys, scalar-only state) and falls
         back to the per-operator jit tick when any fail.
+      merge_state: optional — the author's declaration that the operator is
+        **split-mergeable**: its per-key-group state transition is a
+        commutative monoid over disjoint tuple subsets (processing a key
+        group's tuples as several partial states, then folding them with
+        ``merge_state(a, b) -> merged``, yields the same aggregate values
+        the unsplit run would have produced), and its emitted tuples are
+        *deltas* a downstream operator re-aggregates (so the merged
+        downstream totals are identical no matter how the upstream tuples
+        were partitioned).  Declaring it is what makes the operator
+        eligible for hot-key splitting (``Engine.split_keygroup`` — a hot
+        key group fans its tuples across replica key groups, partial-key-
+        grouping style); the engine calls it at unsplit time to fold the
+        replicas' σ back into the parent.  Exact-arithmetic payloads
+        (ints) stay bit-exact under splitting; float running sums are
+        reordered by construction — see docs/workloads.md.
       jit_key_map: optional host-evaluable key transform: the author's claim
         that ``fn_jit`` emits keys equal to ``jit_key_map(input_keys)``
         element-wise, in input order (pass ``lambda keys: keys`` for
@@ -364,6 +379,7 @@ class OperatorSpec:
     state_schema: Optional[StateSchema] = None
     jit_fusible: bool = False  # superstep-fusible fn_jit (see above)
     jit_key_map: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    merge_state: Optional[Callable[[dict, dict], dict]] = None  # split-mergeable
 
 
 class Topology:
@@ -569,6 +585,11 @@ class Topology:
             if o.state_schema is not None and o.fn_jit is None:
                 raise ValueError(
                     f"{o.name!r} declares a StateSchema without fn_jit"
+                )
+            if o.merge_state is not None and o.fn is None:
+                raise ValueError(
+                    f"source {o.name!r} cannot declare merge_state — sources "
+                    "hold no per-key-group state to split"
                 )
         # Schema mismatch across an edge is a construction-time error, not a
         # runtime surprise.  A declared consumer accepts either (a) producers

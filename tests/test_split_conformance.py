@@ -1,0 +1,333 @@
+"""Hot-key splitting conformance: the split path is pinned bit-exact against
+the unsplit oracle on commutative/associative (delta-emitting) operators,
+non-mergeable operators refuse to split with a clear error, and the
+splitter/controller wiring splits exactly when migration alone cannot
+balance."""
+
+import numpy as np
+import pytest
+
+from repro.core.framework import AdaptationFramework
+from repro.core.splitting import HotKeySplitter, SplitDecision
+from repro.engine import (
+    Controller,
+    ControllerConfig,
+    Engine,
+    ExecutionConfig,
+    make_engine,
+)
+from repro.engine.executor import hot_key_summary
+from repro.engine.topology import OperatorSpec, Topology
+from repro.workloads import make_scenario, scenario_batches
+
+KGS = 8
+NODES = 4
+
+
+def _merge_counts(a, b):
+    out = dict(a)
+    for k, v in b.items():
+        out[k] = out.get(k, 0) + v
+    return out
+
+
+def _count_op(state, keys, values, ts):
+    for k in keys.tolist():
+        state[k] = state.get(k, 0) + 1
+    return state, list(zip(keys.tolist(), [1] * len(keys), ts.tolist()))
+
+
+def _sum_sink(state, keys, values, ts):
+    for k, v in zip(keys.tolist(), values.tolist()):
+        state[k] = state.get(k, 0) + v
+    return state, None
+
+
+def _nonmergeable_op(state, keys, values, ts):
+    # Order-sensitive: appends the arrival sequence — NOT a commutative
+    # monoid, so splitting it would change semantics.
+    state.setdefault("seq", []).extend(keys.tolist())
+    return state, None
+
+
+def make_topo(kgs=KGS, mergeable=True):
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, num_keygroups=kgs, is_source=True))
+    t.add_operator(
+        OperatorSpec(
+            "count",
+            _count_op,
+            num_keygroups=kgs,
+            merge_state=_merge_counts if mergeable else None,
+        )
+    )
+    t.add_operator(OperatorSpec("sink", _sum_sink, num_keygroups=kgs, is_sink=True))
+    t.connect("src", "count")
+    t.connect("count", "sink")
+    return t
+
+
+def _drive(eng, ticks=16, batch=300, hot_key=3, hot_frac=0.5, seed=7):
+    """Skewed feed: ``hot_frac`` of traffic on one key, rest uniform."""
+    rng = np.random.default_rng(seed)
+    for t in range(ticks):
+        hot = rng.random(batch) < hot_frac
+        keys = np.where(hot, hot_key, rng.integers(0, 1000, size=batch))
+        keys = keys.astype(np.int64)
+        eng.push_source("src", keys, rng.random(batch), np.full(batch, float(t)))
+        eng.tick()
+    for _ in range(6):  # drain stragglers
+        eng.tick()
+
+
+def _layer_totals(eng, op_idx):
+    """Operator state folded across its key groups (replicas included)."""
+    base = eng.topology.kg_base(op_idx)
+    nkg = eng.topology.operators[op_idx].num_keygroups
+    kgs = list(range(base, base + nkg))
+    if hasattr(eng, "split_families"):
+        for parent, slots in eng.split_families().items():
+            if parent in kgs:
+                kgs.extend(slots)
+    out = {}
+    for kg in kgs:
+        for k, v in eng.store.get(kg).items():
+            out[k] = out.get(k, 0) + v
+    return out
+
+
+def _hot_kg(eng, op_idx=1, key=3):
+    return int(
+        eng.topology.keygroups_of(op_idx, np.array([key], dtype=np.int64), None)[0]
+    )
+
+
+# ---------------------------------------------------------------- bit-exact
+def test_split_pinned_bit_exact_against_unsplit_oracle():
+    """Split + downstream merge must reproduce the oracle's integer totals
+    exactly — emission interleaving may differ (that is the license the
+    merge_state contract grants), the folded results may not."""
+    oracle = Engine(make_topo(), NODES, service_rate=1e9, seed=0)
+    _drive(oracle)
+
+    split_eng = Engine(
+        make_topo(), NODES, service_rate=1e9, seed=0, config=ExecutionConfig.split(4)
+    )
+    split_eng.split_keygroup(_hot_kg(split_eng))
+    _drive(split_eng)
+
+    assert _layer_totals(split_eng, 2) == _layer_totals(oracle, 2)  # sink
+    assert _layer_totals(split_eng, 1) == _layer_totals(oracle, 1)  # count σ
+
+
+def test_unsplit_merges_family_state_back_bit_exact():
+    oracle = Engine(make_topo(), NODES, service_rate=1e9, seed=0)
+    _drive(oracle)
+
+    split_eng = Engine(
+        make_topo(), NODES, service_rate=1e9, seed=0, config=ExecutionConfig.split(3)
+    )
+    kg = _hot_kg(split_eng)
+    slots = split_eng.split_keygroup(kg)
+    _drive(split_eng)
+    # every replica actually took a share before the fold
+    assert all(sum(split_eng.store.get(s).values()) > 0 for s in [kg] + slots)
+
+    split_eng.unsplit_keygroup(kg)
+    assert split_eng.split_families() == {}
+    assert split_eng.store.get(kg) == oracle.store.get(kg)
+    for s in slots:
+        assert split_eng.store.get(s) == {}
+    # slots returned to the reserve and reusable
+    assert split_eng.split_slots_free == split_eng.config.split_reserve
+    assert split_eng.split_keygroup(kg) == slots
+
+
+def test_round_robin_spreads_a_single_hot_key():
+    """The PKG property: even ONE hot key spreads evenly across replicas
+    (a key sub-hash would pin it to a single replica)."""
+    eng = Engine(
+        make_topo(), NODES, service_rate=1e9, seed=0, config=ExecutionConfig.split(4)
+    )
+    kg = _hot_kg(eng)
+    slots = eng.split_keygroup(kg)
+    _drive(eng, hot_frac=1.0)  # the whole stream is one key
+    counts = [sum(eng.store.get(s).values()) for s in [kg] + slots]
+    assert max(counts) - min(counts) <= 1
+
+
+def test_split_survives_replica_migration():
+    """Replicas are ordinary key groups to the migration machinery."""
+    eng = Engine(
+        make_topo(), NODES, service_rate=1e9, seed=0, config=ExecutionConfig.split(3)
+    )
+    kg = _hot_kg(eng)
+    slots = eng.split_keygroup(kg)
+    _drive(eng, ticks=8)
+    replica = slots[0]
+    dst = (eng.router.node_of(replica) + 1) % NODES
+    eng.redirect(replica, dst)
+    eng.install(replica, dst, eng.serialize(replica))
+    assert eng.router.node_of(replica) == dst
+    _drive(eng, ticks=8, seed=11)
+
+    oracle = Engine(make_topo(), NODES, service_rate=1e9, seed=0)
+    _drive(oracle, ticks=8)
+    _drive(oracle, ticks=8, seed=11)
+    assert _layer_totals(eng, 1) == _layer_totals(oracle, 1)
+    assert _layer_totals(eng, 2) == _layer_totals(oracle, 2)
+
+
+# ------------------------------------------------------------------- errors
+def test_non_mergeable_operator_refuses_to_split():
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, num_keygroups=4, is_source=True))
+    t.add_operator(OperatorSpec("seq", _nonmergeable_op, num_keygroups=4))
+    t.connect("src", "seq")
+    eng = Engine(t, 2, service_rate=1e9, seed=0, config=ExecutionConfig.split(2))
+    with pytest.raises(ValueError, match="not split-mergeable"):
+        eng.split_keygroup(t.kg_base(1))
+
+
+def test_split_requires_config_and_valid_target():
+    eng = Engine(make_topo(), NODES, service_rate=1e9, seed=0)
+    with pytest.raises(ValueError, match="disabled"):
+        eng.split_keygroup(KGS)
+    cfg = ExecutionConfig.split(3)
+    eng = Engine(make_topo(), NODES, service_rate=1e9, seed=0, config=cfg)
+    with pytest.raises(ValueError, match="source"):
+        eng.split_keygroup(0)  # kg 0 belongs to the source operator
+    kg = _hot_kg(eng)
+    eng.split_keygroup(kg)
+    with pytest.raises(ValueError, match="already split"):
+        eng.split_keygroup(kg)
+    with pytest.raises(ValueError, match="replica"):
+        eng.split_keygroup(eng.split_families()[kg][0])
+    with pytest.raises(ValueError, match="not split"):
+        eng.unsplit_keygroup(kg + 1 if kg + 1 < 2 * KGS else kg - 1)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="split_degree"):
+        ExecutionConfig(split_degree=1)
+    with pytest.raises(ValueError, match="split_reserve"):
+        ExecutionConfig(split_degree=8, split_reserve=3)
+    with pytest.raises(ValueError, match="single-process"):
+        ExecutionConfig(split_degree=2, num_workers=2)
+    with pytest.raises(ValueError, match="single-process"):
+        ExecutionConfig(split_degree=2, use_fn_jit=True)
+    assert "split4" in ExecutionConfig.split(4).name
+    # merge_state on a source is rejected at topology validation
+    t = Topology()
+    t.add_operator(
+        OperatorSpec(
+            "src", None, num_keygroups=2, is_source=True, merge_state=_merge_counts
+        )
+    )
+    with pytest.raises(ValueError, match="source"):
+        t.validate()
+
+
+# -------------------------------------------------------- policy + controller
+def test_splitter_policy_hysteresis_and_eligibility():
+    from repro.core.stats import ClusterState
+
+    kg_op = np.array([0, 0, 1, 1])
+    load = np.array([1.0, 1.0, 1.0, 1.0])
+    alloc = np.array([0, 1, 0, 1])
+    state = ClusterState.create(
+        2, kg_op, load, alloc,
+        kg_state_bytes=np.ones(4),
+        out_rates=np.zeros((4, 4)),
+        downstream={0: [1], 1: []},
+        kg_tuple_rate=np.array([100.0, 1.0, 1.0, 1.0]),
+    )
+    pol = HotKeySplitter(hot_frac=0.5, cool_frac=0.25)
+    d = pol.decide(state, {})
+    assert d.split == (0,)
+    # eligibility mask vetoes the pick
+    d = pol.decide(state, {}, eligible=np.array([False, True, True, True]))
+    assert d.split == ()
+    # an active family is not re-split, and folds back only when cooled
+    d = pol.decide(state, {0: [3]})
+    assert d == SplitDecision()
+    cold = state.copy()
+    cold.kg_tuple_rate = np.array([0.1, 50.0, 50.0, 0.1])
+    assert pol.decide(cold, {0: [3]}).unsplit == (0,)
+
+
+def test_controller_splits_on_flash_crowd_and_improves_balance():
+    """End to end: scenario stream → SPL statistics → splitter decision →
+    engine split, all through the controller's period loop."""
+    spec = make_scenario("flash_crowd", rate=128.0, key_space=256, seed=1)
+    batches = iter(scenario_batches(spec, 120))
+
+    def feeder(engine, tick):
+        try:
+            keys, values, ts = next(batches)
+        except StopIteration:
+            return
+        if len(keys):
+            engine.push_source("src", keys, values["entity"], ts)
+
+    eng = Engine(
+        make_topo(16),
+        NODES,
+        service_rate=1e9,
+        seed=0,
+        config=ExecutionConfig.split(4),
+    )
+    fw = AdaptationFramework(
+        mode="albic", max_migrations=8, splitter=HotKeySplitter()
+    )
+    ctl = Controller(eng, fw, ControllerConfig(ticks_per_period=10), feeder=feeder)
+    history = [ctl.period() for _ in range(8)]
+    assert sum(m.num_splits for m in history) >= 1
+    assert eng.split_families()  # at least one family still active
+    # the period metrics surface the splitting activity
+    assert any(m.num_splits > 0 for m in history)
+
+
+# ------------------------------------------------------- hot-key observability
+def test_hot_key_summary_deterministic_and_normalized():
+    top, share = hot_key_summary(np.array([0.0, 5.0, 5.0, 10.0]), topk=2)
+    assert top == [(3, 10.0), (1, 5.0)]  # stable tie-break: lowest kg wins
+    assert share == 0.5
+    assert hot_key_summary(np.zeros(4)) == ([], 0.0)
+
+
+def test_engine_metrics_expose_hot_keygroups():
+    eng = Engine(make_topo(), NODES, service_rate=1e9, seed=0)
+    _drive(eng, ticks=6)
+    eng.end_period()
+    assert eng.metrics.hot_keygroups
+    assert 0.0 < eng.metrics.max_kg_share <= 1.0
+    # the hot key's group leads its operator's layer
+    hot = _hot_kg(eng)
+    assert hot in [kg for kg, _ in eng.metrics.hot_keygroups]
+
+
+def test_cluster_fold_matches_single_process_gauge():
+    """The coordinator's folded gauge equals the single-process engine's for
+    identical traffic (partial sums fold before the top-k)."""
+    from conformance import make_pipeline_topo
+
+    def run(config):
+        eng = make_engine(
+            make_pipeline_topo(8), 4, config=config, service_rate=1e9, seed=0
+        )
+        rng = np.random.default_rng(5)
+        for t in range(6):
+            keys = np.where(
+                rng.random(200) < 0.4, 7, rng.integers(0, 4000, size=200)
+            ).astype(np.int64)
+            eng.push_source("src", keys, rng.random(200), np.zeros(200))
+            eng.tick()
+        eng.end_period()
+        hot, share = eng.metrics.hot_keygroups, eng.metrics.max_kg_share
+        eng.finalize()
+        return hot, share
+
+    single = run(ExecutionConfig.typed())
+    multi = run(ExecutionConfig.workers(2))
+    assert single == multi
