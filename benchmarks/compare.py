@@ -23,7 +23,7 @@ fresh row and a typo'd rename are distinguishable in the gate output.
 To update the committed baseline after an intentional perf change::
 
     PYTHONPATH=src python -m benchmarks.run --quick \
-        --only solver_perf,engine_throughput,real_jobs,skew_grid \
+        --only solver_perf,engine_throughput,real_jobs,skew_grid,fault_recovery \
         --json benchmarks/baseline.json
 
 The baseline is machine-dependent: refresh it from the same class of runner
@@ -37,7 +37,13 @@ import dataclasses
 import json
 import sys
 
-DEFAULT_MODULES = ("engine_throughput", "solver_perf", "real_jobs", "skew_grid")
+DEFAULT_MODULES = (
+    "engine_throughput",
+    "solver_perf",
+    "real_jobs",
+    "skew_grid",
+    "fault_recovery",
+)
 DEFAULT_THRESHOLD = 1.20  # fail if new time > 1.2 × baseline time
 DEFAULT_MIN_US = 50.0
 
@@ -68,7 +74,10 @@ class Comparison:
 # balancer got worse at its one job, which is exactly what the gate is
 # for.  Sub-rows bypass the ``--min-us`` noise floor (it is a *time*
 # floor; quality metrics gate on any positive baseline).
-GATED_DERIVED_SUFFIXES = ("_us_per_tick", "imbalance", "migcost")
+# ``mttr_ms`` is the fault_recovery rows' mean-time-to-repair (best-of-N,
+# death detection → cluster serving): a regression there means the
+# self-healing path itself got slower.
+GATED_DERIVED_SUFFIXES = ("_us_per_tick", "imbalance", "migcost", "mttr_ms")
 
 
 def load_rows(path: str) -> dict[str, float]:

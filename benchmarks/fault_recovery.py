@@ -1,0 +1,202 @@
+"""Fault recovery: MTTR and tuple loss/duplication under deterministic faults.
+
+Each scenario runs the self-healing cluster runtime (2 workers, shm lanes,
+``CheckpointPolicy(every=2)`` + supervision) over a fixed batch schedule with
+a seeded :class:`~repro.engine.faults.FaultPlan`, then replays the identical
+schedule fault-free as the reference:
+
+``kill_mid_stream``   SIGKILL one worker mid-period, after the first
+                      checkpoint committed — the canonical unattended
+                      recovery: detect death, respawn, rewind to the
+                      checkpoint, replay buffered admissions.
+``hang_escalation``   wedge one worker mid-command instead; the supervisor
+                      must first *decide* the worker is wedged (the
+                      liveness deadline, reported as ``deadline_ms``) and
+                      SIGKILL it — MTTR then measures the same heal path
+                      from that detection onward.
+
+Derived metrics per row:
+
+``mttr_ms``       best-of-N mean-time-to-repair (death detection → cluster
+                  serving again, from ``RecoveryReport.mttr_s``) — gated:
+                  a regression means recovery itself got slower
+``tuples_lost``   reference sink tuples missing from the healed run (the
+                  loss bound: tuples queued in flight at the crash — the
+                  checkpoint does not capture them, replay only covers
+                  admissions after the cut)
+``tuples_dup``    healed sink tuples beyond the reference multiset (sinks
+                  emitted between the checkpoint cut and the crash are
+                  re-emitted by replay: recovery is at-least-once)
+``recoveries``    supervised recoveries completed (sanity: exactly 1)
+
+Loss/duplication are multiset differences, so reordering from post-recovery
+scheduling never counts as loss.  ``us_per_call`` is wall time per driven
+tick of the healed run; ``spread=`` is worst/best MTTR across repeats.
+"""
+
+from __future__ import annotations
+
+import collections
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_rng, csv_row
+from repro.engine import ExecutionConfig, make_engine
+from repro.engine.config import CheckpointPolicy, SupervisionPolicy
+from repro.engine.faults import FaultEvent, FaultPlan
+from repro.engine.topology import OperatorSpec, Topology
+
+KGS = 8
+NODES = 4
+
+#: hb_interval_s * hb_misses for the hang scenario: long enough that a
+#: loaded CI host never trips it spuriously, short enough that the row's
+#: MTTR stays readable (it is dominated by this constant by design).
+_HANG_DEADLINE_S = 0.5
+
+
+def _mid(state, keys, values, ts):
+    state["n"] = state.get("n", 0) + len(keys)
+    return state, (keys + 17, values, ts)
+
+
+def _sink(state, keys, values, ts):
+    state["n"] = state.get("n", 0) + len(keys)
+    return state, (keys, values * 2.0, ts)
+
+
+def make_topo() -> Topology:
+    t = Topology()
+    t.add_operator(OperatorSpec("src", None, num_keygroups=KGS, is_source=True))
+    t.add_operator(OperatorSpec("mid", _mid, num_keygroups=KGS))
+    t.add_operator(OperatorSpec("sink", _sink, num_keygroups=KGS, is_sink=True))
+    t.connect("src", "mid")
+    t.connect("mid", "sink")
+    return t
+
+
+def _batches(ticks: int, batch: int) -> list[tuple]:
+    rng = bench_rng("fault_recovery", "stream")
+    return [
+        (
+            rng.integers(0, 5_000, size=batch).astype(np.int64),
+            rng.random(batch),
+            np.full(batch, float(t)),
+        )
+        for t in range(ticks)
+    ]
+
+
+def _episode(
+    faults: FaultPlan | None,
+    batches: list[tuple],
+    *,
+    periods: int,
+    tpp: int,
+    supervision: SupervisionPolicy,
+) -> dict:
+    """One full drive (periods × tpp push+tick, drain each boundary) →
+    sink multiset, recovery reports, wall seconds."""
+    with tempfile.TemporaryDirectory(prefix="fault_recovery_ck_") as ckdir:
+        eng = make_engine(
+            make_topo(),
+            NODES,
+            config=ExecutionConfig.workers(
+                2,
+                shm=1 << 20,
+                checkpoint=CheckpointPolicy(directory=ckdir, every=2),
+                supervision=supervision,
+            ),
+            service_rate=1e9,
+            seed=0,
+            faults=faults,
+        )
+        it = iter(batches)
+        t0 = time.perf_counter()
+        try:
+            for _ in range(periods):
+                for _ in range(tpp):
+                    keys, values, ts = next(it)
+                    eng.push_source("src", keys, values, ts)
+                    eng.tick()
+                eng.end_period()
+            while eng.worst_queue_cost() > 0.0:
+                eng.tick()
+            eng.finalize()
+            wall = time.perf_counter() - t0
+        finally:
+            eng.close()
+        return {
+            "sinks": collections.Counter(eng.metrics.sink_outputs),
+            "recoveries": list(eng.recoveries),
+            "wall_s": wall,
+        }
+
+
+def _scenario_row(
+    name: str,
+    plan: FaultPlan,
+    *,
+    quick: bool,
+    supervision: SupervisionPolicy,
+    extra: str = "",
+) -> str:
+    periods = 4
+    tpp = 5 if quick else 8
+    batch = 256 if quick else 1024
+    repeats = 2 if quick else 3
+    batches = _batches(periods * tpp, batch)
+
+    ref = _episode(
+        None, batches, periods=periods, tpp=tpp, supervision=supervision
+    )
+    assert not ref["recoveries"]
+
+    mttrs: list[float] = []
+    healed = None
+    for _ in range(repeats):
+        run = _episode(
+            plan, batches, periods=periods, tpp=tpp, supervision=supervision
+        )
+        if healed is None:
+            healed = run
+        mttrs.extend(r.mttr_s for r in run["recoveries"] if not r.gave_up)
+    lost = sum((ref["sinks"] - healed["sinks"]).values())
+    dup = sum((healed["sinks"] - ref["sinks"]).values())
+    best = min(mttrs) if mttrs else 0.0
+    spread = (max(mttrs) / best) if best > 0 else 1.0
+    us_per_tick = healed["wall_s"] / (periods * tpp) * 1e6
+    derived = (
+        f"mttr_ms={best * 1e3:.2f};tuples_lost={lost};tuples_dup={dup};"
+        f"recoveries={len(healed['recoveries'])};spread={spread:.2f}"
+    )
+    if extra:
+        derived += f";{extra}"
+    return csv_row(f"fault_recovery/{name}", us_per_tick, derived)
+
+
+def run(quick: bool = False):
+    tpp = 5 if quick else 8
+    kill_tick = 2 * tpp + max(tpp // 2, 1)  # mid period 3: checkpoint behind it
+    yield _scenario_row(
+        "kill_mid_stream",
+        FaultPlan.of([FaultEvent("kill", 1, at_tick=kill_tick)]),
+        quick=quick,
+        supervision=SupervisionPolicy(),
+    )
+    yield _scenario_row(
+        "hang_escalation",
+        FaultPlan.of(
+            [FaultEvent("hang", 1, at_tick=kill_tick, seconds=30.0)]
+        ),
+        quick=quick,
+        supervision=SupervisionPolicy(hb_interval_s=0.1, hb_misses=5),
+        extra=f"deadline_ms={_HANG_DEADLINE_S * 1e3:.0f}",
+    )
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

@@ -24,6 +24,7 @@ MODULES = [
     "albic_vs_cola",        # Figs 10–11
     "real_jobs",            # Figs 12–14
     "skew_grid",            # skew scenarios × mitigation strategies
+    "fault_recovery",       # MTTR + tuple loss/duplication under faults
     "roofline_bench",       # dry-run roofline table (this build)
 ]
 

@@ -103,6 +103,19 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._pending: Optional[threading.Thread] = None
+        self._prune_stages()
+
+    def _prune_stages(self) -> None:
+        """Remove stage directories a killed writer left behind.
+
+        A crash between staging and the ``os.rename`` commit leaves a
+        ``step_*.tmp`` directory — possibly with a complete manifest inside.
+        It was never committed, so it is garbage: prune it on construction
+        (create the manager before starting new saves).
+        """
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:010d}")
@@ -110,10 +123,16 @@ class CheckpointManager:
     def steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.directory):
-            if name.startswith("step_") and os.path.exists(
-                os.path.join(self.directory, name, MANIFEST)
+            # Committed checkpoints only: a stage dir ("step_*.tmp") can hold
+            # a manifest too (it is written last *inside* the stage), but an
+            # unrenamed stage was never committed — skip non-numeric suffixes.
+            tail = name[len("step_") :]
+            if (
+                name.startswith("step_")
+                and tail.isdigit()
+                and os.path.exists(os.path.join(self.directory, name, MANIFEST))
             ):
-                out.append(int(name.split("_")[1]))
+                out.append(int(tail))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:

@@ -72,6 +72,7 @@ import multiprocessing
 import os
 import pickle
 import queue as _queue_mod
+import signal
 import uuid
 from multiprocessing import connection as mp_connection
 import time
@@ -85,6 +86,7 @@ from repro.engine import serde, shmx
 from repro.engine.backpressure import CreditController
 from repro.engine.config import ExecutionConfig
 from repro.engine.executor import Engine, EngineMetrics, hot_key_summary
+from repro.engine.faults import FaultPlan
 from repro.engine.router import Router, concat_batches
 from repro.engine.state import KeyedStore
 from repro.engine.topology import Topology, make_batch
@@ -114,6 +116,12 @@ _EXCHANGE_STAT_FIELDS = (
     "shm_bytes_out",
     "shm_bytes_in",
 )
+
+#: Minimum seconds between worker heartbeats while the command queue is
+#: busy.  An idle worker (empty command queue) always heartbeats after its
+#: last command, so a quiescent worker's counters are exact and liveness
+#: tracking never sees a silent-but-done worker as outstanding.
+_HB_MIN_INTERVAL_S = 0.02
 
 
 def contiguous_node_worker(num_nodes: int, num_workers: int) -> np.ndarray:
@@ -228,7 +236,11 @@ def _worker_main(wid, spec):
     dead_events = spec["dead_events"]
     num_workers = spec["num_workers"]
     timeout = spec["timeout"]
-    dead: set[int] = set()
+    # A replacement worker forks into a cluster with history: peers already
+    # dead, nodes already failed (the respawn path fills these in).
+    dead: set[int] = set(spec.get("dead_peers", ()))
+    for node in spec.get("start_dead_nodes", ()):
+        eng.fail_node(int(node))
     # Lane codecs over the fork-inherited rings: senders[peer] writes my
     # (wid → peer) ring, receivers[peer] reads the (peer → wid) ring.
     senders = [
@@ -246,6 +258,45 @@ def _worker_main(wid, spec):
     # the shm ring and the queue fallback).
     stash: dict[int, dict[int, tuple]] = {}
     sink_cursor = 0
+    cmds_done = 0
+    last_hb = [0.0]
+
+    def maybe_hb():
+        """Heartbeat over the report queue: liveness + the worker's current
+        cumulative counters (the coordinator folds a dead worker's *last*
+        heartbeat exactly once, so counters survive a respawn).
+
+        Throttled while the command queue is busy; always emitted once the
+        queue drains, so an idle worker's last heartbeat is exact.
+        """
+        now = time.monotonic()
+        try:
+            busy = not cmd_q.empty()
+        except (NotImplementedError, OSError):  # pragma: no cover
+            busy = False
+        if busy and now - last_hb[0] < _HB_MIN_INTERVAL_S:
+            return
+        last_hb[0] = now
+        xstats = dict(xchg)
+        xstats["shm_bytes_out"] = sum(
+            s.bytes_copied for s in senders if s is not None
+        )
+        xstats["shm_bytes_in"] = sum(
+            r.bytes_copied for r in receivers if r is not None
+        )
+        rep_q.put(
+            (
+                "hb",
+                wid,
+                cmds_done,
+                {
+                    "metrics": {
+                        f: getattr(eng.metrics, f) for f in _METRIC_SUM_FIELDS
+                    },
+                    "exchange": xstats,
+                },
+            )
+        )
 
     def drain_lanes(sender):
         """Move every delivered (sender → me) message into the stash."""
@@ -275,7 +326,9 @@ def _worker_main(wid, spec):
 
     def recv_exchange(t, sender):
         per = stash.setdefault(sender, {})
-        deadline = time.monotonic() + timeout
+        now = time.monotonic()
+        deadline = now + timeout
+        next_wait_hb = now + _HB_MIN_INTERVAL_S
         while t not in per:
             drain_lanes(sender)
             if t in per:
@@ -291,7 +344,17 @@ def _worker_main(wid, spec):
                 # are lost (fail_node semantics) — drain with nothing.
                 dead.add(sender)
                 return None
-            if time.monotonic() > deadline:
+            now = time.monotonic()
+            if now >= next_wait_hb:
+                # Blocked on a peer is waiting, not wedged: advertise
+                # liveness so the supervisor's escalation targets the
+                # silent peer, never the worker stuck waiting on it.
+                # Deliberately NOT a full heartbeat — counters only ride
+                # command-boundary heartbeats, so a mid-tick death never
+                # folds a partially-executed tick into the lost totals.
+                rep_q.put(("hb_wait", wid))
+                next_wait_hb = now + _HB_MIN_INTERVAL_S
+            if now > deadline:
                 raise RuntimeError(
                     f"worker {wid}: exchange wait for peer {sender} "
                     f"tick {t} timed out"
@@ -444,11 +507,120 @@ def _worker_main(wid, spec):
                     "exchange": dict(xchg),
                 }
                 rep_q.put(("ack", wid, "gather", payload))
+            elif op == "export_all":
+                # Checkpoint export: σ + *parked* backlog per key group,
+                # never popping the backlog (unlike serialize — checkpoints
+                # must not mutate the engine).
+                blobs = {
+                    int(kg): serde.encode_migration(
+                        eng.store.serialize(int(kg)),
+                        list(eng._backlog.get(int(kg), [])),
+                    )
+                    for kg in cmd[1]
+                }
+                rep_q.put(("ack", wid, "export_all", blobs))
+            elif op == "window_peek":
+                win = eng.window
+                pairs = win.pair_counts()
+                payload = {
+                    "usage": {r: u.copy() for r, u in win.kg_usage.items()},
+                    "arrivals": win.kg_arrivals.copy(),
+                    "pairs": (
+                        pairs.src.copy(),
+                        pairs.dst.copy(),
+                        pairs.rate.copy(),
+                    ),
+                    "samples": int(win.samples),
+                    "ticks": eng._ticks_this_period,
+                    "state_bytes": eng.store.state_bytes(refresh=True),
+                }
+                rep_q.put(("ack", wid, "window_peek", payload))
+            elif op == "restore":
+                # Global rewind to a checkpoint: adopt the table, drop every
+                # transient, wipe σ (install_bulk follows with the
+                # checkpointed envelopes for this worker's key groups).
+                _, table = cmd
+                for q in eng._queues:
+                    q.clear()
+                eng._backlog.clear()
+                eng._out_pending.clear()
+                eng.router.reset(table)
+                for kg in range(len(eng.router.table)):
+                    eng.store.put(kg, {})
+                eng.window.reset()
+                eng._ticks_this_period = 0
+                stash.clear()
+                rep_q.put(("ack", wid, "restore", None))
+            elif op == "install_bulk":
+                for kg in sorted(cmd[1]):
+                    eng.install(
+                        int(kg), int(eng.router.table[kg]), cmd[1][kg]
+                    )
+                rep_q.put(("ack", wid, "install_bulk", None))
+            elif op == "peer_up":
+                # A respawned peer: fresh exchange lanes (attach the
+                # replacement segments by name — they were created after
+                # our fork), cleared stash, nodes back alive.  Byte
+                # counters carry over so gather/heartbeat totals stay
+                # cumulative across the peer's incarnations.
+                _, peer, nodes, in_ring, out_ring = cmd
+                dead.discard(peer)
+                stash.pop(peer, None)
+                while True:  # drop the dead incarnation's stale fallbacks
+                    try:
+                        inboxes[wid][peer].get_nowait()
+                    except _queue_mod.Empty:
+                        break
+                old_tx, old_rx = senders[peer], receivers[peer]
+                senders[peer] = (
+                    shmx.LaneSender(shmx.ShmRing.open(out_ring))
+                    if out_ring
+                    else None
+                )
+                receivers[peer] = (
+                    shmx.LaneReceiver(shmx.ShmRing.open(in_ring))
+                    if in_ring
+                    else None
+                )
+                if old_tx is not None:
+                    if senders[peer] is not None:
+                        senders[peer].bytes_copied += old_tx.bytes_copied
+                    old_tx.ring.close()
+                if old_rx is not None:
+                    if receivers[peer] is not None:
+                        receivers[peer].bytes_copied += old_rx.bytes_copied
+                    old_rx.ring.close()
+                for node in nodes:
+                    eng.alive[node] = True
+                rep_q.put(("ack", wid, "peer_up", None))
+            elif op == "fault":
+                # Injected wedge: hang (optionally SIGTERM-deaf — the
+                # shutdown-escalation worst case) or a bounded delay.  No
+                # ack — from outside this is indistinguishable from a
+                # worker stuck mid-command, which is the point.
+                _, kind, seconds, ignore_term = cmd
+                if kind == "hang":
+                    if ignore_term:
+                        signal.signal(signal.SIGTERM, signal.SIG_IGN)
+                    end = time.monotonic() + seconds
+                    while time.monotonic() < end:
+                        time.sleep(0.01)
+                elif kind == "delay":
+                    time.sleep(seconds)
             elif op == "stop":
+                # Drop this process's lane mappings explicitly: rings opened
+                # after a peer respawn are reachable only from these locals,
+                # and GC'ing a ShmRing tears down its SharedMemory before the
+                # numpy/memoryview exports — close() releases the views first.
+                for lane in (*senders, *receivers):
+                    if lane is not None:
+                        lane.ring.close()
                 rep_q.put(("ack", wid, "stop", None))
                 break
             else:  # pragma: no cover - protocol error
                 raise RuntimeError(f"worker {wid}: unknown command {op!r}")
+            cmds_done += 1
+            maybe_hb()
     except BaseException:  # pragma: no cover - surfaced coordinator-side
         rep_q.put(("error", wid, traceback.format_exc()))
         raise
@@ -477,6 +649,10 @@ class WorkerPool:
     channel.
     """
 
+    #: Seconds to wait for a worker to exit after SIGTERM/SIGKILL before
+    #: escalating / declaring it leaked (tests shrink this).
+    _GRACE_S = 5.0
+
     def __init__(
         self,
         num_workers: int,
@@ -486,8 +662,13 @@ class WorkerPool:
         shm_lane_bytes: int = 0,
     ):
         ctx = multiprocessing.get_context("fork")
+        self._ctx = ctx
         self.num_workers = num_workers
         self.timeout = timeout
+        self._shm_lane_bytes = shm_lane_bytes
+        #: Commands sent per worker since its (re)spawn — the liveness
+        #: tracker's "outstanding work" side of the heartbeat equation.
+        self.sent_counts = [0] * num_workers
         self.cmd_queues = [ctx.Queue() for _ in range(num_workers)]
         self.report_queues = [ctx.Queue() for _ in range(num_workers)]
         # inboxes[receiver][sender]: the (sender → receiver) exchange lane's
@@ -527,6 +708,7 @@ class WorkerPool:
             num_workers=num_workers,
             timeout=timeout,
         )
+        self.spec = spec
         self.processes = [
             ctx.Process(target=_worker_main, args=(w, spec), daemon=True)
             for w in range(num_workers)
@@ -553,6 +735,7 @@ class WorkerPool:
                     self.rings[r][s].unlink()
 
     def send(self, wid: int, msg) -> None:
+        self.sent_counts[wid] += 1
         self.cmd_queues[wid].put(msg)
 
     def alive(self, wid: int) -> bool:
@@ -562,14 +745,121 @@ class WorkerPool:
         p = self.processes[wid]
         if p.is_alive():
             p.kill()
-            p.join(timeout=5)
+            p.join(timeout=self._GRACE_S)
+            if p.is_alive():  # pragma: no cover - SIGKILL cannot be ignored
+                raise RuntimeError(
+                    f"worker {wid} (pid {p.pid}) survived SIGKILL"
+                )
+
+    @staticmethod
+    def _drain(q) -> None:
+        while True:
+            try:
+                q.get_nowait()
+            except (_queue_mod.Empty, OSError):
+                return
+
+    def respawn(self, wid: int) -> tuple[Optional[list], Optional[list]]:
+        """Fork a replacement for a dead worker over fresh exchange lanes.
+
+        Drains the dead incarnation's channels (its queues have exactly one
+        other writer — the coordinator — so draining here cannot race a
+        worker), replaces every (wid ↔ peer) shm ring *in the rings matrix
+        before forking* (the replacement inherits the new mappings; the old
+        segments were unlinked at death), clears the death Event survivors
+        watch, and forks.  Returns ``(in_ring_names, out_ring_names)`` —
+        per-peer segment names survivors attach via ``peer_up`` (None when
+        lanes are disabled).
+
+        The caller updates ``spec`` beforehand (current table, node map,
+        dead peers) via :attr:`spec`; channel objects are reused — the fork
+        start method hands the replacement the same queues and Events.
+        """
+        p = self.processes[wid]
+        if p.is_alive():  # pragma: no cover - protocol error
+            raise RuntimeError(f"worker {wid} is still alive")
+        # Fresh command/report queues: a worker SIGKILLed while blocked in
+        # ``cmd_q.get()`` — where an idle worker always sits — dies holding
+        # the queue's reader lock, poisoning it for any future reader.
+        # Both queues touch only the coordinator and the dead incarnation,
+        # so they are safely replaceable (the spec holds these same lists;
+        # the replacement inherits the new objects at fork).  Peer-written
+        # inbox lanes cannot be swapped — live survivors hold fork-inherited
+        # references — but their locks are only held inside non-blocking
+        # ``get_nowait`` windows, never across a wait.
+        for old in (self.cmd_queues[wid], self.report_queues[wid]):
+            old.close()
+            old.cancel_join_thread()
+        self.cmd_queues[wid] = self._ctx.Queue()
+        self.report_queues[wid] = self._ctx.Queue()
+        for w in range(self.num_workers):
+            if w != wid:
+                self._drain(self.inboxes[wid][w])
+                self._drain(self.inboxes[w][wid])
+        in_names: Optional[list] = None
+        out_names: Optional[list] = None
+        if self._shm_lane_bytes and any(
+            r is not None for row in self.rings for r in row
+        ):
+            uid = uuid.uuid4().hex[:8]
+            try:
+                for w in range(self.num_workers):
+                    if w == wid:
+                        continue
+                    for r, s in ((wid, w), (w, wid)):
+                        old = self.rings[r][s]
+                        if old is not None:
+                            old.close()
+                        self.rings[r][s] = shmx.ShmRing.create(
+                            f"{shmx.SEGMENT_PREFIX}_{os.getpid()}"
+                            f"_{uid}_{s}to{r}",
+                            self._shm_lane_bytes,
+                        )
+            except OSError:  # pragma: no cover - /dev/shm exhausted
+                for w in range(self.num_workers):
+                    for r, s in ((wid, w), (w, wid)):
+                        ring = self.rings[r][s]
+                        if ring is not None:
+                            ring.unlink()
+                            ring.close()
+                            self.rings[r][s] = None
+            else:
+                in_names = [
+                    self.rings[w][wid].shm.name if w != wid else None
+                    for w in range(self.num_workers)
+                ]
+                out_names = [
+                    self.rings[wid][w].shm.name if w != wid else None
+                    for w in range(self.num_workers)
+                ]
+        # Same Event object (survivors hold fork-inherited references):
+        # clear, don't replace.  Safe because the caller quiesced the pool —
+        # every survivor finished its final sweep of the dead incarnation.
+        self.dead_events[wid].clear()
+        self.sent_counts[wid] = 0
+        proc = self._ctx.Process(
+            target=_worker_main, args=(wid, self.spec), daemon=True
+        )
+        proc.start()
+        self.processes[wid] = proc
+        return in_names, out_names
 
     def shutdown(self) -> None:
+        # Graceful first (SIGTERM lets queue feeder threads flush), then
+        # escalate to SIGKILL on timeout, then *check* — the join result
+        # used to be ignored, so an ignore-everything worker leaked.
         for p in self.processes:
             if p.is_alive():
-                p.kill()
+                p.terminate()
+        deadline = time.monotonic() + self._GRACE_S
         for p in self.processes:
-            p.join(timeout=5)
+            p.join(timeout=max(0.0, deadline - time.monotonic()))
+        leaked = [p for p in self.processes if p.is_alive()]
+        for p in leaked:
+            p.kill()
+        for p in leaked:
+            p.join(timeout=self._GRACE_S)
+        still = [p.pid for p in self.processes if p.is_alive()]
         for q in (
             *self.cmd_queues,
             *self.report_queues,
@@ -578,6 +868,8 @@ class WorkerPool:
             q.close()
             q.cancel_join_thread()
         self._destroy_rings()
+        if still:  # pragma: no cover - SIGKILL cannot be ignored
+            raise RuntimeError(f"leaked worker processes after SIGKILL: {still}")
 
 
 class ClusterEngine:
@@ -604,6 +896,7 @@ class ClusterEngine:
         seed: int = 0,
         collect_sinks: bool = True,
         timeout: float = DEFAULT_TIMEOUT,
+        faults: Optional[FaultPlan] = None,
     ) -> None:
         if config is None:
             config = ExecutionConfig.workers(2)
@@ -647,7 +940,9 @@ class ClusterEngine:
         self._op_schema = [
             o.schema if config.use_schema else None for o in topology.operators
         ]
-        self._worker_config = config.replace(num_workers=1)
+        self._worker_config = config.replace(
+            num_workers=1, checkpoint=None, supervision=None
+        )
         self._timeout = timeout
         worker_cfg = self._worker_config
         self.pool = WorkerPool(
@@ -685,6 +980,46 @@ class ClusterEngine:
         self._queue_costs: Optional[list[float]] = None
         self._closed = False
         self._finalized = False
+        # ---- self-healing state (heartbeats, checkpoints, recovery) ----
+        self.faults = faults
+        #: Source admissions since start — the checkpoint cut point and the
+        #: replay buffer's ordering key.
+        self.ingest_cursor = 0
+        self._period_no = 0
+        # Post-checkpoint admissions buffered coordinator-side, as
+        # (cursor, oid, converted batch): after a global rewind to the last
+        # checkpoint they are re-shipped in admission order.  Only kept when
+        # both checkpoints and respawn are configured; pruned at each commit.
+        self._buffer_replay = (
+            config.checkpoint is not None
+            and config.supervision is not None
+            and config.supervision.respawn
+        )
+        self._replay: list[tuple[int, int, tuple]] = []
+        #: Latest heartbeat per worker: (commands done, cumulative counters).
+        #: A dead worker's entry is folded into the lost-counter accumulators
+        #: exactly once (its gather payload is gone; the replacement counts
+        #: from zero), so finalize stays conservation-exact across respawns.
+        self._last_hb: dict[int, tuple[int, dict]] = {}
+        self._lost_metrics = dict.fromkeys(_METRIC_SUM_FIELDS, 0)
+        self._lost_exchange = dict.fromkeys(_EXCHANGE_STAT_FIELDS, 0.0)
+        self._death_ts: dict[int, float] = {}
+        self._needs_recovery: list[int] = []
+        self._in_recovery = False
+        #: One RecoveryReport per recovery attempt (see engine/supervisor.py).
+        self.recoveries: list = []
+        # Window statistics restored from a checkpoint, folded into the next
+        # end_period exactly once (the periodic fold must see the partial
+        # window the original run had at the cut).
+        self._window_base: Optional[dict] = None
+        self._window_resources: tuple = ("cpu", "network", "memory")
+        self.supervisor = None
+        if config.supervision is not None or config.checkpoint is not None:
+            # Lazy import: the supervisor pulls in the checkpoint stack,
+            # which plain cluster runs never need.
+            from repro.engine.supervisor import Supervisor
+
+            self.supervisor = Supervisor(self)
 
     # ------------------------------------------------------------- plumbing
     def _alive_workers(self) -> list[int]:
@@ -713,11 +1048,27 @@ class ClusterEngine:
                     raise RuntimeError(
                         f"worker {msg[1]} crashed:\n{msg[2]}"
                     )
+                if msg[0] == "hb":
+                    # Liveness + counters only — never surfaced to callers.
+                    self._note_hb(msg)
+                    continue
+                if msg[0] == "hb_wait":
+                    # Worker blocked in the exchange on a peer: pure
+                    # liveness, no counters (see recv_exchange).
+                    if self.supervisor is not None:
+                        self.supervisor.note_activity(msg[1])
+                    continue
+                if self.supervisor is not None:
+                    self.supervisor.note_activity(
+                        msg[2] if msg[0] == "tick" else msg[1]
+                    )
                 return msg
             for w in self._alive_workers():
                 if not self.pool.alive(w):
                     self._on_worker_death(w)
                     return None
+            if self.supervisor is not None and self.supervisor.escalate_wedged():
+                continue  # SIGKILLed a wedged worker; re-run death detection
             if time.monotonic() > deadline:
                 raise RuntimeError(
                     "cluster coordinator: wait on worker reports timed "
@@ -746,7 +1097,9 @@ class ClusterEngine:
                 _, sinks = reports[w]
                 if sinks:
                     self.metrics.sink_outputs.extend(sinks)
-            del self._tick_reports[t]
+            # pop, not del: with every expected reporter dead the tick
+            # merges empty and may have no reports entry at all.
+            self._tick_reports.pop(t, None)
             self._pending_ticks.pop(0)
             self._merged_through = t
 
@@ -807,6 +1160,28 @@ class ClusterEngine:
         if wid in self._dead_workers:
             return
         self._dead_workers.add(wid)
+        self._death_ts[wid] = time.monotonic()
+        # Drain reports the dead worker already flushed — the final
+        # heartbeat rides the same pipe as the last ack and may not have
+        # been polled yet — then fold its counters exactly once.
+        while True:
+            try:
+                msg = self.pool.report_queues[wid].get_nowait()
+            except (_queue_mod.Empty, OSError):
+                break
+            if msg[0] == "hb":
+                self._note_hb(msg)
+            elif msg[0] == "tick":
+                self._handle_tick_report(msg)
+            elif msg[0] == "ack":
+                self._stashed_acks[(msg[1], msg[2])] = msg[3]
+        last = self._last_hb.pop(wid, None)
+        if last is not None:
+            _, counters = last
+            for f in _METRIC_SUM_FIELDS:
+                self._lost_metrics[f] += counters["metrics"].get(f, 0)
+            for f in _EXCHANGE_STAT_FIELDS:
+                self._lost_exchange[f] += counters["exchange"].get(f, 0)
         dead_nodes = np.flatnonzero(self.node_worker == wid)
         self.alive[dead_nodes] = False
         # Coordinator-owned shm cleanup: a SIGKILLed worker can't unlink
@@ -822,6 +1197,55 @@ class ClusterEngine:
             self.pool.send(w, ("peer_dead", wid))
         self._command_all(("node_down", dead_nodes.tolist()), "node_down")
         self._merge_ready_ticks()
+        if (
+            self.config.supervision is not None
+            and self.config.supervision.respawn
+        ):
+            # Recovery runs at the next safe point (between supersteps),
+            # not here: death is detected deep inside report waits.
+            self._needs_recovery.append(wid)
+
+    # ------------------------------------------------------------ self-healing
+    def _note_hb(self, msg) -> None:
+        _, wid, done, counters = msg
+        self._last_hb[wid] = (done, counters)
+        if self.supervisor is not None:
+            self.supervisor.note_hb(wid, done)
+
+    def _maybe_recover(self) -> None:
+        """Run pending recoveries at a safe point (no tick in flight)."""
+        if self._in_recovery or not self._needs_recovery:
+            return
+        self._in_recovery = True
+        try:
+            while self._needs_recovery:
+                self.supervisor.recover(self._needs_recovery.pop(0))
+        finally:
+            self._in_recovery = False
+
+    def _apply_faults(self, *, tick=None, period=None) -> None:
+        """Apply scheduled FaultPlan events at this deterministic point."""
+        if self.faults is None:
+            return
+        events = (
+            self.faults.at_tick(tick)
+            if tick is not None
+            else self.faults.at_period(period)
+        )
+        for ev in events:
+            w = ev.worker
+            if w >= self.num_workers or w in self._dead_workers:
+                continue
+            if self.supervisor is not None:
+                self.supervisor.note_fault(w, ev)
+            if ev.kind == "kill":
+                self.fail_worker(w)
+            else:
+                # No ack: from outside, a hang/delay is a worker stuck
+                # mid-command — which is exactly what it should look like.
+                self.pool.send(
+                    w, ("fault", ev.kind, ev.seconds, ev.ignore_term)
+                )
 
     # ------------------------------------------------------------------ feed
     def source_credits(self, *, refresh: bool = True) -> int:
@@ -846,6 +1270,7 @@ class ClusterEngine:
         )
 
     def push_source(self, op, keys, values, ts, *, refresh: bool = True) -> int:
+        self._maybe_recover()
         oid = self.topology._resolve(op)
         spec = self.topology.operators[oid]
         if not spec.is_source:
@@ -873,6 +1298,14 @@ class ClusterEngine:
             )
         else:
             batch = make_batch(keys[:n], values[:n], ts[:n])
+        self.ingest_cursor += 1
+        if self._buffer_replay:
+            self._replay.append((self.ingest_cursor, oid, batch))
+        self._ship_batch(oid, batch)
+
+    def _ship_batch(self, oid: int, batch) -> None:
+        """Partition one admitted batch by owning worker and ship the slices
+        (the replay path re-enters here, bypassing admission)."""
         bk, bv, bt = batch
         kgs = self.topology.keygroups_of(oid, bk, bv)
         owners = self.node_worker[self.router.table[kgs]]
@@ -890,6 +1323,7 @@ class ClusterEngine:
     # ------------------------------------------------------------------ tick
     def tick(self) -> None:
         """Lockstep BSP tick: command all workers, await all reports."""
+        self._apply_faults(tick=self._tick_no)
         t = self._tick_no
         self._tick_no += 1
         self._pending_ticks.append(t)
@@ -898,6 +1332,7 @@ class ClusterEngine:
         self._wait_tick(t)
         self.metrics.ticks += 1
         self._ticks_this_period += 1
+        self._maybe_recover()
 
     def _wait_tick(self, t: int) -> None:
         while self._merged_through < t:
@@ -928,6 +1363,7 @@ class ClusterEngine:
             batches = [batches[i] for i in self.ingest_rng.permutation(len(batches))]
         accepted = 0
         for keys, values, ts in batches:
+            self._maybe_recover()
             while self._tick_no - self._merged_through - 1 >= window:
                 msg = self._recv()
                 if msg is None:
@@ -941,6 +1377,7 @@ class ClusterEngine:
             if n:
                 self._split_and_push(oid, keys, values, ts, n)
                 accepted += n
+            self._apply_faults(tick=self._tick_no)
             t = self._tick_no
             self._tick_no += 1
             self._pending_ticks.append(t)
@@ -950,11 +1387,13 @@ class ClusterEngine:
             self._wait_tick(self._tick_no - 1)
         self.metrics.ticks += len(batches)
         self._ticks_this_period += len(batches)
+        self._maybe_recover()
         return accepted
 
     # ------------------------------------------------------- SPL statistics
     def end_period(self) -> ClusterState:
         """Fold every worker's SPL window into one ClusterState snapshot."""
+        self._maybe_recover()
         payloads = self._command_all(("end_period",), "end_period")
         g = self.topology.num_keygroups
         order = sorted(payloads)
@@ -977,6 +1416,21 @@ class ClusterEngine:
             prate.append(r_)
             mine = owner_of_kg == w
             state_bytes[mine] = p["state_bytes"][mine]
+        if self._window_base is not None:
+            # Window statistics carried out of the checkpoint a recovery
+            # restored from — the fold must see the partial window the
+            # original run had accumulated at the cut.  Folded once.
+            base, self._window_base = self._window_base, None
+            for r, u in base["usage"].items():
+                if r in usage:
+                    usage[r] += u
+            arrivals += base["arrivals"]
+            s, d, r_ = base["pairs"]
+            if len(s):
+                psrc.append(s)
+                pdst.append(d)
+                prate.append(r_)
+        self._window_resources = tuple(usage)
         totals = {r: float(u.sum()) for r, u in usage.items()}
         resource = max(totals, key=totals.get)
         ticks = max(self._ticks_this_period, 1)
@@ -1007,6 +1461,13 @@ class ClusterEngine:
             arrivals
         )
         self._ticks_this_period = 0
+        self._period_no += 1
+        if self.supervisor is not None:
+            self.supervisor.note_period(state)
+        # Period faults land *after* the fold and any checkpoint — a kill
+        # here is a crash between periods, the canonical recovery scenario.
+        self._apply_faults(period=self._period_no)
+        self._maybe_recover()
         return state
 
     # ------------------------------------------------- direct state migration
@@ -1126,6 +1587,15 @@ class ClusterEngine:
                 costs[node] = c
             for f in _EXCHANGE_STAT_FIELDS:
                 self.exchange_stats[f] += p.get("exchange", {}).get(f, 0)
+        # Dead workers' final-heartbeat counters, folded exactly once: the
+        # live gather above only sees the current incarnations (which count
+        # from zero after a respawn).
+        for f in _METRIC_SUM_FIELDS:
+            setattr(
+                self.metrics, f, getattr(self.metrics, f) + self._lost_metrics[f]
+            )
+        for f in _EXCHANGE_STAT_FIELDS:
+            self.exchange_stats[f] += self._lost_exchange[f]
         self._queue_costs = costs
         self._finalized = True
         self.close()

@@ -58,6 +58,78 @@ LEGACY_EXECUTION_KWARGS = (
 
 
 @dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """Periodic engine checkpoints (see docs/fault_tolerance.md).
+
+    The coordinator snapshots the routing table, every key group's state
+    envelope, split cursors, the partial SPL window and the ingestion cursor
+    under one atomic manifest every :attr:`every` SPL periods, via
+    :class:`repro.checkpoint.CheckpointManager` rooted at :attr:`directory`.
+    """
+
+    directory: str
+    #: Checkpoint every N ``end_period()`` calls (N >= 1).
+    every: int = 2
+    #: Complete checkpoints retained on disk (older ones are pruned).
+    keep: int = 3
+
+    def __post_init__(self) -> None:
+        if not self.directory:
+            raise ValueError("CheckpointPolicy.directory must be a path")
+        if self.every < 1:
+            raise ValueError("CheckpointPolicy.every must be >= 1")
+        if self.keep < 1:
+            raise ValueError("CheckpointPolicy.keep must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisionPolicy:
+    """Worker supervision: liveness deadlines and bounded respawn.
+
+    Workers heartbeat over their report queue after every command; a worker
+    with outstanding commands that stays silent for ``hb_interval_s *
+    hb_misses`` seconds is presumed wedged and escalated to SIGKILL (wedged
+    is not dead — escalation turns it into a clean death the respawn path
+    handles).  Dead workers are respawned with bounded exponential backoff
+    and their key groups restored from the latest checkpoint (recovery *is*
+    reconfiguration: orphans are re-homed through the allocator).
+    """
+
+    hb_interval_s: float = 5.0
+    #: Consecutive missed heartbeat intervals before SIGKILL escalation.
+    hb_misses: int = 6
+    #: Respawn dead workers (False → supervise liveness only; a death
+    #: permanently fails the worker's nodes, PR 7 semantics).
+    respawn: bool = True
+    #: Give up on a worker after this many respawns without an intervening
+    #: completed checkpoint.
+    max_respawns: int = 3
+    #: Exponential backoff before the k-th respawn: min(base * 2**k, cap).
+    backoff_base_s: float = 0.0
+    backoff_cap_s: float = 5.0
+    #: How recovered key groups are re-homed: "albic" (Algorithm 2),
+    #: "milp" (solve_allocation), or "keep" (checkpointed placement as-is).
+    rehome: str = "albic"
+
+    def __post_init__(self) -> None:
+        if self.hb_interval_s <= 0:
+            raise ValueError("hb_interval_s must be > 0")
+        if self.hb_misses < 1:
+            raise ValueError("hb_misses must be >= 1")
+        if self.max_respawns < 0:
+            raise ValueError("max_respawns must be >= 0")
+        if self.backoff_base_s < 0 or self.backoff_cap_s < 0:
+            raise ValueError("backoff times must be >= 0")
+        if self.rehome not in ("albic", "milp", "keep"):
+            raise ValueError(f"unknown rehome strategy {self.rehome!r}")
+
+    @property
+    def deadline_s(self) -> float:
+        """Silence (with outstanding commands) that triggers escalation."""
+        return self.hb_interval_s * self.hb_misses
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecutionConfig:
     """How a topology executes: queue layout, operator tier, worker count.
 
@@ -96,6 +168,12 @@ class ExecutionConfig:
     #: Replica key-group slots reserved when ``split_degree > 0`` (bounds
     #: how many concurrent splits fit: each split consumes degree−1 slots).
     split_reserve: int = 16
+    #: Periodic checkpoint cadence (None disables checkpoints).  Applies to
+    #: the coordinator only — worker shards never checkpoint themselves.
+    checkpoint: Optional[CheckpointPolicy] = None
+    #: Worker supervision (heartbeat deadlines + respawn).  Multi-worker
+    #: runtime only; None disables supervision (PR 7 death semantics).
+    supervision: Optional[SupervisionPolicy] = None
 
     def __post_init__(self) -> None:
         if self.queue_impl not in ("soa", "deque"):
@@ -144,6 +222,22 @@ class ExecutionConfig:
                 )
         if self.split_reserve < 0:
             raise ValueError("split_reserve must be >= 0")
+        if self.supervision is not None and self.num_workers == 1:
+            raise ValueError(
+                "supervision requires the multi-worker runtime "
+                "(num_workers > 1); the single-process engine has no worker "
+                "processes to supervise"
+            )
+        if (
+            self.supervision is not None
+            and self.supervision.respawn
+            and self.checkpoint is None
+        ):
+            raise ValueError(
+                "supervision with respawn=True requires a CheckpointPolicy "
+                "(a respawned worker restores its key groups from the "
+                "latest checkpoint)"
+            )
 
     # -- presets --------------------------------------------------------------
     @classmethod
@@ -177,15 +271,28 @@ class ExecutionConfig:
         )
 
     @classmethod
-    def workers(cls, n: int, *, shm: int = SHM_LANE_BYTES) -> "ExecutionConfig":
+    def workers(
+        cls,
+        n: int,
+        *,
+        shm: int = SHM_LANE_BYTES,
+        checkpoint: Optional[CheckpointPolicy] = None,
+        supervision: Optional[SupervisionPolicy] = None,
+    ) -> "ExecutionConfig":
         """``.typed()`` sharded over ``n`` OS worker processes.
 
         ``shm`` sizes each (sender → receiver) shared-memory exchange lane
         in bytes (default 1 MiB; see :data:`SHM_LANE_BYTES`).  ``shm=0``
         disables the shm lanes and exchanges everything over the pickled
-        queue path.
+        queue path.  ``checkpoint``/``supervision`` enable the self-healing
+        layer (docs/fault_tolerance.md).
         """
-        return cls(num_workers=int(n), shm_lane_bytes=int(shm))
+        return cls(
+            num_workers=int(n),
+            shm_lane_bytes=int(shm),
+            checkpoint=checkpoint,
+            supervision=supervision,
+        )
 
     @classmethod
     def split(cls, degree: int = 2, *, reserve: int = 16) -> "ExecutionConfig":
@@ -223,4 +330,8 @@ class ExecutionConfig:
             parts.append("workers")
         if self.split_degree:
             parts.append(f"split{self.split_degree}")
+        if self.checkpoint is not None:
+            parts.append(f"ckpt{self.checkpoint.every}")
+        if self.supervision is not None:
+            parts.append("supervised")
         return "+".join(parts)

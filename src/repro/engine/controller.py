@@ -44,6 +44,8 @@ class PeriodMetrics:
     # Hot-key splitting activity this period (0 without a splitter policy).
     num_splits: int = 0
     num_unsplits: int = 0
+    #: Worker recoveries (supervised respawn + rewind) completed this period.
+    num_recoveries: int = 0
 
 
 class Controller:
@@ -72,6 +74,7 @@ class Controller:
 
     def period(self, *, adapt: bool = True) -> PeriodMetrics:
         """One SPL: execute ticks, snapshot stats, adapt, migrate, record."""
+        recoveries_before = len(getattr(self.engine, "recoveries", ()))
         self.run_ticks(self.config.ticks_per_period)
         snapshot = self.engine.end_period()
 
@@ -145,6 +148,9 @@ class Controller:
             solver_seconds=result.plan.solve_seconds if result else 0.0,
             num_splits=num_splits,
             num_unsplits=num_unsplits,
+            num_recoveries=(
+                len(getattr(self.engine, "recoveries", ())) - recoveries_before
+            ),
         )
         self.engine.latency.reset()
         self.history.append(metrics)

@@ -473,6 +473,17 @@ class Engine:
         self._capacity_list = self.capacity.tolist()
         self._ticks_this_period = 0
         self.alive = np.ones(num_nodes, dtype=bool)
+        # Source batches admitted so far — the checkpoint/replay cursor
+        # (docs/fault_tolerance.md).  Counts _admit_source calls.
+        self.ingest_cursor = 0
+        # Periodic checkpoints (config.checkpoint): the checkpointing module
+        # pulls in repro.checkpoint (and thereby jax), so import it only on
+        # the explicit opt-in — the engine must not import jax otherwise.
+        self._checkpointer = None
+        if config.checkpoint is not None and config.num_workers == 1:
+            from repro.engine.checkpointing import EngineCheckpointer
+
+            self._checkpointer = EngineCheckpointer(config.checkpoint)
 
     # ------------------------------------------------------------------ feed
     def source_credits(self) -> int:
@@ -517,6 +528,7 @@ class Engine:
             )
         else:
             batch = make_batch(keys[:n], values[:n], ts[:n])
+        self.ingest_cursor += 1
         self._route_batch(oid, batch, src_kgs=None, src_nodes=None)
 
     # --------------------------------------------------------------- routing
@@ -1348,6 +1360,10 @@ class Engine:
         )
         self.window.reset()
         self._ticks_this_period = 0
+        if self._checkpointer is not None:
+            # Cadence hook: every policy.every-th period commits a snapshot
+            # (post-fold — the checkpointed window is the new, empty one).
+            self._checkpointer.note_period(self)
         return state
 
     # ------------------------------------------------- direct state migration

@@ -75,6 +75,22 @@ class Router:
     def keygroups_on(self, node: int) -> np.ndarray:
         return np.where(self.table == node)[0]
 
+    # -- recovery --------------------------------------------------------------
+    def reset(self, table: np.ndarray) -> None:
+        """Adopt ``table`` wholesale and drop every transient (restore path).
+
+        Buffered batches and in-flight markers describe migrations that no
+        longer exist after a checkpoint rewind — the replacement state comes
+        from the checkpoint envelopes, not from a serialize handoff.
+        """
+        if len(table) != len(self.table):
+            raise ValueError("reset table length mismatch")
+        self.table[:] = np.asarray(table, dtype=np.int64)
+        self.version += 1
+        self._buffers.clear()
+        self._in_flight.clear()
+        self._in_flight_arr = np.empty(0, dtype=np.int64)
+
 
 def concat_batches(batches: list[Batch]) -> Batch:
     if not batches:

@@ -107,6 +107,23 @@ class ShmRing:
         del ctrl
         return cls(shm)
 
+    @classmethod
+    def open(cls, name: str) -> "ShmRing":
+        """Attach to an existing segment by name (respawn path).
+
+        Fork inheritance covers the initial pool, but a worker that outlives
+        a peer's respawn must map the *replacement* lanes, which were
+        created after its own fork.  Ownership is unchanged: the coordinator
+        created the segment and remains the only unlinker.  The attach-time
+        resource-tracker registration (Python < 3.13 has no ``track``
+        parameter) is harmless here: fork-children share the coordinator's
+        tracker, whose cache is a set — the duplicate register is a no-op
+        and the coordinator's eventual unlink clears the single entry.
+        Explicitly unregistering instead would strip the creator's entry
+        and make that unlink double-unregister.
+        """
+        return cls(_shared_memory.SharedMemory(name=name, create=False))
+
     # ------------------------------------------------------------- producer
     def try_send(self, parts: list) -> int | None:
         """Publish one record made of buffer parts → payload bytes written,

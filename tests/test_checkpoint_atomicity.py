@@ -1,0 +1,138 @@
+"""Crash-during-checkpoint atomicity (satellite of the self-healing PR).
+
+A checkpoint writer SIGKILLed mid-save must never corrupt the latest
+restorable checkpoint: the stage-then-rename protocol guarantees that a
+directory named ``step_N`` (no ``.tmp``) is complete by construction, and
+``CheckpointManager.__init__`` prunes any stage a killed writer left
+behind.  Each test forks a real child process, wedges it at a chosen
+point inside the write path, SIGKILLs it, and then restores from the
+surviving parent-side manager.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import MANIFEST, CheckpointManager
+
+_ctx = mp.get_context("fork")
+
+
+def _tree(step: int) -> dict:
+    return {"w": np.full(8, float(step)), "bias": np.arange(3) + step}
+
+
+def _wedged_writer(directory: str, staged, wedge: str, api: str) -> None:
+    """Child body: start writing step 2, signal, then hang until SIGKILL.
+
+    ``wedge`` picks the crash point: ``"rename"`` wedges at the commit
+    (stage complete, manifest written, rename never happens); ``"treedef"``
+    wedges mid-stage, before the manifest — which is written last — even
+    starts (stage partial, no manifest file at all).
+    """
+    import repro.checkpoint.checkpoint as ck
+
+    def hang(*a, **k):
+        staged.set()
+        time.sleep(600)
+
+    if wedge == "rename":
+        ck.os.rename = hang
+    else:
+        ck.pickle.dump = hang
+    mgr = CheckpointManager(directory, keep=3)
+    if api == "save":
+        mgr.save(2, _tree(2), metadata={"ingest_cursor": 2})
+    else:
+        mgr.save_async(2, _tree(2), metadata={"ingest_cursor": 2})
+        mgr.wait()
+
+
+def _kill_mid_save(directory: str, wedge: str, api: str) -> None:
+    staged = _ctx.Event()
+    child = _ctx.Process(
+        target=_wedged_writer, args=(directory, staged, wedge, api)
+    )
+    child.start()
+    try:
+        assert staged.wait(timeout=30.0), "writer never reached the wedge"
+        os.kill(child.pid, signal.SIGKILL)
+    finally:
+        child.join(timeout=30.0)
+    assert child.exitcode == -signal.SIGKILL
+
+
+@pytest.mark.parametrize("api", ["save", "save_async"])
+def test_kill_before_commit_restores_previous_checkpoint(tmp_path, api):
+    """SIGKILL between a complete stage and the rename commit: the stage —
+    manifest and all — is garbage, and ``restore()`` returns the previous
+    committed checkpoint byte-for-byte."""
+    directory = str(tmp_path / "ck")
+    mgr = CheckpointManager(directory, keep=3)
+    mgr.save(1, _tree(1), metadata={"ingest_cursor": 1})
+
+    _kill_mid_save(directory, "rename", api)
+
+    # The crash window is real: a fully-written stage (manifest included)
+    # is sitting on disk, uncommitted.
+    stages = [n for n in os.listdir(directory) if n.endswith(".tmp")]
+    assert len(stages) == 1
+    assert os.path.exists(os.path.join(directory, stages[0], MANIFEST))
+
+    # A stage is never a checkpoint, even before anyone prunes it.
+    assert mgr.steps() == [1]
+
+    # A fresh manager (the respawned coordinator) prunes the orphan stage
+    # and restores the previous complete checkpoint.
+    healed = CheckpointManager(directory, keep=3)
+    assert not [n for n in os.listdir(directory) if n.endswith(".tmp")]
+    assert healed.steps() == [1]
+    tree, meta = healed.restore()
+    assert meta["step"] == 1
+    assert meta["ingest_cursor"] == 1
+    np.testing.assert_array_equal(tree["w"], _tree(1)["w"])
+    np.testing.assert_array_equal(tree["bias"], _tree(1)["bias"])
+
+
+def test_kill_mid_stage_leaves_no_manifest_and_restores_previous(tmp_path):
+    """SIGKILL while the stage is still being written (before the manifest,
+    which goes last): the partial stage has no manifest, is invisible to
+    ``steps()``, and is pruned on the next manager construction."""
+    directory = str(tmp_path / "ck")
+    mgr = CheckpointManager(directory, keep=3)
+    mgr.save(1, _tree(1), metadata={"ingest_cursor": 1})
+
+    _kill_mid_save(directory, "treedef", "save")
+
+    stages = [n for n in os.listdir(directory) if n.endswith(".tmp")]
+    assert len(stages) == 1
+    assert not os.path.exists(os.path.join(directory, stages[0], MANIFEST))
+
+    healed = CheckpointManager(directory, keep=3)
+    assert not [n for n in os.listdir(directory) if n.endswith(".tmp")]
+    assert healed.steps() == [1]
+    tree, meta = healed.restore()
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(tree["w"], _tree(1)["w"])
+
+
+def test_kill_with_no_prior_checkpoint_restores_nothing(tmp_path):
+    """First-ever checkpoint killed mid-commit: the directory holds only
+    garbage, ``latest_step()`` is None, and ``restore()`` raises — the
+    engine's recovery path treats this as a rewind to T0."""
+    directory = str(tmp_path / "ck")
+    CheckpointManager(directory, keep=3)
+
+    _kill_mid_save(directory, "rename", "save")
+
+    healed = CheckpointManager(directory, keep=3)
+    assert healed.steps() == []
+    assert healed.latest_step() is None
+    with pytest.raises(FileNotFoundError):
+        healed.restore()

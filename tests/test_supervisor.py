@@ -1,0 +1,460 @@
+"""Self-healing cluster: supervised respawn, periodic checkpoints, chaos.
+
+The contract under test (docs/fault_tolerance.md): with a checkpoint
+cadence and supervision configured, a worker SIGKILLed mid-stream is
+respawned and the cluster rewinds to the latest checkpoint **without any
+test-driven intervention** — and everything after the recovery's sink mark
+is bit-identical to a fresh single-process engine restored from the same
+checkpoint and fed the same post-checkpoint admissions.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from conformance import make_pipeline_topo
+from repro.engine import Engine, ExecutionConfig, make_engine
+from repro.engine import checkpointing
+from repro.engine.checkpointing import (
+    payload_from_tree,
+    restore_engine,
+    snapshot_payload,
+)
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.engine.cluster import WorkerPool
+from repro.engine.config import CheckpointPolicy, SupervisionPolicy
+from repro.engine.faults import FaultEvent, FaultPlan
+
+KGS = 8
+NODES = 4
+TICKS_PER_PERIOD = 6
+
+
+def _batches(n, size=200, key_space=5_000, seed=123):
+    rng = np.random.default_rng(seed)
+    return [
+        (
+            rng.integers(0, key_space, size=size).astype(np.int64),
+            rng.random(size),
+            np.full(size, float(t)),
+        )
+        for t in range(n)
+    ]
+
+
+def _healing_config(tmp_path, *, shm, every=2, supervision=None):
+    return ExecutionConfig.workers(
+        2,
+        shm=shm,
+        checkpoint=CheckpointPolicy(directory=str(tmp_path / "ck"), every=every),
+        supervision=supervision or SupervisionPolicy(),
+    )
+
+
+def _drive_periods(eng, batches, periods):
+    it = iter(batches)
+    for _ in range(periods):
+        for _ in range(TICKS_PER_PERIOD):
+            keys, values, ts = next(it)
+            eng.push_source("src", keys, values, ts)
+            eng.tick()
+        eng.end_period()
+
+
+def _drain(eng, max_ticks=60):
+    for _ in range(max_ticks):
+        if eng.worst_queue_cost() == 0.0:
+            return
+        eng.tick()
+    raise AssertionError("cluster failed to quiesce")
+
+
+def _drain_oracle(eng, max_ticks=60):
+    for _ in range(max_ticks):
+        if not any(q.cost for q in eng._queues):
+            return
+        eng.tick()
+    raise AssertionError("oracle failed to quiesce")
+
+
+def _nonempty_states(store):
+    return {kg: s for kg, s in store.items() if s}
+
+
+@pytest.mark.parametrize("shm", [1 << 20, 0], ids=["shm", "queue"])
+def test_auto_respawn_converges_to_oracle_replay(tmp_path, shm):
+    """The acceptance scenario: SIGKILL one worker mid-stream, recover
+    unattended, and match the oracle replayed from the surviving checkpoint.
+    """
+    kill_tick = 2 * TICKS_PER_PERIOD + 3  # mid period 3; checkpoint at p2
+    batches = _batches(4 * TICKS_PER_PERIOD)
+    cluster = make_engine(
+        make_pipeline_topo(KGS),
+        NODES,
+        config=_healing_config(tmp_path, shm=shm),
+        service_rate=1e9,
+        seed=0,
+        faults=FaultPlan.of([FaultEvent("kill", 1, at_tick=kill_tick)]),
+    )
+    try:
+        _drive_periods(cluster, batches, 4)
+        _drain(cluster)
+        cluster.finalize()
+    finally:
+        cluster.close()
+    assert not any(p.is_alive() for p in cluster.pool.processes)
+
+    assert len(cluster.recoveries) == 1
+    report = cluster.recoveries[0]
+    assert report.cause == "kill" and not report.gave_up
+    assert report.worker == 1 and report.respawn_attempt == 1
+    # The rewind target is the period-2 checkpoint: 12 ticks, 12 admissions.
+    assert report.restored_step == 2 * TICKS_PER_PERIOD
+    assert report.restored_cursor == 2 * TICKS_PER_PERIOD
+    # Admissions 13..16 were buffered past the cut and replayed.
+    assert report.replayed_batches == kill_tick + 1 - report.restored_cursor
+    assert report.orphans > 0
+
+    # Oracle: a fresh single-process engine restored from the *same*
+    # checkpoint the cluster rewound to, with the cluster's post-recovery
+    # allocation mirrored, fed every admission after the cut.
+    tree, meta = CheckpointManager(str(tmp_path / "ck")).restore(
+        step=report.restored_step
+    )
+    payload = payload_from_tree(tree)
+    assert meta["ingest_cursor"] == report.restored_cursor
+    payload["table"] = np.asarray(cluster.router.table, dtype=np.int64).copy()
+    oracle = Engine(
+        make_pipeline_topo(KGS),
+        NODES,
+        config=ExecutionConfig.typed(),
+        service_rate=1e9,
+        seed=0,
+    )
+    restore_engine(oracle, payload)
+    for keys, values, ts in batches[report.restored_cursor :]:
+        oracle.push_source("src", keys, values, ts)
+        oracle.tick()
+    _drain_oracle(oracle)
+
+    # Everything after the recovery's sink mark is the oracle's output,
+    # byte for byte; final states agree exactly.
+    assert (
+        cluster.metrics.sink_outputs[report.restored_sink_len :]
+        == oracle.metrics.sink_outputs
+    )
+    assert _nonempty_states(cluster.store) == _nonempty_states(oracle.store)
+
+
+def _merge_counts(a, b):
+    out = dict(a)
+    for k, v in b.items():
+        out[k] = out.get(k, 0) + v
+    return out
+
+
+def _count_op(state, keys, values, ts):
+    for k in keys.tolist():
+        state[k] = state.get(k, 0) + 1
+    return state, (keys, values, ts)
+
+
+def _record_sink(state, keys, values, ts):
+    state["n"] = state.get("n", 0) + len(keys)
+    return state, (keys, values, ts)
+
+
+def _make_split_topo(kgs=KGS):
+    from repro.engine import OperatorSpec, Topology
+
+    t = Topology()
+    t.add_operator(
+        OperatorSpec("src", None, num_keygroups=kgs, is_source=True)
+    )
+    t.add_operator(
+        OperatorSpec(
+            "count", _count_op, num_keygroups=kgs, merge_state=_merge_counts
+        )
+    )
+    t.add_operator(
+        OperatorSpec("sink", _record_sink, num_keygroups=kgs, is_sink=True)
+    )
+    t.connect("src", "count")
+    t.connect("count", "sink")
+    return t
+
+
+def test_split_replicas_recover_through_checkpoint_path(tmp_path):
+    """Replica (split) key groups ride the same checkpoint/restore path:
+    split topology and round-robin fan-out cursors restore bit-exact, and
+    the restored engine replayed over the post-cut admissions converges to
+    the original run's tail."""
+    cfg = ExecutionConfig.split(2, reserve=4)
+    batches = _batches(18, key_space=40)  # narrow keys: every kg gets state
+
+    def build():
+        return Engine(
+            _make_split_topo(),
+            NODES,
+            config=cfg,
+            service_rate=1e9,
+            seed=0,
+        )
+
+    eng = build()
+    hot = KGS  # first key group of the "count" operator
+    eng.split_keygroup(hot)
+    assert eng.split_families()[hot]
+    for keys, values, ts in batches[:12]:
+        eng.push_source("src", keys, values, ts)
+        eng.tick()
+    _drain_oracle(eng)  # quiesce: queued-at-cut tuples are the loss bound
+    payload = snapshot_payload(eng)
+    sink_mark = payload["sink_len"]
+    assert payload["split"]["map"] and payload["ingest_cursor"] == 12
+    for keys, values, ts in batches[12:]:
+        eng.push_source("src", keys, values, ts)
+        eng.tick()
+    _drain_oracle(eng)
+
+    restored = build()
+    restored.split_keygroup(hot)  # diverge the cursors before the restore
+    restored.unsplit_keygroup(hot)
+    restore_engine(restored, payload)
+    assert restored._split_map == {
+        int(p): list(f) for p, f in payload["split"]["map"].items()
+    }
+    assert restored._split_rr == {
+        int(p): int(c) for p, c in payload["split"]["rr"].items()
+    }
+    assert restored.ingest_cursor == 12
+    for keys, values, ts in batches[12:]:
+        restored.push_source("src", keys, values, ts)
+        restored.tick()
+    _drain_oracle(restored)
+
+    assert (
+        eng.metrics.sink_outputs[sink_mark:] == restored.metrics.sink_outputs
+    )
+    assert _nonempty_states(eng.store) == _nonempty_states(restored.store)
+
+
+def test_hung_worker_is_escalated_and_recovered(tmp_path):
+    """Wedged ≠ dead: a worker stuck mid-command past the liveness deadline
+    is SIGKILLed by the supervisor and recovered like a crash — the hang
+    never runs to completion (recovery beats the 30 s wedge)."""
+    # Deadline 1.5 s: far under the 30 s hang, far over any legitimate
+    # pause on a loaded CI host (spurious escalation is the failure mode
+    # the deadline knob exists for).
+    supervision = SupervisionPolicy(hb_interval_s=0.25, hb_misses=6)
+    batches = _batches(3 * TICKS_PER_PERIOD)
+    cluster = make_engine(
+        make_pipeline_topo(KGS),
+        NODES,
+        config=_healing_config(tmp_path, shm=0, every=1, supervision=supervision),
+        service_rate=1e9,
+        seed=0,
+        faults=FaultPlan.of(
+            [FaultEvent("hang", 1, at_tick=TICKS_PER_PERIOD + 2, seconds=30.0)]
+        ),
+    )
+    start = time.monotonic()
+    try:
+        _drive_periods(cluster, batches, 3)
+        _drain(cluster)
+        cluster.finalize()
+    finally:
+        cluster.close()
+    assert time.monotonic() - start < 25.0
+    assert [r.cause for r in cluster.recoveries] == ["hang"], cluster.recoveries
+    assert not cluster.recoveries[0].gave_up
+    assert len(cluster.metrics.sink_outputs) > 0
+
+
+def test_shutdown_escalates_to_sigkill_on_ignoring_worker(monkeypatch):
+    """Satellite regression: close() must terminate → kill on join timeout
+    and leak no processes, even against a worker that ignores SIGTERM and
+    never services another command."""
+    monkeypatch.setattr(WorkerPool, "_GRACE_S", 0.5)
+    cluster = make_engine(
+        make_pipeline_topo(KGS),
+        NODES,
+        config=ExecutionConfig.workers(2),
+        service_rate=1e9,
+        seed=0,
+        timeout=1.0,  # the stop-ack wait gives up fast
+    )
+    batches = _batches(1)
+    cluster.push_source("src", *batches[0])
+    cluster.tick()
+    # Wedge worker 1 in a SIGTERM-ignoring busy-hang, then shut down.
+    cluster.pool.send(1, ("fault", "hang", 60.0, True))
+    time.sleep(0.3)  # let it enter the hang (and install SIG_IGN)
+    procs = list(cluster.pool.processes)
+    cluster.close()
+    assert not any(p.is_alive() for p in procs)
+
+
+def test_counters_conserved_across_respawn(tmp_path):
+    """Satellite: a kill at a just-checkpointed period boundary loses and
+    duplicates nothing — finalize totals and exchange stats match the
+    fault-free run exactly (the dead worker's last heartbeat is folded
+    exactly once, the replacement counts from zero).  Each period drains
+    before its boundary so the cut is quiesced — tuples queued at a cut
+    are the loss bound, not a counting error."""
+    batches = _batches(4 * TICKS_PER_PERIOD)
+
+    def run(faults, sub):
+        eng = make_engine(
+            make_pipeline_topo(KGS),
+            NODES,
+            config=_healing_config(
+                tmp_path / sub,
+                shm=1 << 20,
+                # keep: a re-homed table permutes sink order between the two
+                # runs; pinning placement makes the comparison byte-exact.
+                supervision=SupervisionPolicy(rehome="keep"),
+            ),
+            service_rate=1e9,
+            seed=0,
+            faults=faults,
+        )
+        it = iter(batches)
+        try:
+            for _ in range(4):
+                for _ in range(TICKS_PER_PERIOD):
+                    keys, values, ts = next(it)
+                    eng.push_source("src", keys, values, ts)
+                    eng.tick()
+                _drain(eng)
+                eng.end_period()
+            eng.finalize()
+        finally:
+            eng.close()
+        return eng
+
+    plain = run(None, "a")
+    healed = run(FaultPlan.kill_at_period(1, 2), "b")
+    assert len(healed.recoveries) == 1
+    assert healed.recoveries[0].replayed_batches == 0  # cut == crash point
+
+    assert healed.metrics.sink_outputs == plain.metrics.sink_outputs
+    for f in ("processed_tuples", "emitted_tuples", "sink_tuples", "ticks"):
+        assert getattr(healed.metrics, f) == getattr(plain.metrics, f), f
+    for f in ("shm_msgs", "queue_msgs"):
+        if f in plain.exchange_stats:
+            assert healed.exchange_stats[f] == plain.exchange_stats[f], f
+    assert _nonempty_states(healed.store) == _nonempty_states(plain.store)
+
+
+def _chaos_seeds():
+    env = os.environ.get("CHAOS_SEEDS")
+    return [int(s) for s in env.split(",")] if env else [0, 1, 2]
+
+
+@pytest.mark.parametrize("seed", _chaos_seeds())
+def test_seeded_chaos_run_is_bounded_and_leak_free(tmp_path, seed):
+    """The 25-run fault soak as a chaos *suite*: a seeded FaultPlan drives
+    kills/hangs/delays through a supervised cluster; the run must complete,
+    recover every kill, and leak neither processes nor shm segments."""
+    periods = 3
+    plan = FaultPlan.random(
+        seed, num_workers=2, periods=periods, hang_seconds=0.3
+    )
+    supervision = SupervisionPolicy(
+        hb_interval_s=0.1, hb_misses=8, max_respawns=5
+    )
+    batches = _batches(periods * TICKS_PER_PERIOD, size=100)
+    cluster = make_engine(
+        make_pipeline_topo(KGS),
+        NODES,
+        config=_healing_config(tmp_path, shm=1 << 20, every=1, supervision=supervision),
+        service_rate=1e9,
+        seed=seed,
+        faults=plan,
+    )
+    try:
+        _drive_periods(cluster, batches, periods)
+        _drain(cluster)
+        cluster.finalize()
+    finally:
+        cluster.close()
+    assert not any(p.is_alive() for p in cluster.pool.processes)
+    kills = sum(1 for e in plan.events if e.kind == "kill")
+    recovered = sum(1 for r in cluster.recoveries if not r.gave_up)
+    assert recovered >= min(kills, 1)
+    assert len(cluster.metrics.sink_outputs) > 0
+    if os.path.isdir("/dev/shm"):
+        from repro.engine.shmx import SEGMENT_PREFIX
+
+        assert not [
+            f for f in os.listdir("/dev/shm") if f.startswith(SEGMENT_PREFIX)
+        ]
+
+
+def test_recovery_without_checkpoint_rewinds_to_start(tmp_path):
+    """With supervision but no committed checkpoint yet, recovery rewinds
+    to T0 and replays every buffered admission — slower, still converging."""
+    batches = _batches(TICKS_PER_PERIOD)
+    cluster = make_engine(
+        make_pipeline_topo(KGS),
+        NODES,
+        config=_healing_config(tmp_path, shm=0, every=50),
+        service_rate=1e9,
+        seed=0,
+        faults=FaultPlan.of([FaultEvent("kill", 0, at_tick=3)]),
+    )
+    try:
+        _drive_periods(cluster, batches, 1)
+        _drain(cluster)
+        cluster.finalize()
+    finally:
+        cluster.close()
+    report = cluster.recoveries[0]
+    assert report.restored_step == -1 and report.restored_cursor == 0
+    assert report.replayed_batches == 4  # admissions 1..4 re-shipped
+
+    oracle = Engine(
+        make_pipeline_topo(KGS),
+        NODES,
+        config=ExecutionConfig.typed(),
+        service_rate=1e9,
+        seed=0,
+    )
+    # Mirror the re-homed allocation, then replay the whole feed.
+    oracle.router.reset(np.asarray(cluster.router.table, dtype=np.int64))
+    for keys, values, ts in batches:
+        oracle.push_source("src", keys, values, ts)
+        oracle.tick()
+    _drain_oracle(oracle)
+    assert (
+        cluster.metrics.sink_outputs[report.restored_sink_len :]
+        == oracle.metrics.sink_outputs
+    )
+    assert _nonempty_states(cluster.store) == _nonempty_states(oracle.store)
+
+
+def test_respawn_budget_exhaustion_degrades_to_fail_node(tmp_path):
+    """A kill beyond ``max_respawns`` is reported as gave_up and the worker
+    stays dead — plain fail_node semantics, survivors keep serving."""
+    supervision = SupervisionPolicy(max_respawns=0)
+    batches = _batches(2 * TICKS_PER_PERIOD)
+    cluster = make_engine(
+        make_pipeline_topo(KGS),
+        NODES,
+        config=_healing_config(tmp_path, shm=0, supervision=supervision),
+        service_rate=1e9,
+        seed=0,
+        faults=FaultPlan.of([FaultEvent("kill", 1, at_tick=3)]),
+    )
+    try:
+        _drive_periods(cluster, batches, 2)
+        _drain(cluster)
+        cluster.finalize()
+    finally:
+        cluster.close()
+    assert [r.gave_up for r in cluster.recoveries] == [True]
+    assert 1 in cluster._dead_workers
+    assert len(cluster.metrics.sink_outputs) > 0
